@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + host-side rates).
+
+Wall-times here are CPU interpreter numbers — meaningful for relative
+comparisons and regression tracking, NOT TPU projections (those come from
+the roofline analysis). Reported per kernel: µs/call at a canonical shape
+and agreement with the oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, reps=3):
+    fn()  # compile/warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(quiet: bool = False) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.pattern_scan import find_pattern_mask
+    buf = rng.integers(0, 256, 1 << 20, np.uint8).tobytes()
+    us = _time(lambda: find_pattern_mask(buf, b"\r\n\r\n"))
+    rows.append(f"kernels,pattern_scan,1MiB,us_per_call,{us:.0f}")
+
+    from repro.kernels.adler32 import adler32
+    import zlib
+    data = rng.integers(0, 256, 1 << 20, np.uint8).tobytes()
+    us = _time(lambda: adler32(data))
+    ok = adler32(data) == (zlib.adler32(data) & 0xFFFFFFFF)
+    rows.append(f"kernels,adler32,1MiB,us_per_call,{us:.0f}")
+    rows.append(f"kernels,adler32,1MiB,matches_zlib,{int(ok)}")
+
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 512, 64), jnp.float32)
+    us = _time(lambda: flash_attention(q, k, v, causal=True))
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v, causal=True)
+        - attention_ref(q, k, v, causal=True))))
+    rows.append(f"kernels,flash_attention,b1h4s512d64,us_per_call,{us:.0f}")
+    rows.append(f"kernels,flash_attention,b1h4s512d64,max_err,{err:.2e}")
+
+    if not quiet:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Benchmark driver: one section per paper table + framework benches.
+
+Sections (CSV on stdout, ``section,...`` prefixed rows):
+  * table1   — the paper's Table 1: records/s per parser × codec ×
+               workload, with speedups (benchmarks/table1.py);
+  * pipeline — end-to-end WARC→tokens ingestion + the paper's
+               Common-Crawl hours-saved projections;
+  * kernels  — Pallas kernel micro-benches (interpret mode).
+
+Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 for pipeline).
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import table1, pipeline_bench, kernel_bench
+
+    print("section,compression,workload,parser,records_per_s,speedup")
+    for row in table1.run(quiet=True):
+        print(row.csv())
+    print()
+    for line in pipeline_bench.run(quiet=True):
+        print(line)
+    print()
+    for line in kernel_bench.run(quiet=True):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: WARC corpus → FastWARC pipeline → LM training.
+
+The paper's deployment context, fully wired: synthesize a multi-shard
+Common-Crawl-like corpus, stream it through the optimized parser +
+HTML-to-text + byte tokenizer + sequence packer, and train the
+``fastwarc_lm`` config for a few hundred steps with checkpointing and
+exact data-pipeline resume. Asserts the loss actually falls.
+
+Run:  PYTHONPATH=src python examples/train_lm_on_warc.py [--steps 300]
+      (--full trains the 100M-param config; default is the reduced one
+       so the example finishes in minutes on CPU)
+"""
+import argparse
+import os
+import tempfile
+
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.launch.train import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="train the 100M-param config instead of reduced")
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+
+    workdir = args.workdir or tempfile.mkdtemp(prefix="fastwarc_lm_")
+    shards = []
+    for i in range(4):
+        path = os.path.join(workdir, f"crawl-{i:05d}.warc.gz")
+        if not os.path.exists(path):
+            write_corpus(path, CorpusSpec(n_pages=150, seed=100 + i), "gzip")
+        shards.append(path)
+    print(f"corpus: {len(shards)} shards in {workdir}")
+
+    stats = train_lm(
+        arch="fastwarc_lm",
+        shards=shards,
+        steps=args.steps,
+        batch=args.batch,
+        seq_len=args.seq_len,
+        ckpt_dir=os.path.join(workdir, "ckpt"),
+        ckpt_every=100,
+        reduced=not args.full,
+    )
+    print(f"\ntrained {stats['steps']} steps at "
+          f"{stats['tokens_per_s']:.0f} tok/s: "
+          f"loss {stats['first_loss']:.3f} -> {stats['final_loss']:.3f}")
+    assert stats["final_loss"] < stats["first_loss"] * 0.8, \
+        "loss did not fall — training is broken"
+    print("loss fell ✓ (byte-level LM is learning the corpus)")
+
+
+if __name__ == "__main__":
+    main()

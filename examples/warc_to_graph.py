@@ -1,0 +1,40 @@
+"""WARC → web graph → GatedGCN: the paper's parser feeding the GNN stack.
+
+Extracts the host-level link graph from a (synthetic) crawl archive with
+the optimized parser, then runs a GatedGCN forward over it — the classic
+web-graph analytics use of WARC data (DESIGN.md §5).
+
+Run:  PYTHONPATH=src python examples/warc_to_graph.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import web_graph_from_warc
+from repro.data.synth import CorpusSpec, generate_warc
+from repro.models.gnn import GatedGCNConfig, forward, init_params
+
+
+def main():
+    data = generate_warc(CorpusSpec(n_pages=200, seed=21), "gzip")
+    g = web_graph_from_warc(data)
+    n = len(g["hosts"])
+    print(f"web graph: {n} hosts, {g['edge_src'].size} links")
+    for h in g["hosts"]:
+        out_deg = int((g["edge_src"] == g["hosts"].index(h)).sum())
+        print(f"  {h:24s} out-degree {out_deg}")
+
+    cfg = GatedGCNConfig("webgraph", n_layers=4, d_hidden=16, d_feat=8,
+                         n_classes=3)
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    logits = forward(params, feats,
+                     jnp.asarray(g["edge_src"]), jnp.asarray(g["edge_dst"]),
+                     cfg)
+    print(f"\nGatedGCN over the crawl graph: logits {logits.shape}, "
+          f"finite: {bool(jnp.isfinite(logits).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Architecture registry: ``--arch <id>`` configs + their shape sets.
+
+Each ``<id>.py`` defines ``SPEC: ArchSpec`` with the exact published
+config, its per-arch input-shape set, and a reduced config for CPU smoke
+tests. ``get_spec(arch_id)`` / ``all_arch_ids()`` are the public API.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Any
+
+ARCH_IDS = [
+    "qwen3_moe_235b_a22b",
+    "qwen3_moe_30b_a3b",
+    "starcoder2_3b",
+    "qwen25_32b",
+    "internlm2_1_8b",
+    "gatedgcn",
+    "dcn_v2",
+    "din",
+    "dien",
+    "autoint",
+    # the paper's own end-to-end config (WARC-pipeline-fed LM)
+    "fastwarc_lm",
+]
+
+#: canonical ``--arch`` spelling (dashes) -> module name
+_ALIAS = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # train | prefill | decode | serve | retrieval |
+    #                        full_graph | minibatch | molecule
+    params: dict = field(default_factory=dict)
+    skip_reason: str | None = None   # e.g. long_500k on full attention
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str            # lm | gnn | recsys
+    config: Any
+    reduced: Any           # smoke-test-scale config of the same family
+    shapes: tuple          # tuple[ShapeSpec, ...]
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id} has no shape {name!r}")
+
+
+def get_spec(arch_id: str) -> ArchSpec:
+    arch_id = _ALIAS.get(arch_id, arch_id)
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    module = importlib.import_module(f"repro.configs.{arch_id}")
+    return module.SPEC
+
+
+def all_arch_ids(include_paper: bool = True) -> list[str]:
+    ids = list(ARCH_IDS)
+    if not include_paper:
+        ids.remove("fastwarc_lm")
+    return ids
+
+
+# -- shared LM shape set (assigned to every LM-family arch) -----------------
+
+def lm_shapes(*, sub_quadratic: bool = False) -> tuple:
+    skip = (None if sub_quadratic else
+            "full quadratic attention at 524k tokens is infeasible by "
+            "construction; arch has no sub-quadratic variant (DESIGN.md §5)")
+    return (
+        ShapeSpec("train_4k", "train", {"seq_len": 4096, "global_batch": 256}),
+        ShapeSpec("prefill_32k", "prefill",
+                  {"seq_len": 32768, "global_batch": 32}),
+        ShapeSpec("decode_32k", "decode",
+                  {"seq_len": 32768, "global_batch": 128}),
+        ShapeSpec("long_500k", "decode",
+                  {"seq_len": 524288, "global_batch": 1},
+                  skip_reason=skip),
+    )
+
+
+def recsys_shapes() -> tuple:
+    return (
+        ShapeSpec("train_batch", "train", {"batch": 65536}),
+        ShapeSpec("serve_p99", "serve", {"batch": 512}),
+        ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+        ShapeSpec("retrieval_cand", "retrieval",
+                  {"batch": 1, "n_candidates": 1_000_000}),
+    )

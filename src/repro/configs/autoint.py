@@ -1,0 +1,21 @@
+"""AutoInt [arXiv:1810.11921]: 39 sparse fields, embed 16, 3 self-attn
+interaction layers (2 heads, d_attn 32)."""
+from repro.configs import ArchSpec, recsys_shapes
+from repro.models.recsys import DEFAULT_VOCABS_39, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="autoint", kind="autoint", embed_dim=16,
+    vocabs=tuple(DEFAULT_VOCABS_39), n_attn_layers=3, n_attn_heads=2,
+    d_attn=32,
+)
+
+REDUCED = RecsysConfig(
+    name="autoint-reduced", kind="autoint", embed_dim=8,
+    vocabs=tuple([64] * 39), n_attn_layers=2, n_attn_heads=2, d_attn=16,
+)
+
+SPEC = ArchSpec(
+    arch_id="autoint", family="recsys", config=CONFIG, reduced=REDUCED,
+    shapes=recsys_shapes(),
+    notes="field-embedding self-attention; 27.3M embedding rows",
+)

@@ -1,0 +1,22 @@
+"""DCN-v2 [arXiv:2008.13535]: 13 dense + 26 sparse fields, embed 16,
+3 full-rank cross layers, parallel deep MLP 1024-1024-512."""
+from repro.configs import ArchSpec, recsys_shapes
+from repro.models.recsys import DEFAULT_VOCABS_26, RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="dcn-v2", kind="dcn_v2", embed_dim=16, n_dense=13,
+    vocabs=tuple(DEFAULT_VOCABS_26), n_cross_layers=3,
+    mlp_dims=(1024, 1024, 512),
+)
+
+REDUCED = RecsysConfig(
+    name="dcn-v2-reduced", kind="dcn_v2", embed_dim=8, n_dense=13,
+    vocabs=tuple([64] * 26), n_cross_layers=2, mlp_dims=(32, 16),
+)
+
+SPEC = ArchSpec(
+    arch_id="dcn_v2", family="recsys", config=CONFIG, reduced=REDUCED,
+    shapes=recsys_shapes(),
+    notes="36.1M embedding rows (criteo-like profile), row-sharded over "
+          "the model axis",
+)

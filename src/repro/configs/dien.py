@@ -1,0 +1,23 @@
+"""DIEN [arXiv:1809.03672]: embed 18, seq 100, interest GRU + AUGRU 108,
+ranking MLP 200-80. [unverified tier — dims follow the paper's §4]"""
+from repro.configs import ArchSpec, recsys_shapes
+from repro.models.recsys import RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="dien", kind="dien", embed_dim=18, seq_len=100, gru_dim=108,
+    attn_mlp=(80, 40), item_vocab=10_000_000, cate_vocab=100_000,
+    n_profile_fields=8, profile_vocab=100_000,
+)
+
+REDUCED = RecsysConfig(
+    name="dien-reduced", kind="dien", embed_dim=8, seq_len=12, gru_dim=16,
+    attn_mlp=(16, 8), item_vocab=256, cate_vocab=32,
+    n_profile_fields=3, profile_vocab=64,
+)
+
+SPEC = ArchSpec(
+    arch_id="dien", family="recsys", config=CONFIG, reduced=REDUCED,
+    shapes=recsys_shapes(),
+    notes="sequential recurrence (GRU+AUGRU scan) — the only recsys arch "
+          "whose serve path is latency-bound by a scan",
+)

@@ -1,0 +1,23 @@
+"""DIN [arXiv:1706.06978]: embed 18, behavior seq 100, target attention
+MLP 80-40, ranking MLP 200-80."""
+from repro.configs import ArchSpec, recsys_shapes
+from repro.models.recsys import RecsysConfig
+
+CONFIG = RecsysConfig(
+    name="din", kind="din", embed_dim=18, seq_len=100,
+    attn_mlp=(80, 40), item_vocab=10_000_000, cate_vocab=100_000,
+    n_profile_fields=8, profile_vocab=100_000,
+)
+
+REDUCED = RecsysConfig(
+    name="din-reduced", kind="din", embed_dim=8, seq_len=12,
+    attn_mlp=(16, 8), item_vocab=256, cate_vocab=32,
+    n_profile_fields=3, profile_vocab=64,
+)
+
+SPEC = ArchSpec(
+    arch_id="din", family="recsys", config=CONFIG, reduced=REDUCED,
+    shapes=recsys_shapes(),
+    notes="target attention over [B,100] history; retrieval shape uses "
+          "the pooled-history two-tower variant (DESIGN.md §5)",
+)

@@ -1,0 +1,44 @@
+"""GatedGCN: 16L d_hidden 70, gated-edge aggregation [arXiv:2003.00982].
+
+Shape set carries its own graph dimensions (Cora / Reddit-sampled /
+ogbn-products / ZINC-style batched molecules). Per-shape feature widths
+and class counts follow the standard datasets.
+"""
+from repro.configs import ArchSpec, ShapeSpec
+from repro.models.gnn import GatedGCNConfig
+
+CONFIG = GatedGCNConfig(
+    name="gatedgcn", n_layers=16, d_hidden=70, d_feat=1433, n_classes=7,
+    # §Perf hillclimb: per-layer remat + group-4 carry saving — without
+    # them ogbn-products holds 163 GiB/device of live edge intermediates
+    remat=True, remat_group=4,
+)
+
+REDUCED = GatedGCNConfig(
+    name="gatedgcn-reduced", n_layers=3, d_hidden=16, d_feat=12, n_classes=4,
+)
+
+SPEC = ArchSpec(
+    arch_id="gatedgcn",
+    family="gnn",
+    config=CONFIG,
+    reduced=REDUCED,
+    shapes=(
+        ShapeSpec("full_graph_sm", "full_graph",
+                  {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433,
+                   "n_classes": 7}),
+        ShapeSpec("minibatch_lg", "minibatch",
+                  {"n_nodes": 232_965, "n_edges": 114_615_892,
+                   "batch_nodes": 1024, "fanouts": [15, 10],
+                   "d_feat": 602, "n_classes": 41}),
+        ShapeSpec("ogb_products", "full_graph",
+                  {"n_nodes": 2_449_029, "n_edges": 61_859_140,
+                   "d_feat": 100, "n_classes": 47}),
+        ShapeSpec("molecule", "molecule",
+                  {"n_nodes": 30, "n_edges": 64, "batch": 128,
+                   "d_feat": 28, "n_classes": 1}),
+    ),
+    notes="message passing via segment_sum over edge index (no SpMM in "
+          "JAX); minibatch_lg runs the real neighbor sampler "
+          "(repro/data/graph.py)",
+)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: the FastWARC web-archive processing
+# pipeline (repro.core.warc) and the streaming analytics pipeline that feeds
+# parsed payloads into JAX training (repro.core.pipeline).
+from . import warc  # noqa: F401

@@ -1,0 +1,39 @@
+"""WARC core: the paper's contribution (FastWARC) plus its baseline (WARCIO).
+
+Public API:
+
+>>> from repro.core.warc import FastWARCIterator, WarcRecordType
+>>> for record in FastWARCIterator("crawl.warc.gz",
+...                                record_types=WarcRecordType.response):
+...     process(record.http_payload)
+"""
+from .record import (
+    HttpHeaderMap,
+    WarcHeaderMap,
+    WarcRecord,
+    WarcRecordType,
+)
+from .fastwarc import FastWARCIterator, parse_header_block
+from .warcio_ref import BaselineRecord, WARCIOArchiveIterator
+from .writer import WarcWriter, recompress, serialize_record
+from .checksum import block_digest, verify_digest
+from . import lz4, streams, xxh32
+
+__all__ = [
+    "BaselineRecord",
+    "FastWARCIterator",
+    "HttpHeaderMap",
+    "WARCIOArchiveIterator",
+    "WarcHeaderMap",
+    "WarcRecord",
+    "WarcRecordType",
+    "WarcWriter",
+    "block_digest",
+    "lz4",
+    "parse_header_block",
+    "recompress",
+    "serialize_record",
+    "streams",
+    "verify_digest",
+    "xxh32",
+]

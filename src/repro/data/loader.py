@@ -1,0 +1,132 @@
+"""Sharded, prefetching, exactly-resumable WARC→token training loader.
+
+The host-side input pipeline of the framework (DESIGN.md §2):
+
+* **sharding** — shard files are assigned round-robin by
+  ``host_id mod n_hosts`` (multi-host data parallelism: each host feeds
+  its own slice of the global batch);
+* **prefetch** — a daemon thread parses/tokenizes/packs ahead into a
+  bounded queue, overlapping host CPU with device compute;
+* **exact resume** — the cursor (shard index, documents consumed in the
+  current shard, packer remainder) is exposed via :meth:`state` and
+  restored via :meth:`restore`; the train loop stores it in every
+  checkpoint (``repro/train/checkpoint.py`` extras).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.pipeline import iter_documents
+from .packing import SequencePacker, pad_batch
+from .tokenizer import encode_document
+
+
+class WarcTokenLoader:
+    def __init__(self, shard_paths: list[str], *, batch: int, seq_len: int,
+                 host_id: int = 0, n_hosts: int = 1, min_doc_len: int = 64,
+                 prefetch: int = 4, loop: bool = True) -> None:
+        self.all_shards = list(shard_paths)
+        self.my_shards = [p for i, p in enumerate(self.all_shards)
+                          if i % n_hosts == host_id]
+        if not self.my_shards:
+            raise ValueError("no shards assigned to this host")
+        self.batch = batch
+        self.seq_len = seq_len
+        self.min_doc_len = min_doc_len
+        self.loop = loop
+        self.prefetch = prefetch
+        self._packer = SequencePacker(seq_len)
+        self._rows: list[np.ndarray] = []   # packed, not yet emitted
+        self._shard_idx = 0
+        self._docs_consumed = 0
+        self._epoch = 0
+        self._queue: queue.Queue | None = None
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    # -- checkpointable cursor -------------------------------------------
+    def state(self) -> dict:
+        return {"shard_idx": self._shard_idx,
+                "docs_consumed": self._docs_consumed,
+                "epoch": self._epoch,
+                "packer": self._packer.state(),
+                "rows": [r.tolist() for r in self._rows]}
+
+    def restore(self, state: dict) -> None:
+        self._shard_idx = state["shard_idx"]
+        self._docs_consumed = state["docs_consumed"]
+        self._epoch = state.get("epoch", 0)
+        self._packer.restore(state["packer"])
+        self._rows = [np.asarray(r, np.int32) for r in state.get("rows", [])]
+
+    # -- synchronous batch generator --------------------------------------
+    def batches(self) -> Iterator[np.ndarray]:
+        """Yield [batch, seq_len+1] int32 arrays (row = inputs+labels).
+
+        The not-yet-emitted row backlog lives on the object (``_rows``) so
+        :meth:`state` snapshots taken between batches resume exactly.
+        """
+        while True:
+            shard = self.my_shards[self._shard_idx % len(self.my_shards)]
+            skip = self._docs_consumed
+            for n_doc, doc in enumerate(
+                    iter_documents(shard, min_length=self.min_doc_len)):
+                if n_doc < skip:
+                    continue
+                self._docs_consumed = n_doc + 1
+                self._rows.extend(self._packer.feed(encode_document(doc.text)))
+                while len(self._rows) >= self.batch:
+                    out = np.stack(self._rows[:self.batch])
+                    self._rows = self._rows[self.batch:]
+                    yield out
+            self._shard_idx += 1
+            self._docs_consumed = 0
+            if self._shard_idx % len(self.my_shards) == 0:
+                self._epoch += 1
+                if not self.loop:
+                    if self._rows:
+                        yield pad_batch(self._rows, self.batch, self.seq_len)
+                        self._rows = []
+                    return
+
+    # -- prefetching iterator ----------------------------------------------
+    def __iter__(self) -> Iterator[np.ndarray]:
+        if self.prefetch <= 0:
+            yield from self.batches()
+            return
+        self._queue = queue.Queue(maxsize=self.prefetch)
+        self._stop.clear()
+
+        def worker():
+            try:
+                for batch in self.batches():
+                    if self._stop.is_set():
+                        return
+                    self._queue.put(batch)
+            finally:
+                self._queue.put(None)
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            yield item
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._queue is not None:
+            try:  # unblock the worker if it's waiting on a full queue
+                self._queue.get_nowait()
+            except queue.Empty:
+                pass
+
+
+def split_batch(batch: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """[B, S+1] row -> (inputs [B, S], labels [B, S])."""
+    return batch[:, :-1], batch[:, 1:]

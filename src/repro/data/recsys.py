@@ -1,0 +1,42 @@
+"""Synthetic recsys batches (criteo/amazon-like) for training and serving."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.recsys import RecsysConfig
+
+
+def make_batch(cfg: RecsysConfig, batch: int, seed: int = 0) -> dict:
+    """Family-appropriate input dict + binary labels."""
+    rng = np.random.default_rng(seed)
+    out = {"labels": (rng.random(batch) < 0.25).astype(np.float32)}
+    if cfg.kind in ("dcn_v2", "autoint"):
+        out["sparse_ids"] = np.stack(
+            [rng.integers(0, v, batch) for v in cfg.vocabs],
+            axis=1).astype(np.int32)
+        if cfg.kind == "dcn_v2":
+            out["dense_feats"] = np.log1p(
+                rng.exponential(size=(batch, cfg.n_dense))).astype(np.float32)
+    else:  # din / dien
+        L = cfg.seq_len
+        lengths = rng.integers(1, L + 1, batch)
+        mask = (np.arange(L)[None, :] < lengths[:, None])
+        out["profile_ids"] = rng.integers(
+            0, cfg.profile_vocab,
+            (batch, cfg.n_profile_fields)).astype(np.int32)
+        out["hist_items"] = (rng.integers(0, cfg.item_vocab, (batch, L))
+                             * mask).astype(np.int32)
+        out["hist_cates"] = (rng.integers(0, cfg.cate_vocab, (batch, L))
+                             * mask).astype(np.int32)
+        out["hist_mask"] = mask.astype(np.float32)
+        out["target_item"] = rng.integers(0, cfg.item_vocab,
+                                          batch).astype(np.int32)
+        out["target_cate"] = rng.integers(0, cfg.cate_vocab,
+                                          batch).astype(np.int32)
+    return out
+
+
+def make_candidates(cfg: RecsysConfig, n: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    vocab = cfg.vocabs[0] if cfg.kind in ("dcn_v2", "autoint") else cfg.item_vocab
+    return rng.integers(0, vocab, n).astype(np.int32)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+The paper's speedups come from three per-byte passes (delimiter scanning,
+checksumming) plus the downstream model compute this framework feeds:
+
+* ``pattern_scan`` — multi-byte delimiter search over uint8 buffers: the
+  TPU-VPU adaptation of FastWARC's SIMD ``memchr``/``strstr`` bulk scans.
+* ``adler32``     — the rolling checksum as blocked reductions (CRC-32's
+  bit-feedback loop does not transfer to the VPU; see DESIGN.md §4).
+* ``flash_attention`` — blocked GQA attention with online softmax: the
+  training/serving hot-spot of the LM architectures this pipeline feeds.
+
+Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper), ``ref.py`` (pure-jnp oracle used by the tests).
+Kernels are TPU-targeted and validated on CPU via ``interpret=True``.
+"""

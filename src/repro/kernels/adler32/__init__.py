@@ -1,0 +1,3 @@
+from .ops import adler32
+
+__all__ = ["adler32"]

@@ -1,0 +1,26 @@
+"""Public wrapper: Adler-32 of arbitrary byte buffers via the Pallas kernel."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .adler32 import BLOCK, MOD, adler32_partials
+
+
+def adler32(data, *, block: int = BLOCK, interpret: bool = True) -> int:
+    """Adler-32 checksum (matches ``zlib.adler32``)."""
+    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
+        data, (bytes, bytearray, memoryview)) else np.asarray(data, np.uint8)
+    n = buf.size
+    if n == 0:
+        return 1
+    padded_n = ((n + block - 1) // block) * block
+    padded = np.zeros(padded_n, dtype=np.uint8)
+    padded[:n] = buf  # zero padding contributes nothing to either sum
+    s, t = adler32_partials(jnp.asarray(padded), block=block)
+    s = np.asarray(s, dtype=np.int64)
+    t = np.asarray(t, dtype=np.int64)
+    offsets = np.arange(s.size, dtype=np.int64) * block
+    a = (1 + s.sum()) % MOD
+    b = (n + ((n - offsets) * s - t).sum()) % MOD
+    return int((b << 16) | a)

@@ -1,0 +1,40 @@
+"""Oracles for the Adler-32 kernel: zlib's C implementation + pure jnp.
+
+The jnp oracle deliberately uses uint32 modular arithmetic — TPUs (and
+JAX's default x64-disabled mode) have no int64, so this is also the
+arithmetic a hardware deployment would use: 65521² = 4.293e9 just fits
+uint32, so one modulo per block keeps every intermediate in range.
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax.numpy as jnp
+
+MOD = 65521
+_BLOCK = 2048  # T_j = Σ t·b_t ≤ 2048·2047/2·255 ≈ 5.3e8 < 2³¹
+
+
+def adler32_zlib(data: bytes) -> int:
+    return zlib.adler32(data) & 0xFFFFFFFF
+
+
+def adler32_jnp(buf) -> int:
+    """Pure-jnp blocked-modular Adler-32 (buffers up to ~128 MiB)."""
+    b = jnp.asarray(buf, dtype=jnp.uint32)
+    n = b.size
+    if n == 0:
+        return 1
+    pad = (-n) % _BLOCK
+    b = jnp.pad(b, (0, pad))  # zeros contribute nothing to either sum
+    rows = b.reshape(-1, _BLOCK)
+    iota = jnp.arange(_BLOCK, dtype=jnp.uint32)
+    s = rows.sum(axis=1) % MOD                    # S_j mod M
+    t = (rows * iota).sum(axis=1) % MOD           # T_j mod M
+    offsets = jnp.arange(rows.shape[0], dtype=jnp.uint32) * _BLOCK
+    w = (jnp.uint32(n) - offsets) % MOD           # (n - o_j) mod M
+    # products < M² < 2³²: safe in uint32 with a mod after each block term
+    per_block = (w * s % MOD + (MOD - t)) % MOD   # (n-o_j)·S_j − T_j mod M
+    a = (1 + s.sum() % MOD) % MOD
+    bsum = (jnp.uint32(n % MOD) + per_block.sum() % MOD) % MOD
+    return int((int(bsum) << 16) | int(a))

@@ -1,0 +1,134 @@
+"""Pallas kernel: blocked GQA flash attention (training/serving hot-spot).
+
+TPU-blocked online-softmax attention in the FlashAttention-2 style
+[arXiv:2307.08691], restructured for the TPU grid model: the KV-block loop
+is the *innermost grid dimension* and the running max / denominator /
+accumulator live in VMEM scratch that persists across those grid steps
+(the canonical Pallas-TPU pattern — revisit the same output block, carry
+state, finalize on the last step). MXU alignment: block sizes are
+multiples of 128 on the matmul dims.
+
+GQA: ``q`` has H heads, ``k``/``v`` have Hkv ≤ H heads; the BlockSpec
+index maps query-head h to kv-head h // (H // Hkv) — grouped heads read
+the same KV block, which on hardware amortizes KV HBM reads across the
+group (the GQA bandwidth win).
+
+Causal masking: KV blocks strictly above the diagonal are skipped with
+``pl.when`` (no FLOPs, no loads in the skipped branch on hardware); the
+diagonal block is masked with broadcasted iotas.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_offset: int):
+    """Grid = (batch, q_heads, num_q_blocks, num_k_blocks); innermost = kv.
+
+    ``kv_offset = Sk - Sq`` aligns the causal diagonal when the KV side is
+    longer than the query side (decode with a cache).
+    """
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale              # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                      # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)                      # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            rows = (q_start + kv_offset
+                    + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]                                      # [bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])                          # [bq, bk]
+        corr = jnp.exp(m_prev - m_new)                           # [bq]
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    if causal:
+        # skip KV blocks entirely above the (offset) diagonal
+        @pl.when(k_start <= q_start + kv_offset + block_q - 1)
+        def _run():
+            _body()
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)  # fully-masked row guard
+        o_ref[0, 0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_bhsd(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0, "q heads must be a multiple of kv heads (GQA)"
+    assert Sq % block_q == 0 and Sk % block_k == 0, "pad seqs to block size"
+    group = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    grid = (B, H, Sq // block_q, Sk // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_offset=Sk - Sq)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

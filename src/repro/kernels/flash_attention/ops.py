@@ -1,0 +1,36 @@
+"""Public wrapper for the flash-attention kernel.
+
+Dispatch policy (used by the model layer):
+* interpret-mode Pallas on CPU for correctness work and tests;
+* on TPU (not this container) the same `pallas_call` lowers natively;
+* ``use_kernel=False`` falls back to the jnp reference (the dry-run uses
+  this path so XLA's cost model sees the attention FLOPs explicitly).
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_Q,
+    flash_attention_bhsd,
+)
+from .ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    use_kernel: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """GQA attention: q [B,H,Sq,D], k/v [B,Hkv,Sk,D] -> [B,H,Sq,D]."""
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal).astype(q.dtype)
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        # shapes in this framework are pre-padded; tiny test shapes fall back
+        return attention_ref(q, k, v, causal=causal).astype(q.dtype)
+    return flash_attention_bhsd(q, k, v, causal=causal, block_q=bq,
+                                block_k=bk, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: exact (materialized-scores) GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q [B,H,Sq,D], k/v [B,Hkv,Sk,D] -> [B,H,Sq,D], fp32 math."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    q = q.astype(jnp.float32)
+    k = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    v = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), dtype=bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,3 @@
+from .ops import find_pattern_mask, find_pattern_positions, count_matches
+
+__all__ = ["find_pattern_mask", "find_pattern_positions", "count_matches"]

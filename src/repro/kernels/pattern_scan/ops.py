@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the pattern-scan kernel."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .pattern_scan import DEFAULT_BLOCK, MAX_PATTERN, pattern_scan
+
+
+def _prepare(buf, pattern, block: int):
+    buf = np.frombuffer(bytes(buf), dtype=np.uint8) if isinstance(
+        buf, (bytes, bytearray, memoryview)) else np.asarray(buf, np.uint8)
+    pat = np.frombuffer(bytes(pattern), dtype=np.uint8) if isinstance(
+        pattern, (bytes, bytearray, memoryview)) else np.asarray(pattern, np.uint8)
+    if not 0 < pat.size <= MAX_PATTERN:
+        raise ValueError(f"pattern length must be in [1, {MAX_PATTERN}]")
+    n = buf.size
+    padded_n = max(((n + block - 1) // block) * block, block)
+    padded = np.zeros(padded_n + MAX_PATTERN, dtype=np.uint8)
+    padded[:n] = buf
+    # zero-pad never false-positives: pattern bytes are non-zero in WARC use;
+    # all-zero patterns are rejected to keep that invariant
+    if not pat.any():
+        raise ValueError("all-zero patterns are not supported")
+    pad_vec = np.zeros(MAX_PATTERN, dtype=np.uint8)
+    pad_vec[:pat.size] = pat
+    return jnp.asarray(padded), jnp.asarray(pad_vec), int(pat.size), n
+
+
+def find_pattern_mask(buf, pattern, *, block: int = DEFAULT_BLOCK,
+                      interpret: bool = True):
+    """uint8 match mask (same length as ``buf``)."""
+    padded, pat_vec, plen, n = _prepare(buf, pattern, block)
+    mask = pattern_scan(padded, pat_vec, pat_len=plen, block=block,
+                        interpret=interpret)
+    mask = np.array(mask[:n])  # own the buffer: device arrays are read-only
+    # matches that would read past the true end are padding artifacts
+    if plen > 1 and n >= plen:
+        mask[n - plen + 1:] = 0
+    elif n < plen:
+        mask[:] = 0
+    return mask
+
+
+def find_pattern_positions(buf, pattern, **kw) -> np.ndarray:
+    """Sorted match start offsets (host-side compaction of the mask)."""
+    return np.flatnonzero(find_pattern_mask(buf, pattern, **kw))
+
+
+def count_matches(buf, pattern, **kw) -> int:
+    return int(find_pattern_mask(buf, pattern, **kw).sum())

@@ -1,0 +1,69 @@
+"""Pallas kernel: multi-byte pattern scan over uint8 buffers.
+
+TPU adaptation of FastWARC's SIMD bulk scanning (DESIGN.md §4): the VPU is
+an (8, 128) vector unit, so a byte-compare sweep maps onto it directly.
+For a pattern ``p`` of length P, the match mask is
+
+    mask[i] = AND_{j<P} (buf[i+j] == p[j])
+
+computed as P shifted uint8 compares over a VMEM-resident chunk — no
+per-byte control flow, which is the whole point: the host parser's
+per-record work becomes a handful of wide vector ops.
+
+Blocking: the buffer is processed in chunks of ``block`` bytes reshaped to
+(block // 128, 128) so the lane dimension is hardware-native. Each grid
+step loads its chunk plus a (P-1)-byte halo from the padded input (the
+wrapper pads; overlapping loads are expressed with ``pl.ds`` on a full
+VMEM ref rather than overlapping BlockSpecs, which Pallas cannot express).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BLOCK = 64 * 1024  # 64 KiB chunk + halo + mask comfortably < VMEM
+MAX_PATTERN = 16
+
+
+def _scan_kernel(buf_ref, pat_ref, mask_ref, *, block: int, pat_len: int):
+    """One grid step: compare `block` positions against the pattern."""
+    i = pl.program_id(0)
+    start = i * block
+    # P shifted block loads (the halo makes the last shift in-bounds);
+    # each is a wide VPU compare — per-byte control flow never happens
+    acc = buf_ref[pl.ds(start, block)] == pat_ref[0]
+    for j in range(1, pat_len):  # unrolled: P is static
+        acc = jnp.logical_and(
+            acc, buf_ref[pl.ds(start + j, block)] == pat_ref[j])
+    mask_ref[pl.ds(start, block)] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("pat_len", "block", "interpret"))
+def pattern_scan(padded_buf: jax.Array, pattern_vec: jax.Array, *,
+                 pat_len: int, block: int = DEFAULT_BLOCK,
+                 interpret: bool = True) -> jax.Array:
+    """Match mask over ``padded_buf`` (uint8, padded to block + MAX_PATTERN).
+
+    Returns uint8 mask of length ``padded_buf.size - MAX_PATTERN``.
+    Callers use :mod:`.ops`, which handles padding and trimming.
+    """
+    n = padded_buf.size - MAX_PATTERN
+    assert n % block == 0, "wrapper must pad to a block multiple"
+    grid = (n // block,)
+    kernel = functools.partial(_scan_kernel, block=block, pat_len=pat_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        # full-array specs: the kernel slices its own (overlapping) windows
+        in_specs=[
+            pl.BlockSpec(padded_buf.shape, lambda i: (0,)),
+            pl.BlockSpec(pattern_vec.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=interpret,
+    )(padded_buf, pattern_vec)

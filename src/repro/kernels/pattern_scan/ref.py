@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the pattern-scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pattern_mask_ref(buf, pattern) -> jnp.ndarray:
+    """mask[i] = 1 iff buf[i:i+len(pattern)] == pattern (uint8 arrays)."""
+    buf = jnp.asarray(buf, dtype=jnp.uint8)
+    pattern = jnp.asarray(pattern, dtype=jnp.uint8)
+    n, p = buf.size, pattern.size
+    if n < p:
+        return jnp.zeros((max(n, 0),), dtype=jnp.uint8)
+    acc = jnp.ones((n - p + 1,), dtype=bool)
+    for j in range(p):
+        acc = acc & (buf[j:n - p + 1 + j] == pattern[j])
+    # positions whose window would run past the end can never match
+    return jnp.concatenate(
+        [acc, jnp.zeros((p - 1,), dtype=bool)]).astype(jnp.uint8)

@@ -1,0 +1,1 @@
+"""Launcher layer: mesh construction, sharding rules, dry-run, drivers."""

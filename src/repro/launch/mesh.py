@@ -1,0 +1,37 @@
+"""Production mesh definitions (TPU v5e-256 pods).
+
+Functions, not module-level constants — importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py
+forces 512 host devices, in its first two lines).
+"""
+from __future__ import annotations
+
+import jax
+
+#: hardware constants used by the roofline analysis (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~4 links usable per chip)
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+DCI_BW = 25e9                 # inter-pod (data-center) per-host share, est.
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes the global batch is sharded over."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes large weight matrices are additionally sharded over (ZeRO-3
+    style): the data-parallel extent doubles as the FSDP extent."""
+    return batch_axes(mesh)
+
+
+def n_chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size

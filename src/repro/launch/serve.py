@@ -1,0 +1,57 @@
+"""Serving driver: restore a checkpoint and serve batched requests.
+
+CLI counterpart of ``launch/train.py`` for the serving side — the same
+``ServeEngine``/``decode_step`` the dry-run lowers at 32k-cache scale.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.serve --ckpt-dir /path/ckpts \
+        --arch fastwarc_lm [--reduced] --prompt "the web " --prompt "..."
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_spec
+from repro.models import transformer as tf_mod
+from repro.serve.engine import Request, ServeEngine
+from repro.train import checkpoint as ckpt
+from repro.train.step import init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fastwarc_lm")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompt", action="append", default=[])
+    ap.add_argument("--max-new-tokens", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    spec = get_spec(args.arch)
+    cfg = spec.reduced if args.reduced else spec.config
+    state = init_train_state(
+        tf_mod.init_params(jax.random.PRNGKey(0), cfg),
+        compact_state=getattr(cfg, "compact_opt_state", False))
+    state, extras = ckpt.restore(args.ckpt_dir, state)
+    print(f"restored step {extras.get('step', '?')} from {args.ckpt_dir}")
+
+    engine = ServeEngine(cfg, state["params"], batch_size=args.batch_size,
+                         max_seq=args.max_seq, temperature=args.temperature)
+    prompts = args.prompt or ["the web archive "]
+    requests = [Request(p.encode(), max_new_tokens=args.max_new_tokens)
+                for p in prompts]
+    for r in engine.serve(requests):
+        print(f"\n>>> {r.prompt.decode()!r}\n{r.text.decode('utf-8', 'replace')}")
+    s = engine.stats
+    print(f"\n{s['tokens_generated']} tokens, "
+          f"{s['tokens_generated']/max(s['decode_s'],1e-9):.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Sharding rules: param-tree paths → PartitionSpecs, per model family.
+
+Baseline distribution scheme (hillclimbed in EXPERIMENTS.md §Perf):
+
+* **LM** — 2D weight sharding: tensor-parallel over ``model`` on the
+  head/ffn/vocab dim *and* FSDP over the data-like axes on the other dim,
+  so a 235B-param state (params bf16 + Adam m/v fp32 ≈ 2.35 TB) divides by
+  all 256/512 chips, not just the 16-way model axis. Optimizer state
+  inherits the param specs (ZeRO falls out for free).
+* **GNN** — params replicated (tiny); node/edge tensors sharded over the
+  batch axes.
+* **RecSys** — embedding tables row-sharded over ``model`` (they dominate
+  memory); interaction/MLP weights replicated; batch over data axes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import batch_axes, fsdp_axes
+
+
+def _spec_tree(mesh: Mesh, tree, rule):
+    """Map ``rule(path_str, leaf) -> PartitionSpec`` over a shape tree."""
+    def one(path, leaf):
+        spec = rule(jax.tree_util.keystr(path), leaf)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+# --------------------------------------------------------------------------
+# LM rules
+# --------------------------------------------------------------------------
+
+def lm_param_rule(mesh: Mesh, fsdp: tuple | None = None):
+    """``fsdp=()`` disables the second (ZeRO) sharding axis — used by the
+    decode path when TP-only params fit in HBM, so one-token steps stop
+    paying a full FSDP all-gather per layer (§Perf iteration: decode was
+    7000× more collective- than compute-bound with 2D-sharded weights)."""
+    fsdp = fsdp_axes(mesh) if fsdp is None else (fsdp or None)
+
+    def fit(axes, dim: int):
+        """Drop an axis set that doesn't divide ``dim`` — keeps the rules
+        valid on shrunken (elastic) meshes with non-power-of-2 extents."""
+        if axes is None or not _divisible(dim, mesh, axes):
+            return None
+        return axes
+
+    def rule(path: str, leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if "embed" in path:                      # [V, d]
+            return P(fit("model", shape[0]), fit(fsdp, shape[1]))
+        if "lm_head" in path and nd == 2:        # [d, V]
+            return P(fit(fsdp, shape[0]), fit("model", shape[1]))
+        if "layers" in path:
+            # stacked leaves: leading L axis never sharded
+            if "moe" in path:
+                if "router" in path:
+                    return P(*([None] * nd))     # [L, d, E] small, replicated
+                if nd == 4:                      # experts [L, E, d, f]
+                    return P(None, fit("model", shape[1]),
+                             fit(fsdp, shape[2]), None)
+            if ("wq" in path or "wk" in path or "wv" in path) and nd == 3:
+                return P(None, fit(fsdp, shape[1]),
+                         fit("model", shape[2]))  # [L, d, H*dh]
+            if "wo" in path and nd == 3:
+                return P(None, fit("model", shape[1]),
+                         fit(fsdp, shape[2]))     # [L, H*dh, d]
+            if ("gate" in path or "up" in path) and nd == 3:
+                return P(None, fit(fsdp, shape[1]),
+                         fit("model", shape[2]))  # [L, d, ff]
+            if "down" in path and nd == 3:
+                return P(None, fit("model", shape[1]),
+                         fit(fsdp, shape[2]))     # [L, ff, d]
+            if nd == 2 and shape[-1] > 1024:     # stacked biases [L, H*dh]
+                return P(None, fit("model", shape[1]))
+        return P(*([None] * nd))                 # norms, small biases
+
+    return rule
+
+
+def lm_state_shardings(mesh: Mesh, state_shapes) -> dict:
+    """Shardings for a full train state {params, opt{m,v,step}, ...}."""
+    rule = lm_param_rule(mesh)
+    out = {"params": _spec_tree(mesh, state_shapes["params"], rule)}
+    if "opt" in state_shapes:
+        opt = state_shapes["opt"]
+        if "m_q" in opt:  # compact (8-bit) optimizer state
+            out["opt"] = {
+                "m_q": _spec_tree(mesh, opt["m_q"], rule),
+                "m_scale": replicated(mesh, opt["m_scale"]),
+                "v": _spec_tree(mesh, opt["v"], rule),
+                "step": NamedSharding(mesh, P()),
+            }
+        else:
+            out["opt"] = {
+                "m": _spec_tree(mesh, opt["m"], rule),
+                "v": _spec_tree(mesh, opt["v"], rule),
+                "step": NamedSharding(mesh, P()),
+            }
+    if "ef_error" in state_shapes:
+        out["ef_error"] = _spec_tree(mesh, state_shapes["ef_error"], rule)
+    return out
+
+
+def lm_batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(batch_axes(mesh), None))
+
+
+def lm_cache_shardings(mesh: Mesh) -> dict:
+    """KV cache [L, B, Hkv, S, D]: batch over data axes, sequence over
+    ``model`` (FlashDecoding-style split-KV — the kv-head extent (4–8) is
+    smaller than the 16-way model axis, the sequence is not)."""
+    b = batch_axes(mesh)
+    return {
+        "k": NamedSharding(mesh, P(None, b, None, "model", None)),
+        "v": NamedSharding(mesh, P(None, b, None, "model", None)),
+        "length": NamedSharding(mesh, P()),
+    }
+
+
+# --------------------------------------------------------------------------
+# GNN rules
+# --------------------------------------------------------------------------
+
+def gnn_param_rule(mesh: Mesh):
+    def rule(path: str, leaf) -> P:
+        return P(*([None] * len(leaf.shape)))    # ~1M params: replicate
+    return rule
+
+
+def gnn_state_shardings(mesh: Mesh, state_shapes) -> dict:
+    rule = gnn_param_rule(mesh)
+    return {
+        "params": _spec_tree(mesh, state_shapes["params"], rule),
+        "opt": {
+            "m": _spec_tree(mesh, state_shapes["opt"]["m"], rule),
+            "v": _spec_tree(mesh, state_shapes["opt"]["v"], rule),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def gnn_batch_shardings(mesh: Mesh, batch_shapes) -> dict:
+    """Node/edge arrays sharded on their leading (node/edge) dim over ALL
+    mesh axes — GNN params are replicated, so the model axis is otherwise
+    idle; 256-way edge sharding cut ogbn-products' memory term 16×
+    (§Perf iteration). Leaves whose leading dim doesn't divide the full
+    extent fall back to the longest axis prefix that does (small graph-
+    level arrays like per-graph targets end up data-only or replicated)."""
+    all_axes = tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        axes = all_axes
+        while axes and not _divisible(leaf.shape[0], mesh, axes):
+            axes = axes[:-1]
+        spec = axes if axes else None
+        return NamedSharding(mesh, P(spec, *([None] * (nd - 1))))
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+# --------------------------------------------------------------------------
+# RecSys rules
+# --------------------------------------------------------------------------
+
+def recsys_param_rule(mesh: Mesh):
+    def rule(path: str, leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if ("table" in path or "tables" in path) and nd == 2 \
+                and shape[0] >= 4096:
+            return P("model", None)              # row-sharded big tables
+        return P(*([None] * nd))
+    return rule
+
+
+def recsys_state_shardings(mesh: Mesh, state_shapes) -> dict:
+    rule = recsys_param_rule(mesh)
+    return {
+        "params": _spec_tree(mesh, state_shapes["params"], rule),
+        "opt": {
+            "m": _spec_tree(mesh, state_shapes["opt"]["m"], rule),
+            "v": _spec_tree(mesh, state_shapes["opt"]["v"], rule),
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def recsys_batch_shardings(mesh: Mesh, batch_shapes) -> dict:
+    b = batch_axes(mesh)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(b, *([None] * (nd - 1))))
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*([None] * len(leaf.shape)))),
+        tree)

@@ -1,0 +1,461 @@
+"""Cell builder: (architecture × input-shape) → step fn + specs + shardings.
+
+One entry point, :func:`build_cell`, used by
+
+* the smoke tests — ``scale="reduced"`` + real (small) arrays on CPU;
+* the dry-run    — ``scale="full"`` + ShapeDtypeStructs + mesh shardings;
+* the drivers    — ``examples/`` and ``launch/train.py``.
+
+The returned ``Cell`` carries everything needed to ``jax.jit(...).lower()``
+the step for a mesh without allocating a single real parameter.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeSpec
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import cross_entropy_loss
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+from . import sharding as sh
+from .mesh import batch_axes
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step: Callable                     # step(*args)
+    args_shapes: tuple                 # pytrees of ShapeDtypeStruct
+    in_shardings: tuple | None = None
+    out_shardings: Any = None
+    make_inputs: Callable | None = None  # seed -> real args (smoke scale)
+    notes: str = ""
+
+
+def _reduced_dims(shape: ShapeSpec) -> dict:
+    """Shrink the shape params to CPU-smoke scale."""
+    p = dict(shape.params)
+    scaled = {
+        "seq_len": min(p.get("seq_len", 128), 128),
+        "global_batch": min(p.get("global_batch", 4), 4),
+        "batch": min(p.get("batch", 4), 4),
+        "n_candidates": min(p.get("n_candidates", 64), 64),
+        "n_nodes": min(p.get("n_nodes", 64), 64),
+        "n_edges": min(p.get("n_edges", 256), 256),
+        "batch_nodes": min(p.get("batch_nodes", 8), 8),
+        "fanouts": [2, 2] if "fanouts" in p else None,
+        "d_feat": min(p.get("d_feat", 12), 12),
+        "n_classes": min(p.get("n_classes", 4), 4),
+    }
+    p.update({k: v for k, v in scaled.items() if k in p})
+    return p
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh=None,
+               scale: str = "full", cfg_override=None) -> Cell:
+    shape = spec.shape(shape_name)
+    if shape.skip_reason is not None and scale == "full":
+        raise ValueError(
+            f"{spec.arch_id}/{shape_name} is skipped: {shape.skip_reason}")
+    cfg = cfg_override if cfg_override is not None else (
+        spec.config if scale == "full" else spec.reduced)
+    dims = dict(shape.params) if scale == "full" else _reduced_dims(shape)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape, cfg, dims, mesh)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape, cfg, dims, mesh, scale)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape, cfg, dims, mesh)
+    raise ValueError(spec.family)
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+def _lm_state_shapes(cfg) -> Any:
+    return jax.eval_shape(
+        lambda: init_train_state(
+            tf_mod.init_params(jax.random.PRNGKey(0), cfg),
+            compact_state=getattr(cfg, "compact_opt_state", False)))
+
+
+def _lm_cell(spec, shape, cfg, dims, mesh) -> Cell:
+    B = dims.get("global_batch", dims.get("batch", 2))
+    L = dims["seq_len"]
+
+    if shape.kind == "train":
+        compact = getattr(cfg, "compact_opt_state", False)
+        opt = AdamWConfig(total_steps=10_000, compact_state=compact)
+
+        def loss(params, batch):
+            return tf_mod.loss_fn(params, batch["tokens"], batch["labels"],
+                                  cfg)
+        step = make_train_step(
+            loss, opt, n_microbatches=getattr(cfg, "train_microbatches", 1),
+            accum_dtype=getattr(cfg, "grad_accum_dtype", "float32"))
+        state_shapes = _lm_state_shapes(cfg)
+        batch_shapes = {"tokens": S((B, L), jnp.int32),
+                        "labels": S((B, L), jnp.int32)}
+        in_sh = out_sh = None
+        if mesh is not None:
+            st_sh = sh.lm_state_shardings(mesh, state_shapes)
+            bt = sh.lm_batch_sharding(mesh)
+            in_sh = (st_sh, {"tokens": bt, "labels": bt})
+            out_sh = (st_sh, {"loss": NamedSharding(mesh, P()),
+                              "lr": NamedSharding(mesh, P()),
+                              "grad_norm": NamedSharding(mesh, P())})
+
+        def make_inputs(seed=0):
+            rng = np.random.default_rng(seed)
+            params = tf_mod.init_params(jax.random.PRNGKey(seed), cfg)
+            state = init_train_state(
+                params, compact_state=getattr(cfg, "compact_opt_state", False))
+            toks = rng.integers(0, cfg.vocab, (B, L)).astype(np.int32)
+            return (state, {"tokens": jnp.asarray(toks),
+                            "labels": jnp.asarray(toks)})
+
+        return Cell(spec.arch_id, shape.name, shape.kind, step,
+                    (state_shapes, batch_shapes), in_sh, out_sh, make_inputs)
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            logits, _ = tf_mod.forward(params, tokens, cfg)
+            return logits
+        params_shapes = tf_mod.param_shapes(cfg)
+        batch_shapes = S((B, L), jnp.int32)
+        in_sh = None
+        if mesh is not None:
+            rule = sh.lm_param_rule(mesh)
+            in_sh = (sh._spec_tree(mesh, params_shapes, rule),
+                     sh.lm_batch_sharding(mesh))
+
+        def make_inputs(seed=0):
+            rng = np.random.default_rng(seed)
+            params = tf_mod.init_params(jax.random.PRNGKey(seed), cfg)
+            return (params,
+                    jnp.asarray(rng.integers(0, cfg.vocab, (B, L)), jnp.int32))
+
+        return Cell(spec.arch_id, shape.name, shape.kind, step,
+                    (params_shapes, batch_shapes), in_sh, None, make_inputs)
+
+    # decode: one token against a seq_len KV cache
+    def step(params, cache, token):
+        return tf_mod.decode_step(params, cache, token, cfg)
+    params_shapes = tf_mod.param_shapes(cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: tf_mod.init_cache(cfg, B, L))
+    token_shapes = S((B,), jnp.int32)
+    in_sh = out_sh = None
+    if mesh is not None:
+        # decode weights: TP-only when that fits in HBM — 2D (FSDP)
+        # sharding makes every one-token step all-gather the weight
+        # shards, which dominated the baseline decode roofline
+        tp_param_bytes = 2 * cfg.param_count() / mesh.shape["model"]
+        tp_fits = tp_param_bytes < 8 * 2**30
+        rule = sh.lm_param_rule(mesh, fsdp=() if tp_fits else None)
+        p_sh = sh._spec_tree(mesh, params_shapes, rule)
+        c_sh = sh.lm_cache_shardings(mesh)
+        t_sh = NamedSharding(mesh, P(batch_axes(mesh)))
+        in_sh = (p_sh, c_sh, t_sh)
+        out_sh = (NamedSharding(mesh, P(batch_axes(mesh), "model")), c_sh)
+
+    def make_inputs(seed=0):
+        params = tf_mod.init_params(jax.random.PRNGKey(seed), cfg)
+        cache = tf_mod.init_cache(cfg, B, L, dtype=cfg.jnp_dtype)
+        token = jnp.zeros((B,), jnp.int32)
+        return (params, cache, token)
+
+    return Cell(spec.arch_id, shape.name, shape.kind, step,
+                (params_shapes, cache_shapes, token_shapes),
+                in_sh, out_sh, make_inputs)
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+
+def _gnn_cfg_for(cfg, dims):
+    import dataclasses
+    # replace, don't reconstruct: reconstruction silently drops any field
+    # not listed (remat_group went missing that way once)
+    return dataclasses.replace(
+        cfg, d_feat=dims.get("d_feat", cfg.d_feat),
+        n_classes=dims.get("n_classes", cfg.n_classes))
+
+
+def _gnn_cell(spec, shape, cfg, dims, mesh, scale="full") -> Cell:
+    from repro.data.graph import subgraph_max_edges, subgraph_max_nodes
+    cfg = _gnn_cfg_for(cfg, dims)
+    opt = AdamWConfig(total_steps=10_000, weight_decay=0.0)
+
+    if shape.kind in ("full_graph", "minibatch"):
+        if shape.kind == "full_graph":
+            # pad node/edge extents to a 512 multiple: jit input shardings
+            # require exact divisibility by the batch-axis extent (padding
+            # nodes are masked; padding edges self-loop on a padding node)
+            N_real, E_real = dims["n_nodes"], dims["n_edges"]
+            N = -(-N_real // 512) * 512 if scale == "full" else N_real
+            E = -(-E_real // 512) * 512 if scale == "full" else E_real
+            masked = N != N_real or E != E_real
+        else:
+            seeds, fanouts = dims["batch_nodes"], dims["fanouts"]
+            N = subgraph_max_nodes(seeds, fanouts)
+            E = subgraph_max_edges(seeds, fanouts)
+            N_real, E_real = N, E
+            masked = True
+
+        def loss(params, batch):
+            return gnn_mod.loss_fn(
+                params, batch["node_feats"], batch["edge_src"],
+                batch["edge_dst"], batch["labels"], cfg,
+                label_mask=batch.get("label_mask"),
+                node_mask=batch.get("node_mask"))
+        step = make_train_step(loss, opt)
+        batch_shapes = {
+            "node_feats": S((N, cfg.d_feat), jnp.float32),
+            "edge_src": S((E,), jnp.int32),
+            "edge_dst": S((E,), jnp.int32),
+            "labels": S((N,), jnp.int32),
+        }
+        if masked:
+            batch_shapes["node_mask"] = S((N,), jnp.float32)
+            batch_shapes["label_mask"] = S((N,), jnp.float32)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(
+                gnn_mod.init_params(jax.random.PRNGKey(0), cfg)))
+        in_sh = out_sh = None
+        if mesh is not None:
+            st = sh.gnn_state_shardings(mesh, state_shapes)
+            in_sh = (st, sh.gnn_batch_shardings(mesh, batch_shapes))
+            out_sh = (st, sh.replicated(
+                mesh, {"loss": S((), jnp.float32), "lr": S((), jnp.float32),
+                       "grad_norm": S((), jnp.float32)}))
+
+        def make_inputs(seed=0):
+            rng = np.random.default_rng(seed)
+            params = gnn_mod.init_params(jax.random.PRNGKey(seed), cfg)
+            src = rng.integers(0, N_real, E).astype(np.int32)
+            dst = rng.integers(0, N_real, E).astype(np.int32)
+            if E > E_real:  # padding edges self-loop on a padding node
+                pad_node = min(N_real, N - 1)
+                src[E_real:] = pad_node
+                dst[E_real:] = pad_node
+            batch = {
+                "node_feats": jnp.asarray(
+                    rng.normal(size=(N, cfg.d_feat)), jnp.float32),
+                "edge_src": jnp.asarray(src),
+                "edge_dst": jnp.asarray(dst),
+                "labels": jnp.asarray(
+                    rng.integers(0, cfg.n_classes, N), jnp.int32),
+            }
+            if masked:
+                nm = np.zeros((N,), np.float32)
+                nm[:N_real] = 1.0
+                batch["node_mask"] = jnp.asarray(nm)
+                batch["label_mask"] = jnp.asarray(nm)
+            return (init_train_state(params), batch)
+
+        return Cell(spec.arch_id, shape.name, shape.kind, step,
+                    (state_shapes, batch_shapes), in_sh, out_sh, make_inputs)
+
+    # molecule: batched small graphs, graph-level regression (MSE)
+    G = dims["batch"]
+    N = dims["n_nodes"] * G
+    E = dims["n_edges"] * G
+
+    def loss(params, batch):
+        pred = gnn_mod.forward_pooled(
+            params, batch["node_feats"], batch["edge_src"],
+            batch["edge_dst"], batch["graph_ids"], G, cfg)[:, 0]
+        return jnp.mean((pred - batch["targets"]) ** 2)
+    step = make_train_step(loss, opt)
+    batch_shapes = {
+        "node_feats": S((N, cfg.d_feat), jnp.float32),
+        "edge_src": S((E,), jnp.int32),
+        "edge_dst": S((E,), jnp.int32),
+        "graph_ids": S((N,), jnp.int32),
+        "targets": S((G,), jnp.float32),
+    }
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(
+            gnn_mod.init_params(jax.random.PRNGKey(0), cfg)))
+    in_sh = out_sh = None
+    if mesh is not None:
+        st = sh.gnn_state_shardings(mesh, state_shapes)
+        in_sh = (st, sh.gnn_batch_shardings(mesh, batch_shapes))
+        out_sh = (st, sh.replicated(
+            mesh, {"loss": S((), jnp.float32), "lr": S((), jnp.float32),
+                   "grad_norm": S((), jnp.float32)}))
+
+    def make_inputs(seed=0):
+        rng = np.random.default_rng(seed)
+        params = gnn_mod.init_params(jax.random.PRNGKey(seed), cfg)
+        n_per, e_per = dims["n_nodes"], dims["n_edges"]
+        src = (rng.integers(0, n_per, E)
+               + np.repeat(np.arange(G), e_per) * n_per)
+        dst = (rng.integers(0, n_per, E)
+               + np.repeat(np.arange(G), e_per) * n_per)
+        batch = {
+            "node_feats": jnp.asarray(
+                rng.normal(size=(N, cfg.d_feat)), jnp.float32),
+            "edge_src": jnp.asarray(src, jnp.int32),
+            "edge_dst": jnp.asarray(dst, jnp.int32),
+            "graph_ids": jnp.asarray(
+                np.repeat(np.arange(G), n_per), jnp.int32),
+            "targets": jnp.asarray(rng.normal(size=(G,)), jnp.float32),
+        }
+        return (init_train_state(params), batch)
+
+    return Cell(spec.arch_id, shape.name, shape.kind, step,
+                (state_shapes, batch_shapes), in_sh, out_sh, make_inputs)
+
+
+# --------------------------------------------------------------------------
+# RecSys cells
+# --------------------------------------------------------------------------
+
+def _recsys_forward(cfg):
+    kind = cfg.kind
+
+    def fwd(params, batch):
+        if kind == "dcn_v2":
+            return rec_mod.dcn_forward(params, batch["dense_feats"],
+                                       batch["sparse_ids"], cfg)
+        if kind == "autoint":
+            return rec_mod.autoint_forward(params, batch["sparse_ids"], cfg)
+        fn = rec_mod.din_forward if kind == "din" else rec_mod.dien_forward
+        return fn(params, batch["profile_ids"], batch["hist_items"],
+                  batch["hist_cates"], batch["hist_mask"],
+                  batch["target_item"], batch["target_cate"], cfg)
+    return fwd
+
+
+def _recsys_init(cfg):
+    return {"dcn_v2": rec_mod.dcn_init, "din": rec_mod.din_init,
+            "dien": rec_mod.dien_init,
+            "autoint": rec_mod.autoint_init}[cfg.kind]
+
+
+def _recsys_batch_shapes(cfg, B) -> dict:
+    if cfg.kind in ("dcn_v2", "autoint"):
+        shapes = {"sparse_ids": S((B, cfg.n_sparse), jnp.int32)}
+        if cfg.kind == "dcn_v2":
+            shapes["dense_feats"] = S((B, cfg.n_dense), jnp.float32)
+    else:
+        L = cfg.seq_len
+        shapes = {
+            "profile_ids": S((B, cfg.n_profile_fields), jnp.int32),
+            "hist_items": S((B, L), jnp.int32),
+            "hist_cates": S((B, L), jnp.int32),
+            "hist_mask": S((B, L), jnp.float32),
+            "target_item": S((B,), jnp.int32),
+            "target_cate": S((B,), jnp.int32),
+        }
+    return shapes
+
+
+def _recsys_cell(spec, shape, cfg, dims, mesh) -> Cell:
+    from repro.data.recsys import make_batch, make_candidates
+    fwd = _recsys_forward(cfg)
+    init = _recsys_init(cfg)
+    B = dims["batch"]
+
+    if shape.kind == "train":
+        opt = AdamWConfig(total_steps=100_000, weight_decay=0.0, lr=1e-3)
+
+        def loss(params, batch):
+            return rec_mod.bce_loss(fwd(params, batch), batch["labels"])
+        step = make_train_step(loss, opt)
+        batch_shapes = {**_recsys_batch_shapes(cfg, B),
+                        "labels": S((B,), jnp.float32)}
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(init(jax.random.PRNGKey(0), cfg)))
+        in_sh = out_sh = None
+        if mesh is not None:
+            st = sh.recsys_state_shardings(mesh, state_shapes)
+            in_sh = (st, sh.recsys_batch_shardings(mesh, batch_shapes))
+            out_sh = (st, sh.replicated(
+                mesh, {"loss": S((), jnp.float32), "lr": S((), jnp.float32),
+                       "grad_norm": S((), jnp.float32)}))
+
+        def make_inputs(seed=0):
+            params = init(jax.random.PRNGKey(seed), cfg)
+            batch = {k: jnp.asarray(v)
+                     for k, v in make_batch(cfg, B, seed).items()}
+            return (init_train_state(params), batch)
+
+        return Cell(spec.arch_id, shape.name, shape.kind, step,
+                    (state_shapes, batch_shapes), in_sh, out_sh, make_inputs)
+
+    if shape.kind == "serve":
+        def step(params, batch):
+            return jax.nn.sigmoid(fwd(params, batch))
+        batch_shapes = _recsys_batch_shapes(cfg, B)
+        params_shapes = jax.eval_shape(
+            lambda: init(jax.random.PRNGKey(0), cfg))
+        in_sh = None
+        if mesh is not None:
+            rule = sh.recsys_param_rule(mesh)
+            in_sh = (sh._spec_tree(mesh, params_shapes, rule),
+                     sh.recsys_batch_shardings(mesh, batch_shapes))
+
+        def make_inputs(seed=0):
+            params = init(jax.random.PRNGKey(seed), cfg)
+            b = make_batch(cfg, B, seed)
+            b.pop("labels")
+            return (params, {k: jnp.asarray(v) for k, v in b.items()})
+
+        return Cell(spec.arch_id, shape.name, shape.kind, step,
+                    (params_shapes, batch_shapes), in_sh, None, make_inputs)
+
+    # retrieval: 1 query vs n_candidates via the two-tower path
+    N = dims["n_candidates"]
+
+    top_k = min(100, N)
+
+    def step(params, batch, cand_ids):
+        if cfg.kind in ("dcn_v2", "autoint"):
+            uv = rec_mod.user_tower(params, cfg, batch["sparse_ids"])[0]
+        else:
+            uv = rec_mod.user_tower(params, cfg, batch["hist_items"],
+                                    batch["hist_cates"], batch["hist_mask"])[0]
+        return rec_mod.retrieval_scores(params, uv, cand_ids, cfg,
+                                        top_k=top_k)
+
+    batch_shapes = _recsys_batch_shapes(cfg, 1)
+    cand_shapes = S((N,), jnp.int32)
+    params_shapes = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    in_sh = None
+    if mesh is not None:
+        rule = sh.recsys_param_rule(mesh)
+        # the single query is replicated (B=1 cannot shard); the 10⁶
+        # candidates carry the parallelism over the batch axes
+        in_sh = (sh._spec_tree(mesh, params_shapes, rule),
+                 sh.replicated(mesh, batch_shapes),
+                 NamedSharding(mesh, P(batch_axes(mesh))))
+
+    def make_inputs(seed=0):
+        params = init(jax.random.PRNGKey(seed), cfg)
+        b = make_batch(cfg, 1, seed)
+        b.pop("labels")
+        return (params, {k: jnp.asarray(v) for k, v in b.items()},
+                jnp.asarray(make_candidates(cfg, N, seed)))
+
+    return Cell(spec.arch_id, shape.name, shape.kind, step,
+                (params_shapes, batch_shapes, cand_shapes), in_sh, None,
+                make_inputs)

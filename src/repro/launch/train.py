@@ -1,0 +1,120 @@
+"""Training driver: data pipeline → jitted train step → checkpoints.
+
+The single-host entry point (multi-host launch wraps this per host with
+``host_id``/``n_hosts`` and a shared coordinator, exactly as the loader
+and checkpoint layers expect). Wires together every substrate:
+
+* WARC ingestion pipeline (``repro.data.loader``) with exact-resume state
+  stored inside each checkpoint;
+* jitted/donated train step (``repro.launch.steps``);
+* async checkpointing every ``ckpt_every`` steps + straggler monitoring
+  with preemptive checkpoint on sustained slowdown (``repro.train.elastic``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_spec
+from repro.data.loader import WarcTokenLoader, split_batch
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import StragglerMonitor
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+from repro.models import transformer as tf_mod
+
+
+def train_lm(
+    *,
+    arch: str = "fastwarc_lm",
+    shards: list[str],
+    steps: int = 200,
+    batch: int = 8,
+    seq_len: int = 512,
+    lr: float = 3e-4,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    host_id: int = 0,
+    n_hosts: int = 1,
+    reduced: bool = False,
+    log_every: int = 10,
+) -> dict:
+    spec = get_spec(arch)
+    cfg = spec.reduced if reduced else spec.config
+    loader = WarcTokenLoader(shards, batch=batch, seq_len=seq_len,
+                             host_id=host_id, n_hosts=n_hosts)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps,
+                          warmup_steps=max(steps // 20, 5))
+
+    def loss_fn(params, batch_arrs):
+        return tf_mod.loss_fn(params, batch_arrs["tokens"],
+                              batch_arrs["labels"], cfg)
+
+    step_fn = jax.jit(make_train_step(loss_fn, opt_cfg), donate_argnums=0)
+
+    start_step = 0
+    state = init_train_state(
+        tf_mod.init_params(jax.random.PRNGKey(0), cfg))
+    if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
+        state, extras = ckpt.restore(ckpt_dir, state)
+        loader.restore(extras["loader"])
+        start_step = extras["step"]
+        print(f"resumed from step {start_step}")
+
+    saver = ckpt.AsyncCheckpointer()
+    monitor = StragglerMonitor()
+    losses = []
+    it = iter(loader)
+    t_train0 = time.perf_counter()
+    for step in range(start_step, steps):
+        t0 = time.perf_counter()
+        rows = next(it)
+        inputs, labels = split_batch(rows)
+        state, metrics = step_fn(state, {"tokens": inputs, "labels": labels})
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.perf_counter() - t0
+        slow = monitor.observe(step, dt)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  {dt*1e3:.0f} ms"
+                  + ("  [straggler]" if slow else ""))
+        want_ckpt = ckpt_dir is not None and (
+            (step + 1) % ckpt_every == 0
+            or monitor.should_checkpoint_early())
+        if want_ckpt:
+            saver.save(ckpt_dir, step + 1, state,
+                       extras={"step": step + 1, "loader": loader.state()})
+    saver.wait()
+    loader.close()
+    wall = time.perf_counter() - t_train0
+    tokens = (steps - start_step) * batch * seq_len
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan"),
+            "steps": steps, "tokens_per_s": tokens / wall,
+            "straggler_events": len(monitor.events)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fastwarc_lm")
+    ap.add_argument("--shards", nargs="+", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+    stats = train_lm(arch=args.arch, shards=args.shards, steps=args.steps,
+                     batch=args.batch, seq_len=args.seq_len, lr=args.lr,
+                     ckpt_dir=args.ckpt_dir, reduced=args.reduced)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

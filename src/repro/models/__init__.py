@@ -1,0 +1,6 @@
+"""Model zoo: pure-JAX model definitions over explicit param pytrees.
+
+No flax/haiku offline — models are (init_fn, apply_fn) pairs over plain
+dict pytrees, which also keeps sharding-rule assignment transparent
+(``repro/launch/sharding.py`` maps param paths to PartitionSpecs).
+"""

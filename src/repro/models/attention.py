@@ -1,0 +1,155 @@
+"""Attention: RoPE, chunked (flash-style) jnp attention, GQA, KV cache.
+
+Two execution paths share one math definition:
+
+* :func:`chunked_attention` — pure-JAX online-softmax attention scanned
+  over KV chunks. This is what the distributed model lowers: it never
+  materializes the [Sq, Sk] score matrix (32k-prefill would OOM), XLA's
+  cost model sees its FLOPs explicitly, and it shards cleanly under GSPMD.
+* :mod:`repro.kernels.flash_attention` — the Pallas TPU kernel with the
+  same semantics, dispatched when ``use_kernel=True`` (hot path on real
+  hardware; validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> jax.Array:
+    exponents = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponents)  # [d_head/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [B, H, S, D]; positions: [S] or [B, S]."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    if angles.ndim == 2:  # [S, D/2] -> broadcast over batch and heads
+        angles = angles[None, None]
+    else:  # [B, S, D/2]
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked online-softmax attention (jnp)
+# --------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, chunk: int = 1024,
+                      kv_offset: int | None = None,
+                      unroll: bool = False) -> jax.Array:
+    """GQA attention without the full score matrix.
+
+    q [B,H,Sq,D], k/v [B,Hkv,Sk,D] -> [B,H,Sq,D]. Scans KV in chunks of
+    ``chunk`` with running (max, denom, acc) — the flash recurrence in XLA.
+    ``kv_offset`` aligns the causal diagonal (defaults to Sk - Sq).
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    offset = Sk - Sq if kv_offset is None else kv_offset
+    scale = 1.0 / math.sqrt(D)
+
+    if Sk <= chunk:
+        return _attn_block(q, k, v, 0, causal, offset, scale, group)
+
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+
+    q32 = q.astype(jnp.float32) * scale
+
+    def step(carry, inputs):
+        m_prev, l_prev, acc_prev = carry
+        kb, vb, ci = inputs
+        kb = jnp.repeat(kb.astype(jnp.float32), group, axis=1)
+        vb = jnp.repeat(vb.astype(jnp.float32), group, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, kb)
+        k_start = ci * chunk
+        rows = (offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2))
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        valid = cols < Sk  # padding chunk guard
+        if causal:
+            valid = valid & (rows >= cols)
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc_new = acc_prev * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    # checkpoint per chunk = FlashAttention-style backward: the [·,Sq,chunk]
+    # score/probability matrices are recomputed in bwd instead of stowed
+    # across the scan (they were the largest attention residual, §Perf it.2)
+    # unroll=True removes the while-loop so XLA's static cost analysis sees
+    # every chunk's FLOPs (loop bodies are otherwise counted once) — the
+    # dry-run sets it; real training keeps the rolled loop
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0),
+        (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)),
+        unroll=True if unroll else 1)
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.astype(q.dtype)
+
+
+def _attn_block(q, k, v, k_start, causal, offset, scale, group):
+    """Single-block exact attention (small Sk fast path)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   jnp.repeat(k.astype(jnp.float32), group, axis=1))
+    if causal:
+        rows = offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        s = jnp.where(rows >= cols, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p,
+                     jnp.repeat(v.astype(jnp.float32), group, axis=1))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode path)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(n_layers: int, batch: int, n_kv_heads: int, max_seq: int,
+                  d_head: int, dtype=jnp.bfloat16) -> dict:
+    shape = (n_layers, batch, n_kv_heads, max_seq, d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_update(cache: dict, layer: int, k_new: jax.Array,
+                 v_new: jax.Array) -> dict:
+    """Insert [B, Hkv, 1, D] at the current length for ``layer``."""
+    idx = cache["length"]
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new[None].astype(cache["k"].dtype),
+        (layer, 0, 0, idx, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new[None].astype(cache["v"].dtype),
+        (layer, 0, 0, idx, 0))
+    return {**cache, "k": k, "v": v}

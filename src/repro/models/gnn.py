@@ -1,0 +1,211 @@
+"""GatedGCN [arXiv:1711.07553, benchmarked in arXiv:2003.00982] in JAX.
+
+Message passing is built on ``jax.ops.segment_sum`` over an explicit
+``(src, dst)`` edge index — JAX has no sparse SpMM beyond BCOO, so the
+gather/segment-reduce *is* the kernel (kernel_taxonomy §GNN). Layer l:
+
+    ê_ij = E_ij + ReLU(LN(A h_i + B h_j + C e_ij))          (edge update)
+    η_ij = σ(ê_ij) / (Σ_{j'→i} σ(ê_ij') + ε)                (edge gates)
+    h_i  = h_i + ReLU(LN(U h_i + Σ_{j→i} η_ij ⊙ V h_j))     (node update)
+
+LayerNorm replaces the reference BatchNorm (batch-independent, the common
+JAX choice — noted in DESIGN.md). Node/edge padding uses a validity mask
+so fixed-shape minibatches (sampled subgraphs) lower cleanly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Params,
+    dense,
+    dense_init,
+    layernorm,
+    layernorm_init,
+    mlp,
+    mlp_init,
+    shard_hint,
+)
+
+#: GNN tensors shard their node/edge dim over every mesh axis — params are
+#: replicated, so the model axis is free parallelism for message passing
+GNN_AXES = ("pod", "data", "model")
+
+
+@dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_feat: int = 1433
+    d_edge_feat: int = 0      # 0 = no input edge features
+    n_classes: int = 7
+    dtype: str = "float32"
+    remat: bool = False
+    remat_group: int = 0        # >1: save layer carries every g layers only
+    scan_unroll: bool = False   # dry-run: unroll the 16-layer scan
+
+    @property
+    def jnp_dtype(self):
+        return getattr(jnp, self.dtype)
+
+
+def _layer_init(key, d: int, dtype) -> Params:
+    ks = jax.random.split(key, 5)
+    return {
+        "A": dense_init(ks[0], d, d, dtype, bias=True),
+        "B": dense_init(ks[1], d, d, dtype, bias=True),
+        "C": dense_init(ks[2], d, d, dtype, bias=True),
+        "U": dense_init(ks[3], d, d, dtype, bias=True),
+        "V": dense_init(ks[4], d, d, dtype, bias=True),
+        "ln_h": layernorm_init(d, dtype),
+        "ln_e": layernorm_init(d, dtype),
+    }
+
+
+def _scan_layers(layer_fn, carry, layers, cfg):
+    """Layer scan with optional two-level (grouped) remat.
+
+    With ``remat_group = g``, only every g-th carry is saved; the inner g
+    layers recompute in backward. Carries are edge-sized ([E, d] ≈ 1 GiB
+    per layer shard on ogbn-products), so saving 16 of them dominated the
+    memory roofline (§Perf iteration).
+    """
+    g = cfg.remat_group
+    unroll = True if cfg.scan_unroll else 1
+    if g and g > 1 and cfg.n_layers % g == 0:
+        n_groups = cfg.n_layers // g
+        grouped = jax.tree.map(
+            lambda x: x.reshape(n_groups, g, *x.shape[1:]), layers)
+
+        inner = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+
+        @jax.checkpoint
+        def group_fn(carry, glp):
+            out, _ = jax.lax.scan(inner, carry, glp, unroll=unroll)
+            return out, None
+
+        carry, _ = jax.lax.scan(group_fn, carry, grouped)
+        return carry
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    carry, _ = jax.lax.scan(body, carry, layers, unroll=unroll)
+    return carry
+
+
+def init_params(key, cfg: GatedGCNConfig) -> Params:
+    dt = cfg.jnp_dtype
+    k_in, k_e, k_layers, k_out = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg.d_hidden, dt))(layer_keys)
+    return {
+        "encode_h": dense_init(k_in, cfg.d_feat, cfg.d_hidden, dt, bias=True),
+        "encode_e": dense_init(
+            k_e, max(cfg.d_edge_feat, 1), cfg.d_hidden, dt, bias=True),
+        "layers": layers,
+        "head": mlp_init(k_out, [cfg.d_hidden, cfg.d_hidden // 2,
+                                 cfg.n_classes], dt),
+    }
+
+
+def forward(params: Params, node_feats: jax.Array, edge_src: jax.Array,
+            edge_dst: jax.Array, cfg: GatedGCNConfig,
+            edge_feats: jax.Array | None = None,
+            node_mask: jax.Array | None = None) -> jax.Array:
+    """-> per-node class logits [N, n_classes].
+
+    node_feats [N, d_feat]; edge_src/dst [E] int32 (messages flow src->dst;
+    padding edges must point at a padding node). ``node_mask`` zeroes
+    padding nodes so they never contribute through normalization.
+    """
+    N = node_feats.shape[0]
+    h = dense(params["encode_h"], node_feats.astype(cfg.jnp_dtype))
+    if edge_feats is None:
+        edge_feats = jnp.ones((edge_src.shape[0], 1), cfg.jnp_dtype)
+    e = dense(params["encode_e"], edge_feats.astype(cfg.jnp_dtype))
+    if node_mask is not None:
+        h = h * node_mask[:, None].astype(h.dtype)
+
+    def layer_fn(carry, lp):
+        h, e = carry
+        # gather/scatter outputs default to replicated under GSPMD: hints
+        # keep edge tensors edge-sharded and node tensors node-sharded
+        # (§Perf iteration: ogb_products held 105 GiB/device without them)
+        h_src = shard_hint(h[edge_src], GNN_AXES, None)   # [E, d]
+        h_dst = shard_hint(h[edge_dst], GNN_AXES, None)
+        e_hat = dense(lp["A"], h_dst) + dense(lp["B"], h_src) \
+            + dense(lp["C"], e)
+        e_new = e + jax.nn.relu(layernorm(lp["ln_e"], e_hat))
+        gates = jax.nn.sigmoid(e_new)             # [E, d]
+        msg = gates * dense(lp["V"], h_src)
+        num = shard_hint(
+            jax.ops.segment_sum(msg, edge_dst, num_segments=N),
+            GNN_AXES, None)
+        den = shard_hint(
+            jax.ops.segment_sum(gates, edge_dst, num_segments=N),
+            GNN_AXES, None) + 1e-6
+        agg = num / den
+        h_new = h + jax.nn.relu(
+            layernorm(lp["ln_h"], dense(lp["U"], h) + agg))
+        if node_mask is not None:
+            h_new = h_new * node_mask[:, None].astype(h.dtype)
+        return (h_new, shard_hint(e_new, GNN_AXES, None)), None
+
+    h, _ = _scan_layers(layer_fn, (h, e), params["layers"], cfg)
+    return mlp(params["head"], h)
+
+
+def forward_pooled(params: Params, node_feats, edge_src, edge_dst,
+                   graph_ids: jax.Array, n_graphs: int,
+                   cfg: GatedGCNConfig, node_mask=None) -> jax.Array:
+    """Graph-level prediction (``molecule`` shape): mean-pool nodes per
+    graph via segment_sum, then the classification head."""
+    N = node_feats.shape[0]
+    h = dense(params["encode_h"], node_feats.astype(cfg.jnp_dtype))
+    e = dense(params["encode_e"],
+              jnp.ones((edge_src.shape[0], 1), cfg.jnp_dtype))
+    if node_mask is not None:
+        h = h * node_mask[:, None].astype(h.dtype)
+
+    def layer_fn(carry, lp):
+        h, e = carry
+        h_src = shard_hint(h[edge_src], GNN_AXES, None)
+        h_dst = shard_hint(h[edge_dst], GNN_AXES, None)
+        e_hat = dense(lp["A"], h_dst) + dense(lp["B"], h_src) + dense(lp["C"], e)
+        e_new = e + jax.nn.relu(layernorm(lp["ln_e"], e_hat))
+        gates = jax.nn.sigmoid(e_new)
+        num = shard_hint(
+            jax.ops.segment_sum(gates * dense(lp["V"], h_src), edge_dst,
+                                num_segments=N), GNN_AXES, None)
+        den = shard_hint(
+            jax.ops.segment_sum(gates, edge_dst, num_segments=N),
+            GNN_AXES, None) + 1e-6
+        h_new = h + jax.nn.relu(
+            layernorm(lp["ln_h"], dense(lp["U"], h) + num / den))
+        if node_mask is not None:
+            h_new = h_new * node_mask[:, None].astype(h.dtype)
+        return (h_new, shard_hint(e_new, GNN_AXES, None)), None
+
+    h, _ = _scan_layers(layer_fn, (h, e), params["layers"], cfg)
+    w = (node_mask if node_mask is not None
+         else jnp.ones((N,), h.dtype))[:, None]
+    sums = jax.ops.segment_sum(h * w, graph_ids, num_segments=n_graphs)
+    counts = jax.ops.segment_sum(w, graph_ids, num_segments=n_graphs)
+    pooled = sums / jnp.maximum(counts, 1.0)
+    return mlp(params["head"], pooled)
+
+
+def loss_fn(params: Params, node_feats, edge_src, edge_dst, labels,
+            cfg: GatedGCNConfig, label_mask=None, node_mask=None) -> jax.Array:
+    """Masked node-classification cross entropy."""
+    logits = forward(params, node_feats, edge_src, edge_dst, cfg,
+                     node_mask=node_mask).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(
+        logp, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    if label_mask is None:
+        label_mask = labels >= 0
+    w = label_mask.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)

@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: top-k routing, GShard-style grouped dispatch.
+
+Dispatch design (it matters at 128 experts × 1M tokens × 512 chips):
+
+* Tokens are split into **G groups aligned with the mesh's batch shards**
+  (GShard [arXiv:2006.16668] groups == data shards). All sorting, capacity
+  bookkeeping, and gather/scatter happen *within a group*, so under GSPMD
+  they are shard-local — no cross-shard scatter (which the partitioner can
+  only realize by replicating a [T, d] buffer on every chip; dry-run
+  finding, 153 GB/device before this formulation).
+* Within a group, assignments are argsorted by expert (the MegaBlocks
+  permutation [arXiv:2211.15841]) and packed into a dense
+  ``[G, E, C, d]`` buffer for one batched grouped GEMM — E rides the
+  ``model`` mesh axis (expert parallelism), so the dispatched buffer's
+  movement between batch- and expert-sharded layouts lowers to the
+  canonical MoE all-to-all.
+* Per-group capacity ``C = cf · Tg · k / E`` (lane-aligned); overflow
+  drops are per-group, as in GShard. Gates of kept assignments are
+  scattered alongside token ids, and the combine is a weighted
+  shard-local scatter-add from the expert-major buffer — nothing
+  assignment-major ``[A, d]`` is ever materialized (its cotangent was
+  replicated too).
+
+Load-balancing auxiliary loss: Switch-style E·Σ(f_e · p̄_e), global.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, Params, ambient_mesh_shape, shard_hint
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(jnp.float32(d_model))
+    scale_out = 1.0 / jnp.sqrt(jnp.float32(d_ff))
+    uniform = jax.random.uniform
+    return {
+        "router": {"w": uniform(kr, (d_model, n_experts), dtype,
+                                -scale_in, scale_in)},
+        "gate": uniform(kg, (n_experts, d_model, d_ff), dtype,
+                        -scale_in, scale_in),
+        "up": uniform(ku, (n_experts, d_model, d_ff), dtype,
+                      -scale_in, scale_in),
+        "down": uniform(kd, (n_experts, d_ff, d_model), dtype,
+                        -scale_out, scale_out),
+    }
+
+
+def _batch_shard_extent() -> int:
+    shape = ambient_mesh_shape()
+    g = 1
+    for axis in BATCH_AXES:
+        g *= shape.get(axis, 1)
+    return g
+
+
+def moe_apply(p: Params, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25,
+              norm_topk: bool = True,
+              groups: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: [T, d] flattened tokens -> (out [T, d], aux_loss scalar)."""
+    T, d = x.shape
+    E = p["gate"].shape[0]
+    G = _batch_shard_extent() if groups is None else groups
+    G = max(min(G, T), 1)
+    while T % G:  # tiny/odd token counts: fall back to fewer groups
+        G -= 1
+    Tg = T // G
+    A = Tg * top_k                                   # assignments per group
+    capacity = int(max(capacity_factor * A / E, top_k))
+    capacity = -(-capacity // 8) * 8                 # lane-align
+    pad_rows = 8                                     # scatter sentinel rows
+
+    xg = shard_hint(x.reshape(G, Tg, d), BATCH_AXES, None, None)
+    logits = (xg @ p["router"]["w"]).astype(jnp.float32)    # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)            # [G, Tg, k]
+    if norm_topk:  # Qwen3 normalizes the selected gates
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-group assignment permutation -----------------------------
+    flat_expert = experts.reshape(G, A)
+    flat_token = jnp.broadcast_to(
+        jnp.arange(Tg, dtype=jnp.int32)[:, None], (Tg, top_k)).reshape(A)
+    flat_token = jnp.broadcast_to(flat_token, (G, A))
+    flat_gate = gates.reshape(G, A)
+
+    order = jnp.argsort(flat_expert, axis=1)                # stable
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    sorted_token = jnp.take_along_axis(flat_token, order, axis=1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=1)
+
+    counts = jax.vmap(lambda fe: jnp.bincount(fe, length=E))(flat_expert)
+    starts = jnp.cumsum(counts, axis=1) - counts            # [G, E]
+    pos = (jnp.arange(A, dtype=jnp.int32)[None, :]
+           - jnp.take_along_axis(starts, sorted_expert, axis=1))
+    keep = pos < capacity
+
+    # ---- dispatch: shard-local scatters into [G, E, C] buffers --------
+    slot = jnp.where(keep, sorted_expert * capacity + pos, E * capacity)
+
+    def scatter_group(s, vals, fill, dtype):
+        buf = jnp.full((E * capacity + 1,), fill, dtype)
+        return buf.at[s].set(vals, mode="drop")[:E * capacity]
+
+    token_ids = jax.vmap(
+        lambda s, t: scatter_group(s, t, Tg, jnp.int32))(slot, sorted_token)
+    token_ids = shard_hint(
+        token_ids.reshape(G, E, capacity), BATCH_AXES, "model", None)
+    gates_ec = jax.vmap(
+        lambda s, g: scatter_group(s, g, 0.0, jnp.float32))(slot, sorted_gate)
+    gates_ec = shard_hint(
+        gates_ec.reshape(G, E, capacity), BATCH_AXES, "model", None)
+
+    # ---- gather tokens (shard-local), grouped GEMM ---------------------
+    x_pad = shard_hint(
+        jnp.concatenate(
+            [xg, jnp.zeros((G, pad_rows, d), x.dtype)], axis=1),
+        BATCH_AXES, None, None)                              # [G, Tg+8, d]
+    xe = jax.vmap(lambda xp, ti: xp[ti])(x_pad, token_ids)   # [G, E, C, d]
+    xe = shard_hint(xe, BATCH_AXES, "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["gate"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["up"])
+    h = shard_hint(h, BATCH_AXES, "model", None, None)       # [G, E, C, f]
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])          # [G, E, C, d]
+    ye = shard_hint(ye, BATCH_AXES, "model", None, None)
+
+    # ---- combine: weighted shard-local scatter-add ---------------------
+    weighted = ye * gates_ec[..., None].astype(ye.dtype)
+    out_pad = jax.vmap(
+        lambda ti, w: jnp.zeros((Tg + pad_rows, d), ye.dtype)
+        .at[ti.reshape(E * capacity)].add(w.reshape(E * capacity, d)))(
+        token_ids, weighted)
+    out_pad = shard_hint(out_pad, BATCH_AXES, None, None)
+    out = out_pad[:, :Tg].reshape(T, d)
+
+    # ---- Switch aux loss (global) ---------------------------------------
+    frac_tokens = counts.sum(0).astype(jnp.float32) / jnp.maximum(G * A, 1)
+    mean_probs = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return shard_hint(out, BATCH_AXES, None).astype(x.dtype), aux

@@ -1,0 +1,384 @@
+"""RecSys ranking models: DCN-v2, DIN, DIEN, AutoInt + retrieval scoring.
+
+The hot path is the sparse embedding lookup. JAX has no ``nn.EmbeddingBag``
+— it is built here from ``jnp.take`` + ``jax.ops.segment_sum`` (ragged
+bags) and masked take-sum (fixed-shape behavior sequences), per the
+kernel-taxonomy note that this is part of the system, not a stub.
+
+Sharding: tables are row-sharded over the ``model`` axis (they dominate
+memory at 10⁶–10⁹ rows); the per-field gather then lowers to the standard
+embedding all-to-all under GSPMD. MLPs are replicated.
+
+Retrieval (``retrieval_cand`` shape): one query scored against 10⁶
+candidates as a *single batched forward* — item-side tower embeds all
+candidates, user-side vector dots against them, top-k on device. For the
+target-attention models (DIN/DIEN) the retrieval stage uses sum-pooled
+history as the user vector (the papers themselves use two-tower retrieval
+in front of attention ranking; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    Params,
+    dense,
+    dense_init,
+    embed_init,
+    layernorm_init,
+    mlp,
+    mlp_init,
+)
+
+# --------------------------------------------------------------------------
+# EmbeddingBag built from take + segment_sum
+# --------------------------------------------------------------------------
+
+def embedding_bag(table: jax.Array, ids: jax.Array, offsets: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+    """Ragged bags: ids [nnz], offsets [B] (CSR-style starts) -> [B, d]."""
+    B = offsets.shape[0]
+    nnz = ids.shape[0]
+    seg = jnp.cumsum(
+        jnp.zeros(nnz, jnp.int32).at[offsets[1:]].add(1)) if B > 1 else \
+        jnp.zeros(nnz, jnp.int32)
+    vecs = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(vecs, seg, num_segments=B)
+    if mode == "mean":
+        counts = jax.ops.segment_sum(jnp.ones(nnz), seg, num_segments=B)
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out
+
+
+def masked_bag(table: jax.Array, ids: jax.Array, mask: jax.Array,
+               mode: str = "sum") -> jax.Array:
+    """Fixed-shape bags: ids [B, L], mask [B, L] -> [B, d]."""
+    vecs = jnp.take(table, ids, axis=0)               # [B, L, d]
+    w = mask.astype(vecs.dtype)[..., None]
+    out = (vecs * w).sum(axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(w.sum(axis=1), 1.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# configs
+# --------------------------------------------------------------------------
+
+#: Criteo-like per-field vocab profile: a few huge, many small (36.1M rows)
+DEFAULT_VOCABS_26 = (
+    [10_000_000] * 3 + [1_000_000] * 5 + [100_000] * 10 + [1_000] * 8
+)
+#: Avazu-like 39-field profile for AutoInt
+DEFAULT_VOCABS_39 = (
+    [5_000_000] * 4 + [500_000] * 10 + [50_000] * 15 + [1_000] * 10
+)
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                       # dcn_v2 | din | dien | autoint
+    embed_dim: int = 16
+    n_dense: int = 13
+    vocabs: tuple = tuple(DEFAULT_VOCABS_26)
+    # dcn-v2
+    n_cross_layers: int = 3
+    mlp_dims: tuple = (1024, 1024, 512)
+    # din / dien
+    seq_len: int = 100
+    scan_unroll: bool = False   # dry-run: unroll the GRU/AUGRU time scan
+    attn_mlp: tuple = (80, 40)
+    gru_dim: int = 108
+    item_vocab: int = 10_000_000
+    cate_vocab: int = 100_000
+    n_profile_fields: int = 8
+    profile_vocab: int = 100_000
+    # autoint
+    n_attn_layers: int = 3
+    n_attn_heads: int = 2
+    d_attn: int = 32
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return getattr(jnp, self.dtype)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocabs)
+
+
+# --------------------------------------------------------------------------
+# DCN-v2
+# --------------------------------------------------------------------------
+
+def dcn_init(key, cfg: RecsysConfig) -> Params:
+    dt = cfg.jnp_dtype
+    keys = jax.random.split(key, 5 + cfg.n_cross_layers)
+    tables = [embed_init(k, v, cfg.embed_dim, dt)
+              for k, v in zip(jax.random.split(keys[0], cfg.n_sparse),
+                              cfg.vocabs)]
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = [dense_init(keys[1 + i], d0, d0, dt, bias=True)
+             for i in range(cfg.n_cross_layers)]
+    deep = mlp_init(keys[-3], [d0, *cfg.mlp_dims], dt)
+    head = dense_init(keys[-2], d0 + cfg.mlp_dims[-1], 1, dt, bias=True)
+    item_tower = mlp_init(keys[-1], [cfg.embed_dim, 64, 32], dt)
+    return {"tables": tables, "cross": cross, "deep": deep, "head": head,
+            "item_tower": item_tower}
+
+
+def dcn_forward(params: Params, dense_feats: jax.Array,
+                sparse_ids: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """dense [B, 13] fp, sparse [B, 26] int -> logits [B]."""
+    embs = [jnp.take(t, sparse_ids[:, i], axis=0)
+            for i, t in enumerate(params["tables"])]
+    x0 = jnp.concatenate([dense_feats.astype(cfg.jnp_dtype), *embs], axis=-1)
+    x = x0
+    for layer in params["cross"]:                  # x_{l+1} = x0 ⊙ Wx + x
+        x = x0 * dense(layer, x) + x
+    deep = mlp(params["deep"], x0)
+    return dense(params["head"],
+                 jnp.concatenate([x, deep], axis=-1))[:, 0]
+
+
+# --------------------------------------------------------------------------
+# DIN (target attention over behavior history)
+# --------------------------------------------------------------------------
+
+def din_init(key, cfg: RecsysConfig) -> Params:
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 7)
+    d = cfg.embed_dim
+    return {
+        "item_table": embed_init(ks[0], cfg.item_vocab, d, dt),
+        "cate_table": embed_init(ks[1], cfg.cate_vocab, d, dt),
+        "profile_tables": [
+            embed_init(k, cfg.profile_vocab, d, dt)
+            for k in jax.random.split(ks[2], cfg.n_profile_fields)],
+        # attention MLP over [hist, target, hist-target, hist*target]
+        "attn": mlp_init(ks[3], [8 * d, *cfg.attn_mlp, 1], dt),
+        "mlp": mlp_init(ks[4], [(cfg.n_profile_fields + 4) * d, 200, 80, 1],
+                        dt),
+        "item_tower": mlp_init(ks[5], [2 * d, 64, 32], dt),
+    }
+
+
+def _din_embed_pair(params, item_ids, cate_ids):
+    return jnp.concatenate([
+        jnp.take(params["item_table"], item_ids, axis=0),
+        jnp.take(params["cate_table"], cate_ids, axis=0)], axis=-1)
+
+
+def din_forward(params: Params, profile_ids: jax.Array,
+                hist_items: jax.Array, hist_cates: jax.Array,
+                hist_mask: jax.Array, target_item: jax.Array,
+                target_cate: jax.Array, cfg: RecsysConfig) -> jax.Array:
+    """profile [B,P], hist [B,L], target [B] -> logits [B]."""
+    e_hist = _din_embed_pair(params, hist_items, hist_cates)  # [B, L, 2d]
+    e_tgt = _din_embed_pair(params, target_item, target_cate)  # [B, 2d]
+    tgt = jnp.broadcast_to(e_tgt[:, None, :], e_hist.shape)
+    feats = jnp.concatenate(
+        [e_hist, tgt, e_hist - tgt, e_hist * tgt], axis=-1)   # [B, L, 8d]
+    scores = mlp(params["attn"], feats)[..., 0]               # [B, L]
+    scores = jnp.where(hist_mask > 0, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1) * (hist_mask.sum(-1, keepdims=True) > 0)
+    pooled = jnp.einsum("bl,bld->bd", w, e_hist)              # [B, 2d]
+    prof = [jnp.take(t, profile_ids[:, i], axis=0)
+            for i, t in enumerate(params["profile_tables"])]
+    x = jnp.concatenate([*prof, pooled, e_tgt], axis=-1)
+    return mlp(params["mlp"], x)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# DIEN (interest extractor GRU + AUGRU)
+# --------------------------------------------------------------------------
+
+def _gru_init(key, d_in: int, d_h: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    s_in = 1.0 / jnp.sqrt(jnp.float32(d_in))
+    s_h = 1.0 / jnp.sqrt(jnp.float32(d_h))
+    return {
+        "wx": jax.random.uniform(k1, (d_in, 3 * d_h), dtype, -s_in, s_in),
+        "wh": jax.random.uniform(k2, (d_h, 3 * d_h), dtype, -s_h, s_h),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def gru_scan(p: Params, xs: jax.Array, h0: jax.Array,
+             att: jax.Array | None = None,
+             unroll: bool = False) -> tuple[jax.Array, jax.Array]:
+    """xs [B, L, d_in] -> (hs [B, L, d_h], h_last). If ``att`` [B, L] is
+    given, runs AUGRU: the update gate is scaled by the attention score."""
+    d_h = h0.shape[-1]
+    wx, wh, b = p["wx"], p["wh"], p["b"]
+
+    def step(h, inp):
+        if att is None:
+            x = inp
+            a = None
+        else:
+            x, a = inp
+        gx = x @ wx + b
+        gh = h @ wh
+        xr, xz, xn = jnp.split(gx, 3, axis=-1)
+        hr, hz, hn = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)
+        n = jnp.tanh(xn + r * hn)
+        if a is not None:
+            z = z * a[:, None]                    # AUGRU: attentional update
+        h_new = (1 - z) * h + z * n
+        return h_new, h_new
+
+    xs_t = xs.transpose(1, 0, 2)                  # [L, B, d]
+    inputs = xs_t if att is None else (xs_t, att.transpose(1, 0))
+    h_last, hs = jax.lax.scan(step, h0, inputs,
+                              unroll=True if unroll else 1)
+    return hs.transpose(1, 0, 2), h_last
+
+
+def dien_init(key, cfg: RecsysConfig) -> Params:
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    return {
+        "item_table": embed_init(ks[0], cfg.item_vocab, d, dt),
+        "cate_table": embed_init(ks[1], cfg.cate_vocab, d, dt),
+        "profile_tables": [
+            embed_init(k, cfg.profile_vocab, d, dt)
+            for k in jax.random.split(ks[2], cfg.n_profile_fields)],
+        "gru1": _gru_init(ks[3], 2 * d, cfg.gru_dim, dt),
+        "augru": _gru_init(ks[4], cfg.gru_dim, cfg.gru_dim, dt),
+        "attn": mlp_init(ks[5], [cfg.gru_dim + 2 * d, *cfg.attn_mlp, 1], dt),
+        "mlp": mlp_init(
+            ks[6],
+            [cfg.n_profile_fields * d + cfg.gru_dim + 2 * d, 200, 80, 1], dt),
+        "item_tower": mlp_init(ks[7], [2 * d, 64, 32], dt),
+    }
+
+
+def dien_forward(params: Params, profile_ids, hist_items, hist_cates,
+                 hist_mask, target_item, target_cate,
+                 cfg: RecsysConfig) -> jax.Array:
+    B = hist_items.shape[0]
+    e_hist = _din_embed_pair(params, hist_items, hist_cates)   # [B, L, 2d]
+    e_tgt = _din_embed_pair(params, target_item, target_cate)  # [B, 2d]
+    h0 = jnp.zeros((B, cfg.gru_dim), cfg.jnp_dtype)
+    interest, _ = gru_scan(params["gru1"], e_hist, h0,
+                           unroll=cfg.scan_unroll)           # [B, L, g]
+    tgt = jnp.broadcast_to(e_tgt[:, None, :],
+                           (*interest.shape[:2], e_tgt.shape[-1]))
+    scores = mlp(params["attn"],
+                 jnp.concatenate([interest, tgt], -1))[..., 0]  # [B, L]
+    scores = jnp.where(hist_mask > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1) * (hist_mask.sum(-1, keepdims=True) > 0)
+    _, final = gru_scan(params["augru"], interest, h0, att=att,
+                        unroll=cfg.scan_unroll)
+    prof = [jnp.take(t, profile_ids[:, i], axis=0)
+            for i, t in enumerate(params["profile_tables"])]
+    x = jnp.concatenate([*prof, final, e_tgt], axis=-1)
+    return mlp(params["mlp"], x)[:, 0]
+
+
+# --------------------------------------------------------------------------
+# AutoInt
+# --------------------------------------------------------------------------
+
+def autoint_init(key, cfg: RecsysConfig) -> Params:
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    tables = [embed_init(k, v, cfg.embed_dim, dt)
+              for k, v in zip(jax.random.split(ks[0], cfg.n_sparse),
+                              cfg.vocabs)]
+    layers = []
+    d_in = cfg.embed_dim
+    for k in jax.random.split(ks[1], cfg.n_attn_layers):
+        kq, kk, kv, kr = jax.random.split(k, 4)
+        layers.append({
+            "wq": dense_init(kq, d_in, cfg.d_attn, dt),
+            "wk": dense_init(kk, d_in, cfg.d_attn, dt),
+            "wv": dense_init(kv, d_in, cfg.d_attn, dt),
+            "wres": dense_init(kr, d_in, cfg.d_attn, dt),
+        })
+        d_in = cfg.d_attn
+    head = dense_init(ks[2], cfg.n_sparse * d_in, 1, dt, bias=True)
+    item_tower = mlp_init(ks[3], [cfg.embed_dim, 64, 32], dt)
+    return {"tables": tables, "layers": layers, "head": head,
+            "item_tower": item_tower}
+
+
+def autoint_forward(params: Params, sparse_ids: jax.Array,
+                    cfg: RecsysConfig) -> jax.Array:
+    """sparse [B, F] -> logits [B]; F field embeddings interact via MHSA."""
+    x = jnp.stack([jnp.take(t, sparse_ids[:, i], axis=0)
+                   for i, t in enumerate(params["tables"])], axis=1)  # [B,F,d]
+    H = cfg.n_attn_heads
+    for lp in params["layers"]:
+        q, k, v = dense(lp["wq"], x), dense(lp["wk"], x), dense(lp["wv"], x)
+        B, F, D = q.shape
+        dh = D // H
+        qh = q.reshape(B, F, H, dh).transpose(0, 2, 1, 3)
+        kh = k.reshape(B, F, H, dh).transpose(0, 2, 1, 3)
+        vh = v.reshape(B, F, H, dh).transpose(0, 2, 1, 3)
+        s = jnp.einsum("bhfd,bhgd->bhfg", qh, kh) / jnp.sqrt(jnp.float32(dh))
+        p = jax.nn.softmax(s.astype(jnp.float32), -1).astype(x.dtype)
+        o = jnp.einsum("bhfg,bhgd->bhfd", p, vh)
+        o = o.transpose(0, 2, 1, 3).reshape(B, F, D)
+        x = jax.nn.relu(o + dense(lp["wres"], x))
+    return dense(params["head"], x.reshape(x.shape[0], -1))[:, 0]
+
+
+# --------------------------------------------------------------------------
+# shared: loss + retrieval scoring
+# --------------------------------------------------------------------------
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def retrieval_scores(params: Params, user_vec: jax.Array,
+                     cand_ids: jax.Array, cfg: RecsysConfig,
+                     top_k: int = 100) -> tuple[jax.Array, jax.Array]:
+    """Score 1 query against N candidates with one batched matmul.
+
+    ``user_vec`` [d_tower]; candidates embedded via the first/item table +
+    item tower -> [N, d_tower]; returns (top_scores, top_ids).
+    """
+    table = params["tables"][0] if "tables" in params else params["item_table"]
+    cand = jnp.take(table, cand_ids, axis=0)          # [N, d]
+    if "item_table" in params:  # din/dien: concat cate-0 embedding
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(params["cate_table"][0],
+                                    cand.shape)], axis=-1)
+    cand_vec = mlp(params["item_tower"], cand)        # [N, d_tower]
+    scores = cand_vec @ user_vec                      # [N]
+    return jax.lax.top_k(scores, top_k)
+
+
+def user_tower(params: Params, cfg: RecsysConfig, *args) -> jax.Array:
+    """Cheap user vector for retrieval: pooled embeddings -> item_tower dim."""
+    if "tables" in params:  # dcn/autoint: mean of field embeddings
+        sparse_ids = args[0]
+        embs = jnp.stack([jnp.take(t, sparse_ids[:, i], axis=0)
+                          for i, t in enumerate(params["tables"])], axis=1)
+        pooled = embs.mean(axis=1)
+        if pooled.shape[-1] != params["item_tower"][0]["w"].shape[0]:
+            pooled = jnp.pad(
+                pooled,
+                ((0, 0),
+                 (0, params["item_tower"][0]["w"].shape[0] - pooled.shape[-1])))
+    else:  # din/dien: sum-pooled history pair embedding
+        hist_items, hist_cates, hist_mask = args
+        e = _din_embed_pair(params, hist_items, hist_cates)
+        pooled = (e * hist_mask[..., None]).sum(1) / jnp.maximum(
+            hist_mask.sum(-1, keepdims=True), 1.0)
+    return mlp(params["item_tower"], pooled)

@@ -1,0 +1,341 @@
+"""Decoder-only transformer LM: dense + MoE variants, GQA + RoPE.
+
+Layers are *stacked* (every layer-param leaf has a leading ``n_layers``
+axis) and applied with ``jax.lax.scan``, so the lowered HLO is
+depth-independent — a 94-layer MoE compiles as fast as a 2-layer one,
+which the 70-cell dry-run matrix depends on. Remat (``jax.checkpoint``)
+wraps the scanned body for training.
+
+Three entry points per config:
+  * :func:`forward`      — logits for teacher forcing ([B,S] tokens)
+  * :func:`loss_fn`      — next-token CE (+ MoE aux loss)
+  * :func:`decode_step`  — one-token serve step against a KV cache
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .attention import apply_rope, chunked_attention
+from .common import (
+    BATCH_AXES,
+    Params,
+    cross_entropy_loss,
+    dense,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    shard_hint,
+    swiglu,
+    swiglu_init,
+)
+from .moe import moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe_experts: int = 0           # 0 = dense FFN
+    moe_top_k: int = 0
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    dtype: str = "float32"
+    remat: bool = True
+    attn_chunk: int = 1024
+    attn_unroll: bool = False    # dry-run: unroll the KV-chunk scan
+    layers_unroll: bool = False  # dry-run delta compiles: unroll layer scan
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.001
+    train_microbatches: int = 1  # grad-accumulation splits of global batch
+    compact_opt_state: bool = False  # int8/bf16 Adam state (8-bit-optimizer)
+    grad_accum_dtype: str = "float32"  # microbatch grad accumulator dtype
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    @property
+    def jnp_dtype(self):
+        return getattr(jnp, self.dtype)
+
+    def scaled(self, **kw) -> "TransformerConfig":
+        return replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (no allocation)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh \
+            + self.n_heads * dh * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * dh
+        if self.is_moe:
+            ffn = d * self.moe_experts \
+                + 3 * self.moe_experts * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k of E experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        dh = self.d_head
+        attn = d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh \
+            + self.n_heads * dh * d
+        ffn_active = d * self.moe_experts + 3 * self.moe_top_k * d * self.d_ff
+        per_layer = attn + ffn_active + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: TransformerConfig) -> Params:
+    dt = cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+    d, dh = cfg.d_model, cfg.d_head
+    p: Params = {
+        "ln1": rmsnorm_init(d, dt),
+        "ln2": rmsnorm_init(d, dt),
+        "wq": dense_init(keys[0], d, cfg.n_heads * dh, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(keys[1], d, cfg.n_kv_heads * dh, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(keys[2], d, cfg.n_kv_heads * dh, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(keys[3], cfg.n_heads * dh, d, dt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(keys[4], d, cfg.d_ff, cfg.moe_experts, dt)
+    else:
+        p["mlp"] = swiglu_init(keys[4], d, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Params:
+    dt = cfg.jnp_dtype
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": embed_init(k_embed, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,  # stacked: every leaf has leading [n_layers]
+        "ln_f": rmsnorm_init(cfg.d_model, dt),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab, dt),
+    }
+
+
+def param_shapes(cfg: TransformerConfig) -> Params:
+    """Shape/dtype tree without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _attention_block(lp: Params, x: jax.Array, cfg: TransformerConfig,
+                     positions: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    h = rmsnorm(lp["ln1"], x)
+    q = dense(lp["wq"], h).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = dense(lp["wk"], h).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = dense(lp["wv"], h).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    o = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                          unroll=cfg.attn_unroll)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    return x + dense(lp["wo"], o)
+
+
+def _ffn_block(lp: Params, x: jax.Array, cfg: TransformerConfig) -> tuple:
+    h = rmsnorm(lp["ln2"], x)
+    if cfg.is_moe:
+        B, S, d = h.shape
+        y, aux = moe_apply(lp["moe"], h.reshape(B * S, d),
+                           top_k=cfg.moe_top_k,
+                           capacity_factor=cfg.capacity_factor)
+        return x + y.reshape(B, S, d), aux
+    return x + swiglu(lp["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(params: Params, tokens: jax.Array,
+                   cfg: TransformerConfig) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (final hidden [B, S, d], aux_loss)."""
+    B, S = tokens.shape
+    x = shard_hint(params["embed"][tokens], BATCH_AXES, None, None)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def layer_fn(carry, lp):
+        x, aux = carry
+        x = _attention_block(lp, x, cfg, positions)
+        x, aux_l = _ffn_block(lp, x, cfg)
+        return (x, aux + aux_l), None
+
+    body = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"],
+                               unroll=True if cfg.layers_unroll else 1)
+    return rmsnorm(params["ln_f"], x), aux / cfg.n_layers
+
+
+def forward(params: Params, tokens: jax.Array,
+            cfg: TransformerConfig) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg)
+    return dense(params["lm_head"], x), aux
+
+
+def fused_ce_loss(head: Params, x: jax.Array, labels: jax.Array,
+                  chunk_s: int = 512) -> jax.Array:
+    """Fused lm_head + cross entropy, chunked over the sequence dim.
+
+    Never materializes [B, S, V] logits: each scan step projects one
+    [B, chunk, d] slice, reduces it to (logsumexp, label-logit) pairs, and
+    remat recomputes the chunk's logits in backward. At 1M tokens × 152k
+    vocab the unfused loss held ~12 GiB/device of fp32 logits + iota +
+    transposes (§Perf iteration 1); chunking bounds it by S/chunk_s.
+    Chunking rides the (unsharded) S dim, so slices stay shard-aligned.
+    """
+    B, S, d = x.shape
+    chunk_s = min(chunk_s, S)
+    while S % chunk_s:
+        chunk_s //= 2
+    n_chunks = S // chunk_s
+    xc = x.reshape(B, n_chunks, chunk_s, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, chunk_s).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(args):
+        xs, ls = args                                   # [B,c,d], [B,c]
+        logits = dense(head, xs).astype(jnp.float32)    # [B, c, V]
+        logits = shard_hint(logits, BATCH_AXES, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)         # [B, c]
+        vocab_iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        mask = ls != -1
+        safe = jnp.where(mask, ls, 0)
+        label_logit = jnp.sum(
+            jnp.where(vocab_iota == safe[..., None], logits, 0.0), axis=-1)
+        nll = jnp.where(mask, lse - label_logit, 0.0)
+        return nll.sum(), mask.sum()
+
+    def step(carry, args):
+        nll_sum, count = carry
+        s, c = chunk_nll(args)
+        return (nll_sum + s, count + c), None
+
+    (nll_sum, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc))
+    return nll_sum / jnp.maximum(count, 1)
+
+
+def loss_fn(params: Params, tokens: jax.Array, labels: jax.Array,
+            cfg: TransformerConfig) -> jax.Array:
+    x, aux = forward_hidden(params, tokens, cfg)
+    return fused_ce_loss(params["lm_head"], x, labels) \
+        + cfg.aux_loss_weight * aux
+
+
+# --------------------------------------------------------------------------
+# decode (serve path)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None) -> dict:
+    dt = dtype or cfg.jnp_dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params: Params, cache: dict, token: jax.Array,
+                cfg: TransformerConfig) -> tuple[jax.Array, dict]:
+    """One decode step: token [B] -> (logits [B, V], updated cache).
+
+    Attends over the full cache buffer with a length mask (no dynamic
+    shapes), inserting the new KV at ``cache['length']``.
+    """
+    B = token.shape[0]
+    S_max = cache["k"].shape[3]
+    idx = cache["length"]
+    x = params["embed"][token][:, None, :]            # [B, 1, d]
+    pos = jnp.full((1,), idx, jnp.int32)
+
+    def layer_fn(x, inputs):
+        lp, kc, vc = inputs                            # kc/vc [B,Hkv,S,D]
+        h = rmsnorm(lp["ln1"], x)
+        q = dense(lp["wq"], h).reshape(B, 1, cfg.n_heads, cfg.d_head)
+        k = dense(lp["wk"], h).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        v = dense(lp["wv"], h).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        q = apply_rope(q.transpose(0, 2, 1, 3), pos, cfg.rope_theta)
+        k = apply_rope(k.transpose(0, 2, 1, 3), pos, cfg.rope_theta)
+        v = v.transpose(0, 2, 1, 3)
+        # insert at `idx` via a one-hot masked merge, NOT dynamic_update_slice:
+        # DUS at a dynamic index of the model-axis-sharded S dim forces GSPMD
+        # to all-gather the whole cache every step (2 GiB/chip/token on the
+        # 32k shapes — §Perf iteration 3); the mask is shard-local.
+        cache_spec = (BATCH_AXES, None, "model", None)  # [B, Hkv, S, D]
+        onehot = (jnp.arange(S_max, dtype=jnp.int32) == idx)
+        onehot = onehot[None, None, :, None]
+        kc = shard_hint(jnp.where(onehot, k.astype(kc.dtype), kc), *cache_spec)
+        vc = shard_hint(jnp.where(onehot, v.astype(vc.dtype), vc), *cache_spec)
+        # masked full-buffer attention: scores [B, H, 1, S_max]. Hints pin
+        # the sequence dim to the model axis through the fp32 upcast +
+        # GQA repeat — without them GSPMD all-gathered the whole cache
+        # every step (48 GiB/chip at 32k; §Perf iteration B3).
+        group = cfg.n_heads // cfg.n_kv_heads
+        # keep the cache in its storage dtype end-to-end: fp32 accumulation
+        # happens inside the dots (preferred_element_type), never as a
+        # materialized cache copy — the upcast version stacked a fp32
+        # [L, B, Hkv, S, D] buffer (4 GiB/chip at 32k × 64L, §Perf B4)
+        kk = shard_hint(jnp.repeat(kc, group, axis=1),
+                        BATCH_AXES, None, "model", None)
+        vv = shard_hint(jnp.repeat(vc, group, axis=1),
+                        BATCH_AXES, None, "model", None)
+        s = jax.lax.dot_general(
+            q.astype(kk.dtype), kk,
+            (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)       # [B, H, 1, S]
+        s = s / jnp.sqrt(jnp.float32(cfg.d_head))
+        valid = jnp.arange(S_max)[None, None, None, :] <= idx
+        s = shard_hint(jnp.where(valid, s, -1e30),
+                       BATCH_AXES, None, None, "model")
+        p = jax.nn.softmax(s, axis=-1)
+        o = jax.lax.dot_general(
+            p.astype(vv.dtype), vv,
+            (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.n_heads * cfg.d_head)
+        x = x + dense(lp["wo"], o)
+        # FFN (dense or MoE)
+        h2 = rmsnorm(lp["ln2"], x)
+        if cfg.is_moe:
+            y, _ = moe_apply(lp["moe"], h2.reshape(B, cfg.d_model),
+                             top_k=cfg.moe_top_k,
+                             capacity_factor=max(cfg.capacity_factor, 2.0))
+            x = x + y.reshape(B, 1, cfg.d_model)
+        else:
+            x = x + swiglu(lp["mlp"], h2)
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        layer_fn, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=True if cfg.layers_unroll else 1)
+    x = rmsnorm(params["ln_f"], x)
+    logits = dense(params["lm_head"], x)[:, 0]
+    new_cache = {"k": k_new, "v": v_new, "length": idx + 1}
+    return logits, new_cache

@@ -1,0 +1,173 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+**Per-partition semantics**: under SPMD partitioning, both
+``cost_analysis()`` and the HLO tensor shapes are *per-chip* quantities,
+so each term divides by a single chip's capability:
+
+    compute    = flops_pp      / 197e12 bf16 FLOP/s
+    memory     = bytes_pp      / 819e9  B/s HBM
+    collective = coll_bytes_pp / 50e9   B/s ICI link
+
+**Loop correction**: XLA's static cost analysis counts a while-loop body
+*once* regardless of trip count. Inner scans (attention KV chunks, GRU
+time steps, GNN layers) are therefore unrolled in the dry-run lowering;
+the LM layer scan (up to 94 layers — unrolling would blow up compile
+time) is corrected by the *delta method*: compile the same cell at
+n_layers=1 and n_layers=2; the difference is exactly one layer's
+(flops, bytes, collectives), so
+
+    total(L) = cell(1) + (L - 1) · (cell(2) - cell(1)).
+
+Collective bytes are NOT in cost_analysis — they are parsed from the HLO
+text: result-tensor bytes summed over every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (sync or -start async
+form), the standard per-chip traffic approximation.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+#: one HLO instruction line: results before `=`, op name after
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype, 4)
+    if dims.strip():
+        for d in dims.split(","):
+            size *= int(d)
+    return size
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind result bytes (per chip) over the module."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # async -done re-lists the -start result
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        results, op = m.groups()
+        for dtype, dims in _SHAPE_RE.findall(results):
+            if dtype in _DTYPE_BYTES:
+                out[op] += _tensor_bytes(dtype, dims)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class RawCounts:
+    """Per-partition counters from one compiled executable."""
+    flops: float
+    bytes_accessed: float
+    coll: dict[str, float]
+
+    def __sub__(self, other: "RawCounts") -> "RawCounts":
+        return RawCounts(
+            self.flops - other.flops,
+            self.bytes_accessed - other.bytes_accessed,
+            {k: self.coll.get(k, 0) - other.coll.get(k, 0)
+             for k in self.coll})
+
+    def scaled_add(self, other: "RawCounts", factor: float) -> "RawCounts":
+        return RawCounts(
+            self.flops + factor * other.flops,
+            self.bytes_accessed + factor * other.bytes_accessed,
+            {k: self.coll.get(k, 0) + factor * other.coll.get(k, 0)
+             for k in self.coll})
+
+
+def raw_counts(compiled) -> RawCounts:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return RawCounts(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        coll=collective_bytes(compiled.as_text()),
+    )
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_pp: float            # per-partition (per chip)
+    bytes_pp: float
+    coll_bytes_pp: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0   # global analytic 6·N_active·D
+    useful_ratio: float = 0.0  # model_flops / (flops_pp × chips)
+    coll_breakdown: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def terms_from_counts(rc: RawCounts, *, arch: str, shape: str,
+                      mesh_name: str, chips: int,
+                      model_flops: float = 0.0) -> RooflineTerms:
+    compute_s = rc.flops / PEAK_FLOPS_BF16
+    memory_s = rc.bytes_accessed / HBM_BW
+    collective_s = rc.coll.get("total", 0.0) / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    global_flops = rc.flops * chips
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_pp=rc.flops, bytes_pp=rc.bytes_accessed,
+        coll_bytes_pp=rc.coll.get("total", 0.0),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        coll_breakdown={k: v for k, v in rc.coll.items() if k != "total"},
+    )
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float = 0.0) -> RooflineTerms:
+    """Single-executable analysis (callers with loops use the delta path)."""
+    return terms_from_counts(
+        raw_counts(compiled), arch=arch, shape=shape, mesh_name=mesh_name,
+        chips=chips, model_flops=model_flops)
+
+
+def model_flops_lm(cfg, batch: int, seq: int, *, training: bool) -> float:
+    """MODEL_FLOPS = 6·N_active·D training / 2·N_active·D forward."""
+    mult = 6 if training else 2
+    return mult * cfg.active_param_count() * batch * seq
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    return 2 * cfg.active_param_count() * batch
+
+
+def fraction_of_roofline(terms: RooflineTerms) -> float:
+    """dominant / (sum of terms): 1.0 ⇒ perfect overlap would hide the
+    non-dominant phases entirely; low values ⇒ balanced (bad) profiles."""
+    total = terms.compute_s + terms.memory_s + terms.collective_s
+    if total == 0:
+        return 0.0
+    return max(terms.compute_s, terms.memory_s, terms.collective_s) / total

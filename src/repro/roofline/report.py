@@ -1,0 +1,95 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [results.json]
+Emits markdown to stdout; the EXPERIMENTS.md sections are pasted from it.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.mesh import HBM_BYTES
+
+
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    return f"{n/2**30:.2f}"
+
+
+def _fmt_s(x) -> str:
+    if x >= 0.1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}µ"
+
+
+def dryrun_table(records: list[dict]) -> str:
+    out = ["| arch | shape | mesh | status | compile s | per-dev GiB | fits |",
+           "|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP (see DESIGN.md §5) | - | - | - |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"ERROR | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r.get('compile_s', 0) + r.get('delta_compile_s', 0):.0f} | "
+            f"{_fmt_bytes(r.get('per_device_bytes'))} | "
+            f"{'✓' if r.get('fits_hbm') else '✗ OVER'} |")
+    return "\n".join(out)
+
+
+def roofline_table(records: list[dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| frac | useful | bottleneck note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        note = _bottleneck_note(rf)
+        useful = f"{rf['useful_ratio']:.2f}" if rf["model_flops"] else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rf['compute_s'])} | "
+            f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant']} | {rf['fraction_dominant']:.2f} | {useful} | "
+            f"{note} |")
+    return "\n".join(out)
+
+
+def _bottleneck_note(rf: dict) -> str:
+    dom = rf["dominant"]
+    br = rf.get("coll_breakdown") or {}
+    if dom == "collective":
+        top = max(br, key=br.get) if br else "?"
+        return (f"{top} dominates ({br.get(top, 0)/2**30:.1f} GiB/chip); "
+                "reshard or overlap it")
+    if dom == "memory":
+        return "HBM-traffic bound; increase fusion/arithmetic intensity"
+    return "compute bound — at roofline when overlapped"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_results.json"
+    with open(path) as f:
+        records = json.load(f)
+    ok = [r for r in records if r.get("status") == "ok"]
+    sk = [r for r in records if r.get("status") == "skipped"]
+    err = [r for r in records if r.get("status") == "error"]
+    print(f"## Dry-run matrix ({len(ok)} ok / {len(sk)} skipped / "
+          f"{len(err)} errors)\n")
+    print(dryrun_table(records))
+    print("\n## Roofline (single-pod 16x16, per-chip terms)\n")
+    print(roofline_table(records, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(records, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Elastic scaling + fault tolerance for multi-host training.
+
+At thousands of chips, node loss is routine; the framework's contract is:
+
+1. **Detection** — :class:`Heartbeat` tracks per-host liveness (in a real
+   deployment each host's agent pings; here failures are injected by the
+   chaos tests and the launcher).
+2. **Shrink** — :func:`shrunken_mesh` rebuilds the largest valid mesh from
+   the surviving device set, keeping the ``model`` axis intact (model
+   shards are not re-partitionable without resharding every weight) and
+   shrinking the ``data``/``pod`` axes, so the job continues at reduced
+   global batch.
+3. **Resume** — restore the last committed checkpoint with shardings for
+   the *new* mesh (``checkpoint.restore(..., shardings=new)``), rescale
+   the data loader's shard assignment, continue. Exactly-once data
+   semantics come from the iterator cursor stored in the checkpoint.
+4. **Stragglers** — :class:`StragglerMonitor` EMA-tracks step times; a
+   step exceeding ``threshold ×`` EMA marks the host suspect. Mitigation
+   at the launcher level: deprioritize its data shard (backup-task style,
+   the MapReduce trick) and trigger preemptive checkpointing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+class HostFailure(RuntimeError):
+    def __init__(self, host_ids: list[int]):
+        super().__init__(f"hosts failed: {host_ids}")
+        self.host_ids = host_ids
+
+
+class Heartbeat:
+    """Liveness registry; a host is dead after ``timeout`` s of silence."""
+
+    def __init__(self, n_hosts: int, timeout: float = 60.0,
+                 clock=time.monotonic) -> None:
+        self.timeout = timeout
+        self._clock = clock
+        now = clock()
+        self._last_seen = {h: now for h in range(n_hosts)}
+
+    def ping(self, host: int) -> None:
+        self._last_seen[host] = self._clock()
+
+    def dead_hosts(self) -> list[int]:
+        now = self._clock()
+        return [h for h, t in self._last_seen.items()
+                if now - t > self.timeout]
+
+    def check(self) -> None:
+        dead = self.dead_hosts()
+        if dead:
+            raise HostFailure(dead)
+
+
+def shrunken_mesh(devices: np.ndarray, axis_names: tuple[str, ...],
+                  lost_device_ids: set[int]) -> jax.sharding.Mesh:
+    """Largest valid mesh over surviving devices.
+
+    The trailing (``model``) axis extent is preserved; the leading
+    data-like axes shrink to use ⌊survivors / model⌋ × model devices.
+    Survivors beyond the largest full hyper-row go idle (standby pool).
+    """
+    flat = devices.reshape(-1)
+    survivors = [d for d in flat if d.id not in lost_device_ids]
+    model = devices.shape[-1]
+    usable_rows = len(survivors) // model
+    if usable_rows == 0:
+        raise RuntimeError("not enough devices for one model replica")
+    chosen = np.array(survivors[:usable_rows * model]).reshape(
+        usable_rows, model)
+    if len(axis_names) == 2:
+        return jax.sharding.Mesh(chosen, axis_names)
+    # multi-pod (pod, data, model): fold rows back into (pod, data)
+    pod = devices.shape[0]
+    rows_per_pod = max(usable_rows // pod, 1)
+    pods = min(pod, usable_rows // rows_per_pod)
+    chosen = chosen[:pods * rows_per_pod * 1].reshape(
+        pods, rows_per_pod, model)
+    return jax.sharding.Mesh(chosen, axis_names)
+
+
+@dataclass
+class StragglerMonitor:
+    """EMA step-time tracker with slowdown flagging."""
+
+    threshold: float = 2.0
+    alpha: float = 0.1
+    ema: float | None = None
+    slow_steps: int = field(default=0)
+    events: list = field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True when the step was a straggler."""
+        if self.ema is None:
+            self.ema = seconds
+            return False
+        slow = seconds > self.threshold * self.ema
+        if slow:
+            self.slow_steps += 1
+            self.events.append((step, seconds, self.ema))
+            # slow steps do not poison the EMA (one bad host would
+            # otherwise ratchet the baseline up)
+        else:
+            self.ema = self.alpha * seconds + (1 - self.alpha) * self.ema
+        return slow
+
+    def should_checkpoint_early(self, consecutive: int = 3) -> bool:
+        if len(self.events) < consecutive:
+            return False
+        recent = self.events[-consecutive:]
+        return recent[-1][0] - recent[0][0] == consecutive - 1
+
+
+def rescale_batch_for_mesh(global_batch: int, old_rows: int,
+                           new_rows: int) -> int:
+    """Keep per-replica batch constant when the data extent shrinks."""
+    per_row = global_batch // old_rows
+    return per_row * new_rows

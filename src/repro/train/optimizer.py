@@ -1,0 +1,141 @@
+"""AdamW + global-norm clipping + schedules, from scratch (no optax offline).
+
+State layout mirrors the param tree (m, v as like-shaped trees) so the
+same sharding rules apply to optimizer state as to params — ZeRO-style
+distribution falls out of passing the param PartitionSpecs for m/v.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"       # cosine | constant | linear
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    #: compact optimizer state (8-bit-optimizer style [arXiv:2110.02861],
+    #: adapted): momentum as int8 with per-row fp32 scales, second moment
+    #: as bf16 — 12 B/param of Adam state become ~3.1 B/param. This is
+    #: what lets the 235B config's train state fit a v5e-256 (§Perf).
+    compact_state: bool = False
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Warmup + (cosine | linear | constant) decay, jit-friendly."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(math.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.ones_like(frac)
+    return cfg.lr * warm * decay
+
+
+def init_state(params: Any, compact: bool = False) -> dict:
+    if not compact:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+    return {
+        "m_q": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.int8), params),
+        "m_scale": jax.tree.map(
+            lambda p: jnp.zeros(p.shape[:-1] or (1,), jnp.float32), params),
+        "v": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _m_dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    s = scale if q.ndim == scale.ndim else scale[..., None]
+    return q.astype(jnp.float32) * s
+
+
+def _m_quant(m: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(m), axis=-1)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(m / scale[..., None]), -127, 127).astype(jnp.int8)
+    if scale.ndim == 0:  # 1-D params: keep the scale rank-1 ((1,) leaves)
+        scale = scale.reshape(1)
+    return q, scale
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: dict,
+                  cfg: AdamWConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    compact = "m_q" in state
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    if compact:
+        flat_mq = treedef.flatten_up_to(state["m_q"])
+        flat_ms = treedef.flatten_up_to(state["m_scale"])
+        flat_m = [_m_dequant(q, s) for q, s in zip(flat_mq, flat_ms)]
+    else:
+        flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    if compact:
+        quantized = [_m_quant(o[1]) for o in out]
+        new_state = {
+            "m_q": treedef.unflatten([q for q, _ in quantized]),
+            "m_scale": treedef.unflatten([s for _, s in quantized]),
+            "v": treedef.unflatten([o[2].astype(jnp.bfloat16) for o in out]),
+            "step": step,
+        }
+    else:
+        new_state = {"m": treedef.unflatten([o[1] for o in out]),
+                     "v": treedef.unflatten([o[2] for o in out]),
+                     "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,86 @@
+"""Generic train step: grad → clip → AdamW, with microbatch accumulation.
+
+``make_train_step`` closes over a family-specific ``loss_fn(params, batch)``
+and returns a pure function suitable for ``jax.jit`` under a mesh.
+Microbatching (``n_microbatches > 1``) accumulates grads with a
+``lax.scan`` over leading-dim splits of the batch — bounding activation
+memory for the 1M-token global batches while XLA overlaps the per-
+microbatch backward with the gradient all-reduce of the previous one.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .grad_compress import ef_compress_tree
+from .optimizer import AdamWConfig, apply_updates, init_state
+
+
+def init_train_state(params: Any, use_grad_compression: bool = False,
+                     compact_state: bool = False) -> dict:
+    state = {"params": params, "opt": init_state(params, compact_state)}
+    if use_grad_compression:
+        from .grad_compress import init_error_state
+        state["ef_error"] = init_error_state(params)
+    return state
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    opt_cfg: AdamWConfig,
+    *,
+    n_microbatches: int = 1,
+    use_grad_compression: bool = False,
+    accum_dtype: str = "float32",
+) -> Callable[[dict, Any], tuple[dict, dict]]:
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``batch`` is a pytree whose leaves have a leading global-batch dim
+    divisible by ``n_microbatches``.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: dict, batch: Any) -> tuple[dict, dict]:
+        params = state["params"]
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_microbatches,
+                                    x.shape[0] // n_microbatches,
+                                    *x.shape[1:]), batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(
+                            lambda a, b: a + b.astype(a.dtype), g_acc, g)), None
+
+            # bf16 accumulation halves the accumulator's residency; with
+            # ≤16 same-magnitude microbatch grads the rounding error is
+            # ~1e-3 relative — the 235B config opts in (§Perf)
+            acc_dt = getattr(jnp, accum_dtype)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+
+        new_state = dict(state)
+        if use_grad_compression:
+            grads, new_err = ef_compress_tree(grads, state["ef_error"])
+            new_state["ef_error"] = new_err
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, {"loss": loss, **opt_metrics}
+
+    return step

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests: reduced config, one real step on CPU.
+
+Every (arch × shape) cell from the assignment runs here at reduced scale —
+same step-building code path the dry-run lowers at full scale — asserting
+output shapes and the absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_ids, get_spec
+from repro.launch.steps import build_cell
+
+_CELLS = []
+for arch_id in all_arch_ids():
+    spec = get_spec(arch_id)
+    for shape in spec.shapes:
+        if shape.skip_reason is None:
+            _CELLS.append((arch_id, shape.name))
+
+
+def _no_nans(tree) -> bool:
+    return not any(
+        jnp.isnan(x).any() for x in jax.tree.leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch_id,shape_name", _CELLS,
+                         ids=[f"{a}-{s}" for a, s in _CELLS])
+def test_cell_smoke(arch_id, shape_name):
+    spec = get_spec(arch_id)
+    cell = build_cell(spec, shape_name, scale="reduced")
+    args = cell.make_inputs(seed=0)
+    # structural agreement between smoke inputs and the lowering specs
+    spec_leaves = jax.tree.leaves(cell.args_shapes)
+    arg_leaves = jax.tree.leaves(args)
+    assert len(spec_leaves) == len(arg_leaves)
+    out = cell.step(*args)
+    assert _no_nans(out)
+
+    if cell.kind in ("train", "full_graph", "minibatch", "molecule"):
+        state, metrics = out
+        assert jnp.isfinite(metrics["loss"])
+        assert int(state["opt"]["step"]) == 1
+        # a second step must also be finite (params actually moved)
+        out2 = cell.step(state, args[1])
+        assert jnp.isfinite(out2[1]["loss"])
+    elif cell.kind == "prefill":
+        logits = out
+        assert logits.ndim == 3
+    elif cell.kind == "decode":
+        logits, cache = out
+        assert logits.ndim == 2
+        assert int(cache["length"]) == 1
+    elif cell.kind == "serve":
+        probs = out
+        assert probs.ndim == 1
+        assert ((probs >= 0) & (probs <= 1)).all()
+    elif cell.kind == "retrieval":
+        scores, ids = out
+        assert scores.shape == (min(100, scores.shape[0]),)
+        assert (np.diff(np.asarray(scores)) <= 1e-6).all()  # sorted
+
+
+def test_skipped_cells_are_documented():
+    """Every skipped cell must carry a reason (DESIGN.md §5 contract)."""
+    n_skipped = 0
+    for arch_id in all_arch_ids(include_paper=False):
+        spec = get_spec(arch_id)
+        for shape in spec.shapes:
+            if shape.skip_reason is not None:
+                n_skipped += 1
+                assert "attention" in shape.skip_reason
+                assert spec.family == "lm"
+    assert n_skipped == 5  # long_500k × 5 full-attention LM archs
+
+
+def test_all_archs_registered():
+    ids = all_arch_ids(include_paper=False)
+    assert len(ids) == 10
+    total_cells = sum(len(get_spec(a).shapes) for a in ids)
+    assert total_cells == 40  # the full assignment matrix
+
+
+def test_lm_param_counts_match_names():
+    """Analytic param totals are within tolerance of the published sizes."""
+    expected = {
+        "qwen3_moe_235b_a22b": 235e9,
+        "qwen3_moe_30b_a3b": 30e9,
+        # starcoder2 uses a plain 2-matrix MLP; the framework-wide SwiGLU
+        # substitution (configs/starcoder2_3b.py docstring) adds the gate
+        # matrix: 3B -> ~4.3B. Expectation reflects the documented config.
+        "starcoder2_3b": 4.3e9,
+        "qwen25_32b": 32e9,
+        "internlm2_1_8b": 1.8e9,
+    }
+    for arch_id, target in expected.items():
+        cfg = get_spec(arch_id).config
+        got = cfg.param_count()
+        assert 0.8 * target < got < 1.35 * target, \
+            f"{arch_id}: {got/1e9:.2f}B vs {target/1e9:.0f}B"

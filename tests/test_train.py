@@ -1,0 +1,186 @@
+"""Training substrate tests: optimizer, steps, checkpoints, elasticity."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import (
+    Heartbeat,
+    HostFailure,
+    StragglerMonitor,
+    rescale_batch_for_mesh,
+)
+from repro.train.grad_compress import (
+    dequantize,
+    ef_compress_tree,
+    init_error_state,
+    quantize,
+)
+from repro.train.optimizer import (
+    AdamWConfig,
+    apply_updates,
+    clip_by_global_norm,
+    init_state,
+    lr_at,
+)
+from repro.train.step import init_train_state, make_train_step
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array([1.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=300, schedule="constant")
+    step = make_train_step(lambda p, b: sum(
+        jnp.sum(x ** 2) for x in jax.tree.leaves(p)), cfg)
+    state = init_train_state(params)
+    for _ in range(300):
+        state, metrics = step(state, None)
+    assert float(metrics["loss"]) < 1e-4
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule="cosine", min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+    assert float(lr_at(cfg, jnp.asarray(55))) < 1.0
+
+
+def test_grad_clip():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    clipped_norm = float(jnp.linalg.norm(clipped["a"]))
+    assert clipped_norm == pytest.approx(1.0, rel=1e-5)
+
+
+def test_microbatch_equals_full_batch():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      schedule="constant")
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+    p0 = {"w": jnp.ones((4,))}
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+             "y": jnp.ones((8,), jnp.float32)}
+    s1, _ = make_train_step(loss, cfg)(init_train_state(p0), batch)
+    s4, _ = make_train_step(loss, cfg, n_microbatches=4)(
+        init_train_state(p0), batch)
+    np.testing.assert_allclose(np.asarray(s1["params"]["w"]),
+                               np.asarray(s4["params"]["w"]), rtol=2e-5)
+
+
+# -- gradient compression ----------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=500), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quantize_bounded_error(n, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n,)),
+                    jnp.float32)
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-7  # half-ULP of the int8 grid
+
+
+def test_error_feedback_conservation():
+    """EF invariant: emitted + residual == k·g exactly — no gradient signal
+    is ever lost, however small relative to the int8 grid."""
+    g = {"a": jnp.asarray([1e-4, 5e-3, -2.0, 1.0], jnp.float32)}
+    err = init_error_state(g)
+    total = jnp.zeros((4,))
+    k = 64
+    for _ in range(k):
+        deq, err = ef_compress_tree(g, err)
+        total = total + deq["a"]
+    np.testing.assert_allclose(np.asarray(total + err["a"]),
+                               np.asarray(g["a"]) * k, rtol=1e-5, atol=1e-5)
+    # and the residual itself stays bounded by one quantization step
+    assert float(jnp.abs(err["a"]).max()) < 2.0 / 127
+
+
+# -- checkpointing -----------------------------------------------------------
+
+def test_checkpoint_roundtrip_rotation_extras(tmp_path):
+    d = str(tmp_path)
+    tree = {"p": jnp.arange(10, dtype=jnp.float32),
+            "nested": {"q": jnp.ones((3, 3), jnp.bfloat16)}}
+    for s in range(1, 6):
+        ckpt.save(d, s, tree, extras={"cursor": s * 10}, keep=3)
+    assert ckpt.latest_step(d) == 5
+    assert len([x for x in os.listdir(d) if x.startswith("step_")]) == 3
+    restored, extras = ckpt.restore(d, tree)
+    np.testing.assert_array_equal(np.asarray(restored["p"]),
+                                  np.arange(10, dtype=np.float32))
+    assert restored["nested"]["q"].dtype == jnp.bfloat16
+    assert extras["cursor"] == 50
+
+
+def test_checkpoint_async(tmp_path):
+    d = str(tmp_path)
+    saver = ckpt.AsyncCheckpointer()
+    tree = {"w": jnp.full((1000,), 3.0)}
+    saver.save(d, 1, tree, extras={"k": 1})
+    saver.wait()
+    restored, extras = ckpt.restore(d, tree)
+    assert float(restored["w"][0]) == 3.0 and extras["k"] == 1
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": jnp.ones((2,))}
+    ckpt.save(d, 1, tree)
+    # fake a torn write
+    os.makedirs(os.path.join(d, "step_000000099"), exist_ok=True)
+    assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_tree_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"w": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"different": jnp.ones((2,))})
+
+
+# -- elasticity / stragglers --------------------------------------------------
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    assert not mon.observe(0, 1.0)
+    assert not mon.observe(1, 1.1)
+    assert mon.observe(2, 3.0)
+    assert mon.ema < 1.2  # slow step must not poison the EMA
+    for s in (3, 4, 5):
+        mon.observe(s, 3.0)
+    assert mon.should_checkpoint_early()
+
+
+def test_heartbeat_failure():
+    hb = Heartbeat(3, timeout=1e9)
+    hb.check()  # all alive
+    hb._last_seen[1] = -1e12
+    with pytest.raises(HostFailure) as e:
+        hb.check()
+    assert e.value.host_ids == [1]
+
+
+def test_rescale_batch():
+    assert rescale_batch_for_mesh(256, 16, 12) == 192
+
+
+def test_elastic_reshard_on_restore(tmp_path):
+    """Checkpoint saved once, restored with a *different* sharding target
+    (the shrunken-mesh resume path, single-device edition)."""
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save(d, 7, tree, extras={"loader": {"shard_idx": 3}})
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    restored, extras = ckpt.restore(
+        d, tree, shardings={"w": sharding})
+    assert extras["loader"]["shard_idx"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(16, dtype=np.float32).reshape(4, 4))

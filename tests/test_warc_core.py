@@ -1,0 +1,299 @@
+"""Unit + property tests for the WARC core (the paper's system layer)."""
+import io
+import zlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.warc import (
+    FastWARCIterator,
+    WARCIOArchiveIterator,
+    WarcRecordType,
+    WarcWriter,
+    block_digest,
+    lz4,
+    serialize_record,
+    verify_digest,
+)
+from repro.core.warc.record import WarcHeaderMap, scan_header_field
+from repro.core.warc.streams import GZipStream, LZ4Stream
+from repro.core.warc.xxh32 import xxh32
+from repro.data.synth import CorpusSpec, generate_warc, records_in
+
+
+# --------------------------------------------------------------------------
+# xxh32 / LZ4 codec
+# --------------------------------------------------------------------------
+
+def test_xxh32_published_vectors():
+    assert xxh32(b"") == 0x02CC5D05
+    assert xxh32(b"abc") == 0x32D153FF
+    assert xxh32(b"abc", seed=1) != xxh32(b"abc")
+
+
+@given(st.binary(max_size=4096))
+@settings(max_examples=200, deadline=None)
+def test_lz4_block_roundtrip(data):
+    assert lz4.decompress_block(lz4.compress_block(data)) == data
+
+
+@given(st.binary(max_size=2048), st.integers(min_value=4, max_value=7))
+@settings(max_examples=100, deadline=None)
+def test_lz4_frame_roundtrip(data, bcode):
+    frame = lz4.compress_frame(data, block_size_code=bcode, content_checksum=True)
+    out, end = lz4.decompress_frame(frame)
+    assert out == data
+    assert end == len(frame)
+    assert lz4.skip_frame(frame) == len(frame)
+
+
+@given(st.lists(st.binary(min_size=0, max_size=512), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_lz4_concatenated_frames(chunks):
+    stream = b"".join(lz4.compress_frame(c) for c in chunks)
+    pos, out = 0, []
+    while pos < len(stream):
+        data, pos = lz4.decompress_frame(stream, pos)
+        out.append(data)
+    assert out == chunks
+
+
+def test_lz4_highly_repetitive_overlap_matches():
+    # overlapping match copies (offset < length) exercise period replication
+    for pattern in (b"a", b"ab", b"abc", b"abcd", b"abcde"):
+        data = pattern * 10_000
+        assert lz4.decompress_block(lz4.compress_block(data)) == data
+
+
+def test_lz4_multi_block_frame():
+    data = bytes(range(256)) * 2048  # 512 KiB > 64 KiB blocks
+    frame = lz4.compress_frame(data, block_size_code=4)
+    out, _ = lz4.decompress_frame(frame)
+    assert out == data
+
+
+def test_lz4_corruption_detected():
+    frame = bytearray(lz4.compress_frame(b"hello world" * 100,
+                                         content_checksum=True))
+    frame[-2] ^= 0xFF  # flip a checksum byte
+    with pytest.raises(lz4.LZ4Error):
+        lz4.decompress_frame(bytes(frame))
+
+
+def test_lz4_bad_magic():
+    with pytest.raises(lz4.LZ4Error):
+        lz4.parse_frame_header(b"\x00" * 16)
+
+
+# --------------------------------------------------------------------------
+# streams
+# --------------------------------------------------------------------------
+
+def test_gzip_member_stream_boundaries():
+    members = [b"first member", b"second " * 1000, b"third"]
+    buf = io.BytesIO()
+    for m in members:
+        co = zlib.compressobj(6, zlib.DEFLATED, 31)
+        buf.write(co.compress(m) + co.flush())
+    buf.seek(0)
+    stream = GZipStream(buf)
+    out = []
+    while True:
+        m = stream.next_member()
+        if m is None:
+            break
+        out.append(m)
+    assert out == members
+    assert stream.tell_compressed() == len(buf.getvalue())
+
+
+def test_gzip_member_stream_large_member_spanning_reads():
+    big = bytes(i % 251 for i in range(3 << 20))  # ~3 MiB, low compressibility
+    co = zlib.compressobj(1, zlib.DEFLATED, 31)
+    comp = co.compress(big) + co.flush()
+    stream = GZipStream(io.BytesIO(comp + comp))
+    assert stream.next_member() == big
+    assert stream.next_member() == big
+    assert stream.next_member() is None
+
+
+def test_lz4_stream_lazy_member_skip():
+    frames = [lz4.compress_frame(b"AAAA" * 100), lz4.compress_frame(b"BBBB" * 100)]
+    stream = LZ4Stream(io.BytesIO(b"".join(frames)))
+    lazy = stream.begin_member()
+    assert lazy.prefix.startswith(b"AAAA")
+    lazy.skip()
+    assert stream.next_member() == b"BBBB" * 100
+    assert stream.begin_member() is None
+
+
+# --------------------------------------------------------------------------
+# header / record parsing
+# --------------------------------------------------------------------------
+
+def test_scan_header_field_line_anchored():
+    block = (b"WARC/1.1\r\nX-Fake: has WARC-Type: inside\r\n"
+             b"WARC-Type: response\r\nContent-Length: 7")
+    assert scan_header_field(block, b"WARC-Type:") == b"response"
+    assert scan_header_field(block, b"Content-Length:") == b"7"
+    assert scan_header_field(block, b"Missing:") is None
+
+
+def test_header_map_case_insensitive_ordered():
+    h = WarcHeaderMap()
+    h.append(b"Content-Type", b"text/html")
+    h.append(b"X-One", b"1")
+    assert h["content-type"] == "text/html"
+    assert h.get("CONTENT-TYPE") == "text/html"
+    assert list(h) == [("Content-Type", "text/html"), ("X-One", "1")]
+    h.set("content-type", "text/plain")
+    assert h["Content-Type"] == "text/plain"
+    assert len(h) == 2
+
+
+def test_folded_header_continuation():
+    raw = serialize_record("metadata", b"x", {"Long-Header": "part1"})
+    raw = raw.replace(b"Long-Header: part1",
+                      b"Long-Header: part1\r\n\tpart2")
+    recs = list(FastWARCIterator(raw))
+    assert recs[0].headers.get("Long-Header") == "part1 part2"
+
+
+def test_record_lazy_headers_and_fields():
+    raw = serialize_record("response", b"HTTP/1.1 200 OK\r\n\r\nbody",
+                           {"WARC-Target-URI": "https://x.test/",
+                            "Content-Type": "application/http; msgtype=response"})
+    rec = next(iter(FastWARCIterator(raw)))
+    # field access without map construction
+    assert rec.header_bytes(b"WARC-Target-URI:") == b"https://x.test/"
+    assert rec._headers is None
+    # full map on demand
+    assert rec.target_uri == "https://x.test/"
+    assert rec._headers is not None
+    assert rec.http_headers.status_code == 200
+    assert rec.http_payload == b"body"
+
+
+@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", "zstd"])
+def test_iterator_all_compressions(compression):
+    spec = CorpusSpec(n_pages=40, seed=7)
+    data = generate_warc(spec, compression)
+    recs = list(FastWARCIterator(data, parse_http=True, verify_digests=True))
+    assert len(recs) == records_in(spec)
+    responses = [r for r in recs if r.record_type == WarcRecordType.response]
+    assert len(responses) == 40
+    for r in responses:
+        assert r.verified_block_digest is True
+        assert r.verified_payload_digest is True
+        assert r.http_headers is not None and r.http_headers.status_code == 200
+        assert r.http_payload.startswith(b"<!doctype html>")
+
+
+@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", "zstd"])
+def test_record_type_filtering_and_skip_count(compression):
+    spec = CorpusSpec(n_pages=25, seed=3)
+    data = generate_warc(spec, compression)
+    it = FastWARCIterator(data, parse_http=False,
+                          record_types=WarcRecordType.response)
+    got = list(it)
+    assert len(got) == 25
+    assert it.records_skipped == records_in(spec) - 25
+    it2 = FastWARCIterator(
+        data, parse_http=False,
+        record_types=WarcRecordType.response | WarcRecordType.request)
+    assert len(list(it2)) == 50
+
+
+def test_func_filter():
+    spec = CorpusSpec(n_pages=30, seed=5)
+    data = generate_warc(spec, "none")
+    it = FastWARCIterator(
+        data, record_types=WarcRecordType.response,
+        func_filter=lambda r: (r.header_bytes(b"WARC-Target-URI:") or b"")
+        .startswith(b"https://example.com"))
+    for rec in it:
+        assert rec.target_uri.startswith("https://example.com")
+
+
+def test_baseline_fast_equivalence():
+    """The two parsers must agree on every record's identity and content."""
+    spec = CorpusSpec(n_pages=30, seed=11)
+    for compression in ("none", "gzip"):
+        data = generate_warc(spec, compression)
+        fast = list(FastWARCIterator(data, parse_http=True))
+        base = list(WARCIOArchiveIterator(data, parse_http=True))
+        assert len(fast) == len(base)
+        for f, b in zip(fast, base):
+            assert f.record_type.name == b.rec_type
+            assert f.record_id == b.record_id
+            assert f.content == b.content
+            if b.http_headers is not None:
+                assert f.http_headers is not None
+                assert f.http_headers.status_code == b.http_headers.status_code
+
+
+def test_truncated_archive_stops_cleanly():
+    data = generate_warc(CorpusSpec(n_pages=10, seed=2), "none")
+    truncated = data[: int(len(data) * 0.65)]
+    recs = list(FastWARCIterator(truncated))
+    assert 0 < len(recs) < records_in(CorpusSpec(n_pages=10))
+
+
+def test_garbage_resync():
+    good = serialize_record("response", b"HTTP/1.1 200 OK\r\n\r\nok",
+                            {"Content-Type": "application/http"})
+    blob = b"GARBAGE" * 100 + good
+    recs = list(FastWARCIterator(blob))
+    assert len(recs) == 1 and recs[0].content.endswith(b"ok")
+
+
+def test_bad_version_line_raises_in_baseline():
+    with pytest.raises(ValueError):
+        list(WARCIOArchiveIterator(b"NOT-A-WARC/9.9\r\n\r\n"))
+
+
+def test_baseline_rejects_lz4():
+    data = generate_warc(CorpusSpec(n_pages=1), "lz4")
+    with pytest.raises(ValueError):
+        WARCIOArchiveIterator(data)
+
+
+# --------------------------------------------------------------------------
+# digests / writer / recompression
+# --------------------------------------------------------------------------
+
+def test_digest_roundtrip():
+    payload = b"digest me" * 100
+    for algo in ("sha1", "md5", "sha256", "crc32", "adler32"):
+        d = block_digest(payload, algo)
+        assert verify_digest(payload, d)
+        assert not verify_digest(payload + b"x", d)
+
+
+def test_writer_roundtrip_all_compressions(tmp_path):
+    for compression in ("none", "gzip", "lz4", "zstd"):
+        sink = io.BytesIO()
+        w = WarcWriter(sink, compression)
+        w.write_warcinfo()
+        w.write_record("response", b"HTTP/1.1 200 OK\r\n\r\nhello",
+                       {"Content-Type": "application/http"}, digests=True)
+        recs = list(FastWARCIterator(sink.getvalue(), verify_digests=True))
+        assert len(recs) == 2
+        assert recs[1].verified_block_digest is True
+
+
+def test_recompress_gzip_to_lz4(tmp_path):
+    from repro.core.warc.writer import recompress
+    spec = CorpusSpec(n_pages=25, seed=9)
+    src = tmp_path / "in.warc.gz"
+    src.write_bytes(generate_warc(spec, "gzip"))
+    dst = tmp_path / "out.warc.lz4"
+    stats = recompress(str(src), str(dst), "lz4")
+    assert stats["records"] == records_in(spec)
+    # every record survives with content intact
+    orig = {r.record_id: r.content
+            for r in FastWARCIterator(generate_warc(spec, "gzip"))}
+    out = {r.record_id: r.content for r in FastWARCIterator(str(dst))}
+    assert orig == out
+    # paper: LZ4 costs ~30-40 % more storage than gzip (direction check)
+    assert stats["size_ratio"] > 1.0
