@@ -1,0 +1,105 @@
+"""Parallel-subsystem benchmarks: shard fan-out scaling + batched dispatch.
+
+Two claims measured, not asserted (ISSUE 1 acceptance criteria):
+
+* **worker scaling** — docs/s of :func:`iter_documents_parallel` over a
+  multi-shard synthetic corpus at 1/2/4 workers vs the serial path. The
+  work (WARC parse → HTTP decode → HTML→text) is pure-Python and
+  process-parallel, so scaling should be near-linear until shard count or
+  core count binds.
+* **batched kernel dispatch** — one ``adler32_batch`` call over N record
+  payloads vs N looped ``adler32`` calls: the per-``pallas_call`` overhead
+  the ``(B, nblocks)`` grid amortizes away. Payloads are one kernel block
+  (2 KiB) each — the dispatch-bound regime the batching targets; at much
+  larger payloads interpret-mode grid stepping dominates instead.
+
+Worker-scaling speedups are bounded by physical cores (reported as the
+``cpu_count`` row): on a 2-core container 4 workers cannot reach 2×.
+Scale with REPRO_BENCH_PAGES (default 400, split across 8 shards) and
+REPRO_BENCH_WORKERS (comma-separated worker counts).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.parallel import iter_documents_parallel
+from repro.data.synth import CorpusSpec, write_corpus
+
+_PAGES = int(os.environ.get("REPRO_BENCH_PAGES", "400"))
+_N_SHARDS = 8
+_WORKERS = tuple(
+    int(w) for w in os.environ.get("REPRO_BENCH_WORKERS", "1,2,4").split(","))
+_BATCH_PAYLOADS = 64
+_PAYLOAD_BYTES = 2048  # one adler32 kernel block per payload
+
+
+def _docs_per_s(paths: list[str], workers: int, reps: int = 3) -> float:
+    best = float("inf")
+    n = 0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        n = sum(1 for _ in iter_documents_parallel(paths, workers=workers))
+        best = min(best, time.perf_counter() - t0)
+    return n / best
+
+
+def run(quiet: bool = False) -> list[str]:
+    rows = [f"parallel,env,host,cpu_count,{os.cpu_count()}"]
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        for i in range(_N_SHARDS):
+            p = os.path.join(d, f"s{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=_PAGES // _N_SHARDS, seed=i),
+                         "gzip")
+            paths.append(p)
+
+        serial = _docs_per_s(paths, workers=0)
+        rows.append(f"parallel,worker_scaling,serial,docs_per_s,{serial:.1f}")
+        for w in _WORKERS:
+            rate = _docs_per_s(paths, workers=w)
+            rows.append(
+                f"parallel,worker_scaling,workers{w},docs_per_s,{rate:.1f}")
+            rows.append(f"parallel,worker_scaling,workers{w},speedup,"
+                        f"{rate / serial:.2f}")
+
+    # batched vs looped kernel dispatch (interpret mode, like kernel_bench)
+    from repro.kernels.adler32 import adler32, adler32_batch
+
+    rng = np.random.default_rng(0)
+    payloads = [rng.integers(0, 256, _PAYLOAD_BYTES, np.uint8).tobytes()
+                for _ in range(_BATCH_PAYLOADS)]
+    batched = adler32_batch(payloads)  # warm/compile both dispatch shapes
+    looped = [adler32(p) for p in payloads]
+    assert [int(c) for c in batched] == looped
+
+    def _best_s(fn, reps: int = 3) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_batch = _best_s(lambda: adler32_batch(payloads))
+    t_loop = _best_s(lambda: [adler32(p) for p in payloads])
+    n = len(payloads)
+    rows.append(f"parallel,adler32_dispatch,batched_{n},us_total,"
+                f"{t_batch * 1e6:.0f}")
+    rows.append(f"parallel,adler32_dispatch,looped_{n},us_total,"
+                f"{t_loop * 1e6:.0f}")
+    rows.append(f"parallel,adler32_dispatch,batched_{n},speedup,"
+                f"{t_loop / t_batch:.2f}")
+
+    if not quiet:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

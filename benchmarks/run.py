@@ -5,25 +5,106 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                workload, with speedups (benchmarks/table1.py);
   * pipeline — end-to-end WARC→tokens ingestion + the paper's
                Common-Crawl hours-saved projections;
-  * kernels  — Pallas kernel micro-benches (interpret mode).
+  * kernels  — Pallas kernel micro-benches (interpret mode);
+  * parallel — multi-worker shard fan-out scaling + batched-vs-looped
+               kernel dispatch (benchmarks/parallel_bench.py).
 
-Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 for pipeline).
+``--json`` additionally writes ``BENCH_pipeline.json`` (all rows as
+records plus a throughput summary) so the perf trajectory is tracked
+machine-readably across PRs. ``--sections a,b`` restricts the run.
+
+Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 elsewhere).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 
-def main() -> None:
-    from benchmarks import table1, pipeline_bench, kernel_bench
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pipeline.json")
 
-    print("section,compression,workload,parser,records_per_s,speedup")
-    for row in table1.run(quiet=True):
-        print(row.csv())
-    print()
-    for line in pipeline_bench.run(quiet=True):
-        print(line)
-    print()
-    for line in kernel_bench.run(quiet=True):
-        print(line)
+
+def _parse_row(line: str) -> dict:
+    """One CSV row → record: section,key...,metric,value."""
+    parts = line.split(",")
+    try:
+        value = float(parts[-1])
+    except ValueError:
+        value = parts[-1]
+    return {"section": parts[0], "keys": parts[1:-2],
+            "metric": parts[-2], "value": value}
+
+
+def _summary(records: list[dict]) -> dict:
+    """Headline throughput numbers, keyed stably for cross-PR diffing."""
+    out: dict[str, float] = {}
+    for r in records:
+        if not isinstance(r["value"], float):
+            continue
+        if r["metric"] in ("records_per_s", "docs_per_s", "tokens_per_s",
+                           "speedup"):
+            out[".".join([r["section"], *r["keys"], r["metric"]])] = r["value"]
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help=f"also write {os.path.basename(_JSON_PATH)}")
+    # parallel runs before kernels on purpose: its worker-scaling pass
+    # forks, and forking before JAX spins up its thread pools is both
+    # safer and fairer on small hosts
+    ap.add_argument("--sections", default="table1,pipeline,parallel,kernels",
+                    help="comma-separated subset of sections to run")
+    args = ap.parse_args(argv)
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+    known = {"table1", "pipeline", "kernels", "parallel"}
+    unknown = [s for s in sections if s not in known]
+    if unknown:
+        ap.error(f"unknown sections {unknown}; choose from {sorted(known)}")
+
+    lines: list[str] = []
+    if "table1" in sections:
+        from benchmarks import table1
+
+        print("section,compression,workload,parser,records_per_s,speedup")
+        for row in table1.run(quiet=True):
+            print(row.csv())
+            # table1 rows end in (value, speedup); normalize for JSON
+            parts = row.csv().split(",")
+            lines.append(",".join(parts[:4] + ["records_per_s", parts[4]]))
+            if parts[5]:
+                lines.append(",".join(parts[:4] + ["speedup", parts[5]]))
+        print()
+
+    def _runner(name: str):
+        # lazy per-section imports: kernel_bench imports jax at module
+        # top, and the parallel section must fork its pools before jax
+        # exists for the section ordering rationale above to hold
+        import importlib
+
+        return importlib.import_module(f"benchmarks.{name}_bench")
+
+    section_mods = {"pipeline": "pipeline", "kernels": "kernel",
+                    "parallel": "parallel"}
+    for name in sections:
+        if name not in section_mods:
+            continue
+        rows = _runner(section_mods[name]).run(quiet=True)
+        for line in rows:
+            print(line)
+        print()
+        lines.extend(rows)
+
+    if args.json:
+        records = [_parse_row(line) for line in lines]
+        payload = {"bench": "pipeline", "sections": sections,
+                   "rows": records, "summary": _summary(records)}
+        with open(_JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {_JSON_PATH}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
 # The paper's primary contribution: the FastWARC web-archive processing
-# pipeline (repro.core.warc) and the streaming analytics pipeline that feeds
-# parsed payloads into JAX training (repro.core.pipeline).
+# pipeline (repro.core.warc), the streaming analytics pipeline that feeds
+# parsed payloads into JAX training (repro.core.pipeline), and the
+# process-parallel shard ingestion engine (repro.core.parallel).
 from . import warc  # noqa: F401
+from . import parallel  # noqa: F401

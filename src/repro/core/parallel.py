@@ -1,0 +1,390 @@
+"""Process-parallel shard ingestion engine (DESIGN.md §6).
+
+The paper removes *per-record* overheads; at Common-Crawl scale the next
+bottleneck is that one Python process parses one shard on one core. This
+module provides the multi-core fan-out used across the stack:
+
+* :class:`ParallelWarcPool` — a small process pool purpose-built for
+  shard streaming: a lazy task feeder (so infinite shard sequences work),
+  a **bounded** result queue (workers block instead of ballooning memory),
+  chunked result transfer (amortizes pickling), and an *ordered* mode that
+  re-sequences per-shard result streams so consumers see exactly the
+  serial order (the token loader's exactly-resumable cursor depends on
+  this).
+* :func:`iter_documents_parallel` — the parallel twin of
+  :func:`repro.core.pipeline.iter_documents` over many shards.
+* :func:`map_shards` — one-result-per-shard map (map-reduce support; the
+  web-graph builder merges per-shard partial graphs with host-id
+  remapping, see :func:`repro.core.pipeline.web_graph_from_warcs`).
+
+Workers run the FastWARC parse → HTML→text extraction entirely in the
+child process; only the (much smaller) extracted results cross the
+process boundary. Worker functions must be module-level (picklable) so
+the pool also works under the ``spawn`` start method.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import queue as _queue_mod
+import sys
+import threading
+import time
+import traceback
+from typing import Any, Callable, Iterable, Iterator
+
+import multiprocessing as mp
+
+__all__ = [
+    "ParallelWarcPool",
+    "ParallelWorkerError",
+    "iter_documents_parallel",
+    "map_shards",
+]
+
+_CHUNK = 0   # payload: list of results
+_DONE = 1    # payload: number of results produced for the task
+_ERROR = 2   # payload: (repr(exc), formatted traceback)
+
+_DEFAULT_CHUNK_SIZE = 64
+
+
+class ParallelWorkerError(RuntimeError):
+    """A worker process raised while processing a shard."""
+
+    def __init__(self, shard_index: int, message: str, worker_traceback: str):
+        super().__init__(
+            f"shard #{shard_index}: {message}\n--- worker traceback ---\n"
+            f"{worker_traceback}")
+        self.shard_index = shard_index
+
+
+def _worker_loop(task_q, result_q, worker_fn, chunk_size: int) -> None:
+    """Child-process main: stream worker_fn(item) results back in chunks."""
+    while True:
+        task = task_q.get()
+        if task is None:
+            return
+        idx, item = task
+        try:
+            buf: list = []
+            produced = 0
+            for out in worker_fn(item):
+                buf.append(out)
+                if len(buf) >= chunk_size:
+                    result_q.put((idx, _CHUNK, buf))
+                    produced += len(buf)
+                    buf = []
+            if buf:
+                result_q.put((idx, _CHUNK, buf))
+                produced += len(buf)
+            result_q.put((idx, _DONE, produced))
+        except Exception as exc:  # surfaced in the parent as ParallelWorkerError
+            result_q.put((idx, _ERROR, (repr(exc), traceback.format_exc())))
+
+
+def _default_context() -> str:
+    override = os.environ.get("REPRO_MP_CONTEXT")
+    if override:
+        return override
+    methods = mp.get_all_start_methods()
+    # fork is much cheaper to start and the workers only run pure-Python
+    # parsing — but forking a process whose JAX/XLA runtime has started
+    # its thread pools is a documented deadlock source (a child can
+    # inherit a held lock). Once jax is imported, prefer forkserver
+    # (children fork from a clean server process) or spawn — except when
+    # __main__ has a pseudo-filename ("<stdin>"/"<string>"): spawn-style
+    # preparation re-runs __main__ from its path and would crash there.
+    main_file = getattr(sys.modules.get("__main__"), "__file__", None) or ""
+    if "jax" in sys.modules and not main_file.startswith("<"):
+        for method in ("forkserver", "spawn"):
+            if method in methods:
+                return method
+    return "fork" if "fork" in methods else "spawn"
+
+
+class ParallelWarcPool:
+    """Process pool streaming per-shard results through bounded queues.
+
+    Parameters
+    ----------
+    worker_fn:
+        module-level callable; ``worker_fn(item)`` returns/yields the
+        results for one shard. Use ``functools.partial`` for options.
+    workers:
+        process count (default: ``os.cpu_count()``).
+    chunk_size:
+        results per queue message (pickling amortization).
+    queue_chunks:
+        result-queue bound in messages (default ``4 × workers``) — the
+        backpressure knob: workers stall rather than buffering a whole
+        crawl in the parent.
+    mp_context:
+        multiprocessing start method ("fork"/"spawn"/"forkserver");
+        default from ``REPRO_MP_CONTEXT``, else fork-when-available —
+        unless jax is already imported, where forkserver/spawn is
+        chosen (forking under live XLA thread pools can deadlock).
+    """
+
+    def __init__(self, worker_fn: Callable[[Any], Iterable],
+                 *, workers: int | None = None,
+                 chunk_size: int = _DEFAULT_CHUNK_SIZE,
+                 queue_chunks: int | None = None,
+                 mp_context: str | None = None) -> None:
+        self.workers = max(1, workers if workers else (os.cpu_count() or 1))
+        self._ctx = mp.get_context(mp_context or _default_context())
+        self._tasks = self._ctx.Queue(maxsize=2 * self.workers)
+        self._results = self._ctx.Queue(
+            maxsize=queue_chunks if queue_chunks else 4 * self.workers)
+        self._stop = threading.Event()
+        self._feed_done = threading.Event()
+        self._total: int | None = None
+        self._feed_error: BaseException | None = None
+        self._feeder: threading.Thread | None = None
+        self._progress = 0          # consumer's cur (ordered mode)
+        self._window: int | None = None  # max shards fed ahead of progress
+        self._procs = [
+            self._ctx.Process(
+                target=_worker_loop,
+                args=(self._tasks, self._results, worker_fn, chunk_size),
+                daemon=True)
+            for _ in range(self.workers)
+        ]
+        for p in self._procs:
+            p.start()
+        self._closed = False
+
+    # -- task feeding ----------------------------------------------------
+    def _feed(self, items: Iterable) -> None:
+        count = 0
+        try:
+            for idx, item in enumerate(items):
+                # ordered mode: don't run ahead of the consumer by more
+                # than a window of shards — otherwise every faster shard's
+                # full output piles up in the consumer's `pending` buffer
+                # (unbounded memory) while one slow shard holds `cur`
+                while (self._window is not None
+                       and idx - self._progress > self._window
+                       and not self._stop.is_set()):
+                    time.sleep(0.01)
+                while not self._stop.is_set():
+                    try:
+                        self._tasks.put((idx, item), timeout=0.1)
+                        break
+                    except _queue_mod.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+                count = idx + 1
+        except BaseException as exc:  # surfaced by iter_events, not swallowed
+            self._feed_error = exc
+        finally:
+            self._total = count
+            self._feed_done.set()
+            # release the workers; bounded put so close() can always win
+            sentinels = self.workers
+            while sentinels and not self._stop.is_set():
+                try:
+                    self._tasks.put(None, timeout=0.1)
+                    sentinels -= 1
+                except _queue_mod.Full:
+                    continue
+
+    # -- event stream ----------------------------------------------------
+    def iter_events(self, items: Iterable, *,
+                    ordered: bool = True) -> Iterator[tuple]:
+        """Stream ``("chunk", idx, results)`` / ``("done", idx, n)`` events.
+
+        ``idx`` is the shard's enumeration index in ``items``. In ordered
+        mode events are re-sequenced to exactly the serial order (chunks
+        of shard *i* complete — ``("done", i, n)`` — before anything of
+        shard *i+1* appears); unordered mode streams events as workers
+        finish, which is faster when order is irrelevant.
+
+        One event stream at a time per pool; ``items`` may be an infinite
+        iterator (ordered consumption gives natural backpressure).
+        """
+        if self._feeder is not None:
+            raise RuntimeError("pool already consumed; create a new one")
+        # ordered mode bounds how far the feeder runs ahead of the
+        # consumer's cursor, keeping the `pending` re-sequencing buffer
+        # to a fixed number of shards even when shard sizes are skewed
+        self._window = (2 * self.workers + 2) if ordered else None
+        self._feeder = threading.Thread(
+            target=self._feed, args=(items,), daemon=True)
+        self._feeder.start()
+
+        done_seen = 0
+        cur = 0                       # next idx to emit (ordered mode)
+        pending: dict[int, list] = {}  # idx -> buffered events (ordered mode)
+
+        def finished() -> bool:
+            if not self._feed_done.is_set() or self._total is None:
+                return False
+            return (cur if ordered else done_seen) >= self._total
+
+        while not finished():
+            if self._feed_error is not None:
+                raise ParallelWorkerError(
+                    -1, f"task iterable raised: {self._feed_error!r}",
+                    "") from self._feed_error
+            try:
+                idx, kind, payload = self._results.get(timeout=0.1)
+            except _queue_mod.Empty:
+                # a worker killed from outside (OOM, segfault) never sends
+                # its _DONE: waiting on it would hang forever and balloon
+                # the ordered `pending` buffer
+                crashed = [p for p in self._procs
+                           if p.exitcode not in (None, 0)]
+                if crashed and self._results.empty():
+                    raise ParallelWorkerError(
+                        -1, "worker process(es) died with exit code(s) "
+                        f"{[p.exitcode for p in crashed]}", "")
+                if (not any(p.is_alive() for p in self._procs)
+                        and self._results.empty() and not finished()):
+                    raise ParallelWorkerError(
+                        -1, "worker processes exited prematurely", "")
+                continue
+            if kind == _ERROR:
+                raise ParallelWorkerError(idx, payload[0], payload[1])
+            if kind == _DONE:
+                done_seen += 1
+            if not ordered:
+                yield ("chunk", idx, payload) if kind == _CHUNK \
+                    else ("done", idx, payload)
+                continue
+            if idx != cur:
+                pending.setdefault(idx, []).append((kind, payload))
+                continue
+            if kind == _CHUNK:
+                yield ("chunk", idx, payload)
+                continue
+            yield ("done", idx, payload)
+            cur += 1
+            self._progress = cur
+            # flush buffered successors (a worker's messages are FIFO, so
+            # a buffered "done" is always last for its idx)
+            while True:
+                events = pending.pop(cur, None)
+                if not events:
+                    break
+                advanced = False
+                for kind2, payload2 in events:
+                    if kind2 == _CHUNK:
+                        yield ("chunk", cur, payload2)
+                    else:
+                        yield ("done", cur, payload2)
+                        advanced = True
+                if not advanced:
+                    break
+                cur += 1
+                self._progress = cur
+        if self._feed_error is not None:
+            # the items iterable died partway: the stream above was
+            # silently truncated, which must not look like success
+            raise ParallelWorkerError(
+                -1, f"task iterable raised: {self._feed_error!r}",
+                "") from self._feed_error
+
+    def iter_results(self, items: Iterable, *,
+                     ordered: bool = True) -> Iterator:
+        """Flattened result stream (chunk boundaries dissolved)."""
+        for event in self.iter_events(items, ordered=ordered):
+            if event[0] == "chunk":
+                yield from event[2]
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        """Stop feeding, tear down workers, release queue resources."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        if self._feeder is not None:
+            self._feeder.join(timeout=2.0)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+        for p in self._procs:
+            p.join(timeout=2.0)
+        for q in (self._tasks, self._results):
+            try:
+                q.close()
+                q.cancel_join_thread()
+            except (OSError, ValueError):  # pragma: no cover - teardown race
+                pass
+
+    def __enter__(self) -> "ParallelWarcPool":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # pragma: no cover - GC backstop
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+# --------------------------------------------------------------------------
+# Shard-level worker functions (module-level: picklable under spawn)
+# --------------------------------------------------------------------------
+
+def _extract_documents(path: str, *, min_length: int = 64,
+                       status_ok_only: bool = True):
+    from repro.core.pipeline import iter_documents
+
+    yield from iter_documents(path, min_length=min_length,
+                              status_ok_only=status_ok_only)
+
+
+def _call_one(fn: Callable, item):
+    yield fn(item)
+
+
+def iter_documents_parallel(paths: Iterable[str], *,
+                            workers: int | None = None,
+                            ordered: bool = False,
+                            min_length: int = 64,
+                            status_ok_only: bool = True,
+                            chunk_size: int = _DEFAULT_CHUNK_SIZE,
+                            mp_context: str | None = None) -> Iterator:
+    """Parallel ``iter_documents`` over many WARC shards.
+
+    Parse, HTTP decode, and HTML→text extraction all run in ``workers``
+    processes; the parent only unpickles extracted
+    :class:`~repro.core.pipeline.Document` chunks. ``workers=0`` is the
+    serial fallback (identical output, one process). ``ordered=True``
+    reproduces the exact serial document order; the default streams
+    documents as shards finish.
+    """
+    paths = [p for p in paths]
+    if workers is not None and workers <= 0:
+        from repro.core.pipeline import iter_documents
+
+        for p in paths:
+            yield from iter_documents(p, min_length=min_length,
+                                      status_ok_only=status_ok_only)
+        return
+    fn = functools.partial(_extract_documents, min_length=min_length,
+                           status_ok_only=status_ok_only)
+    with ParallelWarcPool(fn, workers=workers, chunk_size=chunk_size,
+                          mp_context=mp_context) as pool:
+        yield from pool.iter_results(paths, ordered=ordered)
+
+
+def map_shards(fn: Callable, items: Iterable, *,
+               workers: int | None = None,
+               mp_context: str | None = None) -> list:
+    """Apply ``fn`` (module-level, one picklable result) per shard.
+
+    Returns results in ``items`` order — the map half of map-reduce
+    analytics over shard collections.
+    """
+    items = [it for it in items]
+    if workers is not None and workers <= 0 or len(items) <= 1:
+        return [fn(it) for it in items]
+    with ParallelWarcPool(functools.partial(_call_one, fn), workers=workers,
+                          chunk_size=1, mp_context=mp_context) as pool:
+        return list(pool.iter_results(items, ordered=True))

@@ -108,3 +108,52 @@ def web_graph_from_warc(source, *, min_length: int = 0) -> dict:
     return {"hosts": list(host_ids),
             "edge_src": np.asarray(src_list, np.int32),
             "edge_dst": np.asarray(dst_list, np.int32)}
+
+
+def merge_web_graphs(partials: list[dict]) -> dict:
+    """Reduce per-shard partial graphs into one host-level graph.
+
+    Host ids are shard-local (each partial numbered its hosts by first
+    appearance), so edges are remapped through a global host table before
+    concatenation. First-appearance order across the partial list keeps
+    the merge deterministic.
+    """
+    import numpy as np
+
+    host_ids: dict[str, int] = {}
+    src_parts: list[np.ndarray] = []
+    dst_parts: list[np.ndarray] = []
+    for g in partials:
+        remap = np.empty(len(g["hosts"]), np.int32)
+        for local, host in enumerate(g["hosts"]):
+            if host not in host_ids:
+                host_ids[host] = len(host_ids)
+            remap[local] = host_ids[host]
+        if g["edge_src"].size:
+            src_parts.append(remap[g["edge_src"]])
+            dst_parts.append(remap[g["edge_dst"]])
+    cat = (lambda parts: np.concatenate(parts) if parts
+           else np.empty(0, np.int32))
+    return {"hosts": list(host_ids),
+            "edge_src": cat(src_parts).astype(np.int32),
+            "edge_dst": cat(dst_parts).astype(np.int32)}
+
+
+def _web_graph_partial(source) -> dict:
+    # module-level so the parallel pool can pickle it under spawn
+    return web_graph_from_warc(source)
+
+
+def web_graph_from_warcs(sources, *, workers: int = 0) -> dict:
+    """Host-level web graph over many shards (map-reduce form).
+
+    ``workers > 0`` builds per-shard partial graphs in a
+    :class:`repro.core.parallel.ParallelWarcPool` and merges them with
+    host-id remapping; ``workers=0`` maps serially. Both paths produce
+    identical edge multisets (host numbering follows first appearance in
+    shard order either way).
+    """
+    from repro.core.parallel import map_shards
+
+    partials = map_shards(_web_graph_partial, list(sources), workers=workers)
+    return merge_web_graphs(partials)

@@ -16,7 +16,7 @@ from .record import (
 from .fastwarc import FastWARCIterator, parse_header_block
 from .warcio_ref import BaselineRecord, WARCIOArchiveIterator
 from .writer import WarcWriter, recompress, serialize_record
-from .checksum import block_digest, verify_digest
+from .checksum import block_digest, verify_digest, verify_digests_bulk
 from . import lz4, streams, xxh32
 
 __all__ = [
@@ -35,5 +35,6 @@ __all__ = [
     "serialize_record",
     "streams",
     "verify_digest",
+    "verify_digests_bulk",
     "xxh32",
 ]

@@ -45,11 +45,54 @@ def verify_digest(data: bytes | memoryview, header_value: str) -> bool:
             return bytes.fromhex(expected) == raw
         except ValueError:
             return False
-    if algo == "crc32":
-        return (zlib.crc32(data) & 0xFFFFFFFF) == int(expected, 16)
-    if algo == "adler32":
-        return (zlib.adler32(data) & 0xFFFFFFFF) == int(expected, 16)
+    if algo in ("crc32", "adler32"):
+        try:
+            want = int(expected, 16)
+        except ValueError:  # malformed digest value: mismatch, not a crash
+            return False
+        got = zlib.crc32(data) if algo == "crc32" else zlib.adler32(data)
+        return (got & 0xFFFFFFFF) == want
     return False
+
+
+def verify_digests_bulk(datas, header_values, *, use_kernel: bool = True,
+                        interpret: bool = True) -> list[bool]:
+    """Verify many ``algo:value`` digest headers at once.
+
+    The batched path exists for the Adler-32 entries: instead of one
+    device dispatch per record, every adler32-digested payload in the
+    batch is checksummed by a single ``(B, nblocks)``-gridded Pallas call
+    (:func:`repro.kernels.adler32.adler32_batch`) and compared host-side.
+    All other algorithms fall back to :func:`verify_digest` per item.
+    ``use_kernel=False`` keeps everything on zlib (e.g. when JAX is
+    unavailable in a worker process).
+    """
+    datas = list(datas)
+    header_values = list(header_values)
+    if len(datas) != len(header_values):
+        raise ValueError("datas and header_values must have equal length")
+    results: list[bool] = [False] * len(datas)
+    adler_idx: list[int] = []
+    adler_expected: list[int] = []
+    for i, (data, header) in enumerate(zip(datas, header_values)):
+        algo, _, expected = header.partition(":")
+        if use_kernel and algo.strip().lower() == "adler32":
+            try:
+                adler_expected.append(int(expected.strip(), 16))
+                adler_idx.append(i)
+                continue
+            except ValueError:
+                results[i] = False
+                continue
+        results[i] = verify_digest(data, header)
+    if adler_idx:
+        from repro.kernels.adler32 import adler32_batch
+
+        got = adler32_batch([datas[i] for i in adler_idx],
+                            interpret=interpret)
+        for j, i in enumerate(adler_idx):
+            results[i] = int(got[j]) == adler_expected[j]
+    return results
 
 
 def adler32_reference(data: bytes) -> int:

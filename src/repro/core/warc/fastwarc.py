@@ -107,8 +107,10 @@ class FastWARCIterator:
         verify_digests: bool = False,
         func_filter: Callable[[WarcRecord], bool] | None = None,
     ) -> None:
+        self._owned_file: BinaryIO | None = None
         if isinstance(source, str):
             source = open(source, "rb")
+            self._owned_file = source
         elif isinstance(source, (bytes, bytearray, memoryview)):
             source = io.BytesIO(bytes(source))
         self._raw = source
@@ -134,12 +136,38 @@ class FastWARCIterator:
 
     # ------------------------------------------------------------------
     def __iter__(self) -> Iterator[WarcRecord]:
-        if self._stream is None:
-            yield from self._iter_uncompressed()
-        elif isinstance(self._stream, LZ4Stream):
-            yield from self._iter_lz4()
-        else:
-            yield from self._iter_members()
+        if self.closed:
+            return  # exhausted path-owned source: empty, like re-reading EOF
+        try:
+            if self._stream is None:
+                yield from self._iter_uncompressed()
+            elif isinstance(self._stream, LZ4Stream):
+                yield from self._iter_lz4()
+            else:
+                yield from self._iter_members()
+        finally:
+            # files *we* opened (str paths) are released on exhaustion or
+            # generator teardown — callers iterating many shards per epoch
+            # must not accumulate fds (WarcTokenLoader does exactly that)
+            if self._owned_file is not None:
+                self.close()
+
+    # -- lifecycle -------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        f = self._owned_file
+        return f is not None and f.closed
+
+    def close(self) -> None:
+        """Close the underlying file if this iterator opened it."""
+        if self._owned_file is not None and not self._owned_file.closed:
+            self._owned_file.close()
+
+    def __enter__(self) -> "FastWARCIterator":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
 
     # -- shared record assembly -----------------------------------------
     def _type_value(self, header_block: bytes) -> int:
@@ -181,7 +209,8 @@ class FastWARCIterator:
         types_mask = self._types_mask
         filter_active = self._filter_active
         buf = b""
-        pos = 0
+        pos = 0       # buffer-relative cursor
+        base = 0      # absolute stream offset of buf[0]
         eof = False
 
         def fill(need: int) -> bool:
@@ -205,6 +234,7 @@ class FastWARCIterator:
         while True:
             if pos > _COMPACT_THRESHOLD:  # record boundary: safe to rebase
                 buf = buf[pos:]
+                base += pos  # keep reported offsets absolute past the rebase
                 pos = 0
             if not fill(len(WARC_MAGIC)):
                 return
@@ -240,7 +270,8 @@ class FastWARCIterator:
             if not fill(record_end):
                 return  # truncated final record
             content = memoryview(buf)[body_start:body_start + clen]
-            record = self._finalize(header_block, type_value, content, pos)
+            record = self._finalize(header_block, type_value, content,
+                                    base + pos)
             pos += record_end
             if record is not None:
                 yield record

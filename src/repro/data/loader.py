@@ -10,12 +10,19 @@ The host-side input pipeline of the framework (DESIGN.md §2):
 * **exact resume** — the cursor (shard index, documents consumed in the
   current shard, packer remainder) is exposed via :meth:`state` and
   restored via :meth:`restore`; the train loop stores it in every
-  checkpoint (``repro/train/checkpoint.py`` extras).
+  checkpoint (``repro/train/checkpoint.py`` extras);
+* **multi-core parse** — ``workers=N`` runs WARC parse + HTML→text +
+  tokenization for the shards *ahead of the cursor* in N worker processes
+  (:class:`repro.core.parallel.ParallelWarcPool`, ordered mode), while the
+  packer — the only stateful stage — stays in this process, so the cursor
+  semantics are bit-identical to the serial path.
 """
 from __future__ import annotations
 
+import functools
 import queue
 import threading
+import time
 from typing import Iterator
 
 import numpy as np
@@ -25,10 +32,18 @@ from .packing import SequencePacker, pad_batch
 from .tokenizer import encode_document
 
 
+def _tokenized_docs(path: str, *, min_length: int):
+    """Worker-side shard stage: parse → extract → tokenize (module-level
+    so the process pool can pickle it under spawn)."""
+    for doc in iter_documents(path, min_length=min_length):
+        yield encode_document(doc.text)
+
+
 class WarcTokenLoader:
     def __init__(self, shard_paths: list[str], *, batch: int, seq_len: int,
                  host_id: int = 0, n_hosts: int = 1, min_doc_len: int = 64,
-                 prefetch: int = 4, loop: bool = True) -> None:
+                 prefetch: int = 4, loop: bool = True,
+                 workers: int = 0) -> None:
         self.all_shards = list(shard_paths)
         self.my_shards = [p for i, p in enumerate(self.all_shards)
                           if i % n_hosts == host_id]
@@ -39,6 +54,8 @@ class WarcTokenLoader:
         self.min_doc_len = min_doc_len
         self.loop = loop
         self.prefetch = prefetch
+        self.workers = workers
+        self._pool = None
         self._packer = SequencePacker(seq_len)
         self._rows: list[np.ndarray] = []   # packed, not yet emitted
         self._shard_idx = 0
@@ -69,12 +86,20 @@ class WarcTokenLoader:
 
         The not-yet-emitted row backlog lives on the object (``_rows``) so
         :meth:`state` snapshots taken between batches resume exactly.
+        With ``workers > 0`` the per-shard parse/tokenize stages run in
+        worker processes; document order, cursor updates, and emitted
+        batches are identical to the serial path.
         """
-        while True:
+        if self.workers > 0:
+            yield from self._batches_parallel()
+            return
+        while not self._stop.is_set():
             shard = self.my_shards[self._shard_idx % len(self.my_shards)]
             skip = self._docs_consumed
             for n_doc, doc in enumerate(
                     iter_documents(shard, min_length=self.min_doc_len)):
+                if self._stop.is_set():  # close() must not wait a shard out
+                    return
                 if n_doc < skip:
                     continue
                 self._docs_consumed = n_doc + 1
@@ -93,6 +118,61 @@ class WarcTokenLoader:
                         self._rows = []
                     return
 
+    # -- process-parallel shard parsing ------------------------------------
+    def _shard_paths_from(self, start: int) -> Iterator[str]:
+        """Shard path sequence the serial loop would visit from ``start``:
+        round-robin forever when looping, else to the next epoch boundary."""
+        n = len(self.my_shards)
+        if self.loop:
+            k = start
+            while True:
+                yield self.my_shards[k % n]
+                k += 1
+        else:
+            for k in range(start, (start // n + 1) * n):
+                yield self.my_shards[k % n]
+
+    def _batches_parallel(self) -> Iterator[np.ndarray]:
+        from repro.core.parallel import ParallelWarcPool
+
+        n = len(self.my_shards)
+        fn = functools.partial(_tokenized_docs, min_length=self.min_doc_len)
+        pool = ParallelWarcPool(fn, workers=self.workers)
+        self._pool = pool
+        try:
+            skip = self._docs_consumed
+            n_doc = 0  # position within the current shard (incl. skipped)
+            for event in pool.iter_events(
+                    self._shard_paths_from(self._shard_idx), ordered=True):
+                if self._stop.is_set():  # close() must not wait a shard out
+                    return
+                if event[0] == "chunk":
+                    for ids in event[2]:
+                        if n_doc >= skip:
+                            self._docs_consumed = n_doc + 1
+                            self._rows.extend(self._packer.feed(ids))
+                            while len(self._rows) >= self.batch:
+                                out = np.stack(self._rows[:self.batch])
+                                self._rows = self._rows[self.batch:]
+                                yield out
+                        n_doc += 1
+                    continue
+                # shard boundary
+                self._shard_idx += 1
+                self._docs_consumed = 0
+                skip = 0
+                n_doc = 0
+                if self._shard_idx % n == 0:
+                    self._epoch += 1
+                    if not self.loop:
+                        break
+            if not self.loop and self._rows:
+                yield pad_batch(self._rows, self.batch, self.seq_len)
+                self._rows = []
+        finally:
+            self._pool = None
+            pool.close()
+
     # -- prefetching iterator ----------------------------------------------
     def __iter__(self) -> Iterator[np.ndarray]:
         if self.prefetch <= 0:
@@ -104,27 +184,57 @@ class WarcTokenLoader:
         def worker():
             try:
                 for batch in self.batches():
+                    # bounded put that stays responsive to close()
+                    while not self._stop.is_set():
+                        try:
+                            self._queue.put(batch, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
                     if self._stop.is_set():
                         return
-                    self._queue.put(batch)
             finally:
-                self._queue.put(None)
+                try:
+                    self._queue.put_nowait(None)
+                except queue.Full:
+                    pass
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
         while True:
-            item = self._queue.get()
+            try:
+                item = self._queue.get(timeout=0.5)
+            except queue.Empty:
+                if self._stop.is_set() or not self._thread.is_alive():
+                    return
+                continue
             if item is None:
                 return
             yield item
 
     def close(self) -> None:
+        """Stop the prefetch thread (and any worker pool) and join it.
+
+        ``batches()`` polls the stop flag per document/event, so the join
+        normally returns within one document's parse time; the deadline
+        is a backstop (the thread is a daemon either way).
+        """
         self._stop.set()
-        if self._queue is not None:
-            try:  # unblock the worker if it's waiting on a full queue
-                self._queue.get_nowait()
-            except queue.Empty:
-                pass
+        thread = self._thread
+        if thread is not None:
+            deadline = time.monotonic() + 10.0
+            while thread.is_alive() and time.monotonic() < deadline:
+                if self._queue is not None:
+                    try:  # unblock a producer waiting on a full queue
+                        self._queue.get_nowait()
+                    except queue.Empty:
+                        pass
+                thread.join(timeout=0.05)
+            self._thread = None
+        pool = self._pool
+        if pool is not None:
+            pool.close()
+            self._pool = None
 
 
 def split_batch(batch: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

@@ -1,3 +1,3 @@
-from .ops import adler32
+from .ops import adler32, adler32_batch
 
-__all__ = ["adler32"]
+__all__ = ["adler32", "adler32_batch"]

@@ -1,26 +1,81 @@
-"""Public wrapper: Adler-32 of arbitrary byte buffers via the Pallas kernel."""
+"""Public wrappers: Adler-32 of byte buffers via the Pallas kernel.
+
+``adler32`` checksums one buffer; ``adler32_batch`` stacks a ragged batch
+of payloads into one ``(B, W)`` matrix and issues a *single* gridded
+``pallas_call`` — N record checksums for one dispatch (DESIGN.md §4).
+"""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from .adler32 import BLOCK, MOD, adler32_partials
+from .adler32 import BLOCK, MOD, adler32_partials_batch
+
+__all__ = ["adler32", "adler32_batch"]
+
+
+def _as_u8(data) -> np.ndarray:
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(data), dtype=np.uint8)
+    return np.asarray(data, np.uint8)
+
+
+def _combine(s: np.ndarray, t: np.ndarray, lengths: np.ndarray,
+             block: int) -> np.ndarray:
+    """Host-side reduction of per-block partials to final checksums.
+
+    Zero padding contributes nothing to S or T, so full-row sums with each
+    row's *true* length are exact for every ragged entry.
+    """
+    s = s.astype(np.int64)
+    t = t.astype(np.int64)
+    offsets = np.arange(s.shape[1], dtype=np.int64) * block   # o_j
+    n = lengths.astype(np.int64)[:, None]                     # (B, 1)
+    a = (1 + s.sum(axis=1)) % MOD
+    b = (n[:, 0] + ((n - offsets) * s - t).sum(axis=1)) % MOD
+    out = ((b << 16) | a).astype(np.uint32)
+    out[lengths == 0] = 1  # adler32(b"") == 1
+    return out
+
+
+def _bucket_width(size: int, block: int) -> int:
+    """Block-multiple width bucket: next power-of-two block count."""
+    nblocks = max((size + block - 1) // block, 1)
+    return block * (1 << (nblocks - 1).bit_length())
+
+
+def adler32_batch(payloads, *, block: int = BLOCK,
+                  interpret: bool = True) -> np.ndarray:
+    """Adler-32 of every payload in a ragged batch (few kernel dispatches).
+
+    Returns a uint32 array matching ``zlib.adler32`` entry-wise. Payloads
+    are zero-padded and grouped into power-of-two width buckets — one
+    ``(B, nblocks)``-gridded call per bucket — so a uniform batch costs a
+    single dispatch while one giant outlier cannot inflate every row to
+    its width (padding waste is bounded at 2× per row, not B × max_len).
+    """
+    bufs = [_as_u8(p) for p in payloads]
+    nrows = len(bufs)
+    if nrows == 0:
+        return np.empty(0, np.uint32)
+    out = np.empty(nrows, np.uint32)
+    buckets: dict[int, list[int]] = {}
+    for i, buf in enumerate(bufs):
+        buckets.setdefault(_bucket_width(buf.size, block), []).append(i)
+    for width, idxs in buckets.items():
+        padded = np.zeros((len(idxs), width), dtype=np.uint8)
+        for row, i in enumerate(idxs):
+            padded[row, :bufs[i].size] = bufs[i]
+        lengths = np.asarray([bufs[i].size for i in idxs], np.int64)
+        s, t = adler32_partials_batch(jnp.asarray(padded), block=block,
+                                      interpret=interpret)
+        out[idxs] = _combine(np.asarray(s), np.asarray(t), lengths, block)
+    return out
 
 
 def adler32(data, *, block: int = BLOCK, interpret: bool = True) -> int:
     """Adler-32 checksum (matches ``zlib.adler32``)."""
-    buf = np.frombuffer(bytes(data), dtype=np.uint8) if isinstance(
-        data, (bytes, bytearray, memoryview)) else np.asarray(data, np.uint8)
-    n = buf.size
-    if n == 0:
+    buf = _as_u8(data)
+    if buf.size == 0:
         return 1
-    padded_n = ((n + block - 1) // block) * block
-    padded = np.zeros(padded_n, dtype=np.uint8)
-    padded[:n] = buf  # zero padding contributes nothing to either sum
-    s, t = adler32_partials(jnp.asarray(padded), block=block)
-    s = np.asarray(s, dtype=np.int64)
-    t = np.asarray(t, dtype=np.int64)
-    offsets = np.arange(s.size, dtype=np.int64) * block
-    a = (1 + s.sum()) % MOD
-    b = (n + ((n - offsets) * s - t).sum()) % MOD
-    return int((b << 16) | a)
+    return int(adler32_batch([buf], block=block, interpret=interpret)[0])

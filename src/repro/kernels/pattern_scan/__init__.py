@@ -1,3 +1,9 @@
-from .ops import find_pattern_mask, find_pattern_positions, count_matches
+from .ops import (
+    count_matches,
+    find_pattern_mask,
+    find_pattern_mask_batch,
+    find_pattern_positions,
+)
 
-__all__ = ["find_pattern_mask", "find_pattern_positions", "count_matches"]
+__all__ = ["find_pattern_mask", "find_pattern_mask_batch",
+           "find_pattern_positions", "count_matches"]

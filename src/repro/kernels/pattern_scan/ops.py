@@ -1,45 +1,90 @@
-"""Public jit'd wrappers for the pattern-scan kernel."""
+"""Public jit'd wrappers for the pattern-scan kernel.
+
+``find_pattern_mask`` scans one buffer; ``find_pattern_mask_batch`` packs
+a ragged batch of payloads into one padded byte matrix and issues a
+single ``(B, nblocks)``-gridded dispatch. Both build the explicit halo
+input the blocked kernel needs (see :mod:`.pattern_scan`).
+"""
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from .pattern_scan import DEFAULT_BLOCK, MAX_PATTERN, pattern_scan
+from .pattern_scan import DEFAULT_BLOCK, MAX_PATTERN, pattern_scan_batch
+
+__all__ = ["find_pattern_mask", "find_pattern_mask_batch",
+           "find_pattern_positions", "count_matches"]
 
 
-def _prepare(buf, pattern, block: int):
-    buf = np.frombuffer(bytes(buf), dtype=np.uint8) if isinstance(
-        buf, (bytes, bytearray, memoryview)) else np.asarray(buf, np.uint8)
-    pat = np.frombuffer(bytes(pattern), dtype=np.uint8) if isinstance(
-        pattern, (bytes, bytearray, memoryview)) else np.asarray(pattern, np.uint8)
+def _as_u8(buf) -> np.ndarray:
+    if isinstance(buf, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(buf), dtype=np.uint8)
+    return np.asarray(buf, np.uint8)
+
+
+def _check_pattern(pattern) -> tuple[np.ndarray, int]:
+    pat = _as_u8(pattern)
     if not 0 < pat.size <= MAX_PATTERN:
         raise ValueError(f"pattern length must be in [1, {MAX_PATTERN}]")
-    n = buf.size
-    padded_n = max(((n + block - 1) // block) * block, block)
-    padded = np.zeros(padded_n + MAX_PATTERN, dtype=np.uint8)
-    padded[:n] = buf
     # zero-pad never false-positives: pattern bytes are non-zero in WARC use;
     # all-zero patterns are rejected to keep that invariant
     if not pat.any():
         raise ValueError("all-zero patterns are not supported")
     pad_vec = np.zeros(MAX_PATTERN, dtype=np.uint8)
     pad_vec[:pat.size] = pat
-    return jnp.asarray(padded), jnp.asarray(pad_vec), int(pat.size), n
+    return pad_vec, int(pat.size)
+
+
+def _pack(bufs: list[np.ndarray], block: int
+          ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged buffers into (B, W) plus each tile's right-edge halo."""
+    lengths = [b.size for b in bufs]
+    width = max((max(lengths) + block - 1) // block * block, block)
+    nblocks = width // block
+    # W + MAX_PATTERN scratch so every halo gather is in-bounds (zeros there)
+    ext = np.zeros((len(bufs), width + MAX_PATTERN), dtype=np.uint8)
+    for i, buf in enumerate(bufs):
+        ext[i, :buf.size] = buf
+    # halo for tile j = bytes [ (j+1)·block , (j+1)·block + MAX_PATTERN )
+    gather = ((np.arange(nblocks)[:, None] + 1) * block
+              + np.arange(MAX_PATTERN)[None, :])        # (nblocks, MP)
+    halos = ext[:, gather.reshape(-1)]                  # (B, nblocks·MP)
+    return ext[:, :width], halos
+
+
+def _trim(mask_row: np.ndarray, n: int, plen: int) -> np.ndarray:
+    out = np.array(mask_row[:n])  # own the buffer: device arrays are read-only
+    # matches that would read past the true end are padding artifacts
+    if plen > 1 and n >= plen:
+        out[n - plen + 1:] = 0
+    elif n < plen:
+        out[:] = 0
+    return out
+
+
+def find_pattern_mask_batch(bufs, pattern, *, block: int = DEFAULT_BLOCK,
+                            interpret: bool = True) -> list[np.ndarray]:
+    """uint8 match masks for a ragged batch — one kernel dispatch.
+
+    Returns one mask per input, each the same length as its buffer.
+    """
+    pat_vec, plen = _check_pattern(pattern)
+    arrs = [_as_u8(b) for b in bufs]
+    if not arrs:
+        return []
+    padded, halos = _pack(arrs, block)
+    masks = pattern_scan_batch(jnp.asarray(padded), jnp.asarray(halos),
+                               jnp.asarray(pat_vec), pat_len=plen,
+                               block=block, interpret=interpret)
+    masks = np.asarray(masks)
+    return [_trim(masks[i], arr.size, plen) for i, arr in enumerate(arrs)]
 
 
 def find_pattern_mask(buf, pattern, *, block: int = DEFAULT_BLOCK,
                       interpret: bool = True):
     """uint8 match mask (same length as ``buf``)."""
-    padded, pat_vec, plen, n = _prepare(buf, pattern, block)
-    mask = pattern_scan(padded, pat_vec, pat_len=plen, block=block,
-                        interpret=interpret)
-    mask = np.array(mask[:n])  # own the buffer: device arrays are read-only
-    # matches that would read past the true end are padding artifacts
-    if plen > 1 and n >= plen:
-        mask[n - plen + 1:] = 0
-    elif n < plen:
-        mask[:] = 0
-    return mask
+    return find_pattern_mask_batch([buf], pattern, block=block,
+                                   interpret=interpret)[0]
 
 
 def find_pattern_positions(buf, pattern, **kw) -> np.ndarray:

@@ -6,15 +6,22 @@ For a pattern ``p`` of length P, the match mask is
 
     mask[i] = AND_{j<P} (buf[i+j] == p[j])
 
-computed as P shifted uint8 compares over a VMEM-resident chunk — no
+computed as P shifted uint8 compares over a VMEM-resident tile — no
 per-byte control flow, which is the whole point: the host parser's
 per-record work becomes a handful of wide vector ops.
 
-Blocking: the buffer is processed in chunks of ``block`` bytes reshaped to
-(block // 128, 128) so the lane dimension is hardware-native. Each grid
-step loads its chunk plus a (P-1)-byte halo from the padded input (the
-wrapper pads; overlapping loads are expressed with ``pl.ds`` on a full
-VMEM ref rather than overlapping BlockSpecs, which Pallas cannot express).
+Blocking: the input is tiled with real blocked ``BlockSpec``s — grid step
+``(b, j)`` maps only its ``(1, block)`` tile into VMEM, never the whole
+buffer. Match windows crossing a tile's right edge need the next
+``P − 1`` bytes; Pallas cannot express overlapping BlockSpecs, so the
+wrapper passes an explicit **halo input**: a ``(B, nblocks·MAX_PATTERN)``
+matrix whose ``(1, MAX_PATTERN)`` tile for step ``(b, j)`` holds the
+bytes just past tile ``j``'s edge. The kernel concatenates tile + halo
+and does P shifted compares, all static.
+
+The 2D ``(B, nblocks)`` grid batches many record payloads into one
+``pallas_call`` (``find_pattern_mask_batch``): amortized dispatch is how
+a shard's worth of delimiter scans becomes a single kernel launch.
 """
 from __future__ import annotations
 
@@ -25,45 +32,49 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANES = 128
-DEFAULT_BLOCK = 64 * 1024  # 64 KiB chunk + halo + mask comfortably < VMEM
+DEFAULT_BLOCK = 64 * 1024  # 64 KiB tile + halo + mask comfortably < VMEM
 MAX_PATTERN = 16
 
 
-def _scan_kernel(buf_ref, pat_ref, mask_ref, *, block: int, pat_len: int):
-    """One grid step: compare `block` positions against the pattern."""
-    i = pl.program_id(0)
-    start = i * block
-    # P shifted block loads (the halo makes the last shift in-bounds);
-    # each is a wide VPU compare — per-byte control flow never happens
-    acc = buf_ref[pl.ds(start, block)] == pat_ref[0]
+def _scan_kernel(buf_ref, halo_ref, pat_ref, mask_ref, *,
+                 block: int, pat_len: int):
+    """One grid step: compare one (1, block) tile against the pattern."""
+    # tile plus its right halo: every window starting in the tile is in-bounds
+    ext = jnp.concatenate([buf_ref[0, :], halo_ref[0, :]])
+    # P shifted static slices — each a wide VPU compare, no per-byte control flow
+    acc = ext[0:block] == pat_ref[0]
     for j in range(1, pat_len):  # unrolled: P is static
-        acc = jnp.logical_and(
-            acc, buf_ref[pl.ds(start + j, block)] == pat_ref[j])
-    mask_ref[pl.ds(start, block)] = acc.astype(jnp.uint8)
+        acc = jnp.logical_and(acc, ext[j:j + block] == pat_ref[j])
+    mask_ref[0, :] = acc.astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("pat_len", "block", "interpret"))
-def pattern_scan(padded_buf: jax.Array, pattern_vec: jax.Array, *,
-                 pat_len: int, block: int = DEFAULT_BLOCK,
-                 interpret: bool = True) -> jax.Array:
-    """Match mask over ``padded_buf`` (uint8, padded to block + MAX_PATTERN).
+def pattern_scan_batch(padded_bufs: jax.Array, halos: jax.Array,
+                       pattern_vec: jax.Array, *, pat_len: int,
+                       block: int = DEFAULT_BLOCK,
+                       interpret: bool = True) -> jax.Array:
+    """Match mask over a padded byte matrix (one dispatch for the batch).
 
-    Returns uint8 mask of length ``padded_buf.size - MAX_PATTERN``.
-    Callers use :mod:`.ops`, which handles padding and trimming.
+    ``padded_bufs`` is ``(B, W)`` uint8 with ``W % block == 0``; ``halos``
+    is ``(B, (W // block) · MAX_PATTERN)`` holding each tile's right-edge
+    spillover (built by :mod:`.ops`). Returns a ``(B, W)`` uint8 mask.
     """
-    n = padded_buf.size - MAX_PATTERN
-    assert n % block == 0, "wrapper must pad to a block multiple"
-    grid = (n // block,)
+    nrows, width = padded_bufs.shape
+    assert width % block == 0, "wrapper must pad to a block multiple"
+    nblocks = width // block
+    assert halos.shape == (nrows, nblocks * MAX_PATTERN)
     kernel = functools.partial(_scan_kernel, block=block, pat_len=pat_len)
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        # full-array specs: the kernel slices its own (overlapping) windows
+        grid=(nrows, nblocks),
         in_specs=[
-            pl.BlockSpec(padded_buf.shape, lambda i: (0,)),
-            pl.BlockSpec(pattern_vec.shape, lambda i: (0,)),
+            # blocked specs: each step maps only its tile (+halo), never
+            # the full buffer
+            pl.BlockSpec((1, block), lambda b, j: (b, j)),
+            pl.BlockSpec((1, MAX_PATTERN), lambda b, j: (b, j)),
+            pl.BlockSpec(pattern_vec.shape, lambda b, j: (0,)),
         ],
-        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        out_specs=pl.BlockSpec((1, block), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((nrows, width), jnp.uint8),
         interpret=interpret,
-    )(padded_buf, pattern_vec)
+    )(padded_bufs, halos, pattern_vec)

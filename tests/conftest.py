@@ -1,0 +1,75 @@
+"""Test-suite bootstrap: make `hypothesis` optional.
+
+The property tests use hypothesis when it is installed; several build
+environments are offline and cannot `pip install` it. Rather than losing
+the whole modules to a collection-time ``ModuleNotFoundError`` (each one
+also carries plain pytest tests), a lightweight stub is installed into
+``sys.modules`` *before* the test modules import: strategy factories
+return inert placeholders and ``@given`` replaces the test with a
+zero-argument skipper, so everything collects and the non-property tests
+run everywhere. With real hypothesis present (see requirements-dev.txt)
+the stub is never built.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised implicitly by every test run
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _StubStrategy:
+        """Inert stand-in for a hypothesis SearchStrategy."""
+
+        def map(self, fn):
+            return self
+
+        def filter(self, fn):
+            return self
+
+        def flatmap(self, fn):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        def __repr__(self) -> str:
+            return "<stub strategy (hypothesis not installed)>"
+
+    def _strategy_factory(*args, **kwargs):
+        return _StubStrategy()
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _strategy_factory  # PEP 562
+
+    def _given(*args, **kwargs):
+        def decorate(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed; property test stubbed")
+
+            skipper.__name__ = getattr(fn, "__name__", "test_stubbed")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            return skipper
+
+        return decorate
+
+    def _settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def _assume(condition):
+        return True
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = _assume
+    _hyp.example = _settings  # same identity-decorator shape
+    _hyp.strategies = _st
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

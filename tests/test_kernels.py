@@ -90,6 +90,104 @@ def test_adler32_block_size_invariance():
 
 
 # --------------------------------------------------------------------------
+# batched dispatch (one gridded pallas_call for a ragged payload batch)
+# --------------------------------------------------------------------------
+
+def _ragged_payloads(seed, sizes):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, size=s, dtype=np.uint8).tobytes()
+            for s in sizes]
+
+
+def test_adler32_batch_matches_zlib_ragged():
+    from repro.kernels.adler32 import adler32_batch
+    payloads = _ragged_payloads(0, [0, 1, 7, 100, 2048, 2049, 5000, 65_537])
+    got = adler32_batch(payloads, block=1024)
+    assert got.dtype == np.uint32 and got.shape == (len(payloads),)
+    for checksum, p in zip(got, payloads):
+        assert int(checksum) == (zlib.adler32(p) & 0xFFFFFFFF)
+
+
+def test_adler32_batch_empty_and_singleton():
+    from repro.kernels.adler32 import adler32_batch
+    assert adler32_batch([]).shape == (0,)
+    data = b"warc record payload"
+    assert int(adler32_batch([data])[0]) == (zlib.adler32(data) & 0xFFFFFFFF)
+
+
+def test_adler32_batch_skewed_widths_bucketed():
+    # one giant outlier must not inflate every row's padding; results
+    # stay exact across the width buckets
+    from repro.kernels.adler32 import adler32_batch
+    payloads = _ragged_payloads(5, [100] * 6 + [300_000] + [2048] * 3)
+    got = adler32_batch(payloads, block=2048)
+    for checksum, p in zip(got, payloads):
+        assert int(checksum) == (zlib.adler32(p) & 0xFFFFFFFF)
+
+
+def test_verify_digest_malformed_value_is_false():
+    from repro.core.warc.checksum import verify_digest, verify_digests_bulk
+    data = b"payload"
+    for header in ("adler32:zzzz", "crc32:not-hex", "adler32:"):
+        assert verify_digest(data, header) is False
+        assert verify_digests_bulk([data], [header]) == [False]
+        assert verify_digests_bulk([data], [header],
+                                   use_kernel=False) == [False]
+
+
+def test_adler32_batch_matches_looped_single():
+    from repro.kernels.adler32 import adler32_batch
+    payloads = _ragged_payloads(7, [513, 1, 4096, 2047])
+    batched = adler32_batch(payloads, block=512)
+    looped = [adler32(p, block=512) for p in payloads]
+    assert [int(c) for c in batched] == looped
+
+
+def test_pattern_scan_batch_matches_single_and_ref():
+    from repro.kernels.pattern_scan import find_pattern_mask_batch
+    pattern = b"\r\n\r\n"
+    bufs = _ragged_payloads(11, [0, 3, 512, 1025, 70_000])
+    bufs.append(b"x\r\n\r\ny" * 200)
+    masks = find_pattern_mask_batch(bufs, pattern, block=1024)
+    assert len(masks) == len(bufs)
+    for mask, buf in zip(masks, bufs):
+        assert mask.shape == (len(buf),)
+        single = find_pattern_mask(buf, pattern, block=1024)
+        np.testing.assert_array_equal(mask, single)
+        ref = np.asarray(pattern_mask_ref(
+            np.frombuffer(buf, np.uint8), np.frombuffer(pattern, np.uint8)))
+        np.testing.assert_array_equal(mask, ref[:len(mask)])
+
+
+def test_pattern_scan_batch_cross_tile_matches():
+    # matches straddling tile boundaries exercise the explicit halo input
+    from repro.kernels.pattern_scan import find_pattern_mask_batch
+    block = 256
+    buf = bytearray(4 * block)
+    for pos in (block - 1, block - 3, 2 * block - 2, 3 * block - 1):
+        buf[pos:pos + 4] = b"ABCD"
+    masks = find_pattern_mask_batch([bytes(buf)], b"ABCD", block=block)
+    assert sorted(np.flatnonzero(masks[0]).tolist()) == [
+        block - 3, 2 * block - 2, 3 * block - 1]
+
+
+def test_verify_digests_bulk_mixed_algos():
+    from repro.core.warc.checksum import block_digest, verify_digests_bulk
+    payloads = _ragged_payloads(3, [10, 999, 2048, 0, 4097])
+    headers = [block_digest(p, algo) for p, algo in zip(
+        payloads, ["adler32", "sha1", "adler32", "crc32", "adler32"])]
+    assert verify_digests_bulk(payloads, headers) == [True] * len(payloads)
+    # corrupt one adler32 payload and one sha1 payload
+    bad = list(payloads)
+    bad[2] = bad[2][:-1] + bytes([bad[2][-1] ^ 0xFF])
+    bad[1] = b"tampered" + bad[1]
+    got = verify_digests_bulk(bad, headers)
+    assert got == [True, False, False, True, True]
+    # kernel-free fallback agrees
+    assert verify_digests_bulk(bad, headers, use_kernel=False) == got
+
+
+# --------------------------------------------------------------------------
 # flash attention
 # --------------------------------------------------------------------------
 

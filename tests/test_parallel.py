@@ -1,0 +1,289 @@
+"""Process-parallel ingestion engine tests (repro.core.parallel).
+
+Equivalence is the contract everywhere: the parallel paths must produce
+exactly the serial results — same document multiset (same *sequence* in
+ordered mode), identical web-graph edges after the host-id remerge, and
+bit-identical loader batches/cursors with ``workers=N``.
+"""
+import functools
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.parallel import (
+    ParallelWarcPool,
+    ParallelWorkerError,
+    iter_documents_parallel,
+    map_shards,
+)
+from repro.core.pipeline import (
+    iter_documents,
+    merge_web_graphs,
+    web_graph_from_warc,
+    web_graph_from_warcs,
+)
+from repro.data.loader import WarcTokenLoader
+from repro.data.synth import CorpusSpec, write_corpus
+
+
+@pytest.fixture(scope="module")
+def shards(tmp_path_factory):
+    d = tmp_path_factory.mktemp("shards")
+    paths = []
+    for i in range(4):
+        p = str(d / f"s{i}.warc.gz")
+        write_corpus(p, CorpusSpec(n_pages=12, seed=100 + i), "gzip")
+        paths.append(p)
+    return paths
+
+
+def _doc_key(doc):
+    return (doc.uri, bytes(doc.text), doc.record_offset)
+
+
+# --------------------------------------------------------------------------
+# ParallelWarcPool
+# --------------------------------------------------------------------------
+
+def _squares(n):
+    for i in range(n):
+        yield (n, i * i)
+
+
+def _boom(n):
+    if n == 3:
+        raise ValueError("shard 3 is corrupt")
+    yield n
+
+
+def test_pool_ordered_matches_serial_sequence():
+    items = [5, 1, 4, 2, 3]
+    expect = [out for n in items for out in _squares(n)]
+    with ParallelWarcPool(_squares, workers=3, chunk_size=2) as pool:
+        got = list(pool.iter_results(items, ordered=True))
+    assert got == expect
+
+
+def test_pool_unordered_matches_serial_multiset():
+    items = [6, 2, 5, 1, 4]
+    expect = sorted(out for n in items for out in _squares(n))
+    with ParallelWarcPool(_squares, workers=4) as pool:
+        got = sorted(pool.iter_results(items, ordered=False))
+    assert got == expect
+
+
+def test_pool_event_stream_shape():
+    with ParallelWarcPool(_squares, workers=2, chunk_size=3) as pool:
+        events = list(pool.iter_events([4, 2], ordered=True))
+    # every shard terminates with ("done", idx, produced), in index order
+    dones = [e for e in events if e[0] == "done"]
+    assert [(e[1], e[2]) for e in dones] == [(0, 4), (1, 2)]
+    # chunks for shard 1 never precede shard 0's done in ordered mode
+    assert events.index(dones[0]) < min(
+        i for i, e in enumerate(events) if e[1] == 1)
+
+
+def test_pool_worker_error_propagates():
+    with ParallelWarcPool(_boom, workers=2) as pool:
+        with pytest.raises(ParallelWorkerError, match="shard 3 is corrupt"):
+            list(pool.iter_results([1, 2, 3, 4], ordered=True))
+
+
+def test_pool_single_use():
+    pool = ParallelWarcPool(_squares, workers=1)
+    try:
+        list(pool.iter_results([1]))
+        with pytest.raises(RuntimeError, match="already consumed"):
+            list(pool.iter_results([2]))
+    finally:
+        pool.close()
+
+
+def _sleepy_squares(n):
+    if n == 7:
+        import time
+        time.sleep(0.3)  # slow shard holds the ordered cursor
+    yield from ((n, i * i) for i in range(n))
+
+
+def test_pool_ordered_slow_head_stays_exact_and_windowed():
+    # item 0 is slow: the feeder must wait for the consumer's cursor
+    # (bounded pending) and the output must still be exactly serial
+    items = [7] + list(range(1, 20))
+    expect = [out for n in items for out in _sleepy_squares(n)]
+    with ParallelWarcPool(_sleepy_squares, workers=4) as pool:
+        assert pool._window is None
+        got = list(pool.iter_results(items, ordered=True))
+        assert pool._window == 2 * pool.workers + 2
+    assert got == expect
+
+
+def test_pool_feed_iterable_error_propagates():
+    def bad_paths():
+        yield 2
+        yield 1
+        raise OSError("shard listing failed")
+
+    with ParallelWarcPool(_squares, workers=2) as pool:
+        with pytest.raises(ParallelWorkerError, match="shard listing failed"):
+            list(pool.iter_results(bad_paths(), ordered=True))
+
+
+def test_pool_close_is_idempotent_and_early():
+    pool = ParallelWarcPool(_squares, workers=2)
+    it = pool.iter_results(range(100), ordered=True)
+    next(it)  # abandon mid-stream
+    pool.close()
+    pool.close()
+    assert not any(p.is_alive() for p in pool._procs)
+
+
+# --------------------------------------------------------------------------
+# iter_documents_parallel
+# --------------------------------------------------------------------------
+
+def test_parallel_documents_match_serial_multiset(shards):
+    serial = [_doc_key(d) for p in shards for d in iter_documents(p)]
+    par = [_doc_key(d)
+           for d in iter_documents_parallel(shards, workers=2)]
+    assert sorted(par) == sorted(serial)
+    assert len(par) == len(serial)
+
+
+def test_parallel_documents_ordered_exact(shards):
+    serial = [_doc_key(d) for p in shards for d in iter_documents(p)]
+    par = [_doc_key(d)
+           for d in iter_documents_parallel(shards, workers=3, ordered=True)]
+    assert par == serial
+
+
+def test_parallel_documents_workers0_is_serial(shards):
+    serial = [_doc_key(d) for p in shards for d in iter_documents(p)]
+    par = [_doc_key(d) for d in iter_documents_parallel(shards, workers=0)]
+    assert par == serial
+
+
+def test_parallel_documents_filter_options(shards):
+    serial = [_doc_key(d) for p in shards
+              for d in iter_documents(p, min_length=512)]
+    par = [_doc_key(d) for d in iter_documents_parallel(
+        shards, workers=2, ordered=True, min_length=512)]
+    assert par == serial
+
+
+# --------------------------------------------------------------------------
+# map_shards / web-graph map-reduce
+# --------------------------------------------------------------------------
+
+def _plus_one(x):
+    return x + 1
+
+
+def test_map_shards_preserves_order():
+    assert map_shards(_plus_one, range(20), workers=3) == list(range(1, 21))
+    assert map_shards(_plus_one, range(5), workers=0) == list(range(1, 6))
+
+
+def test_web_graph_map_reduce_equivalence(shards):
+    serial = merge_web_graphs([web_graph_from_warc(p) for p in shards])
+    for workers in (0, 2):
+        g = web_graph_from_warcs(shards, workers=workers)
+        assert g["hosts"] == serial["hosts"]
+        np.testing.assert_array_equal(g["edge_src"], serial["edge_src"])
+        np.testing.assert_array_equal(g["edge_dst"], serial["edge_dst"])
+
+
+def test_merge_web_graphs_remaps_local_ids():
+    a = {"hosts": ["x.test", "y.test"],
+         "edge_src": np.array([0, 1], np.int32),
+         "edge_dst": np.array([1, 0], np.int32)}
+    b = {"hosts": ["y.test", "z.test"],       # y.test is local id 0 here
+         "edge_src": np.array([0], np.int32),
+         "edge_dst": np.array([1], np.int32)}
+    g = merge_web_graphs([a, b])
+    assert g["hosts"] == ["x.test", "y.test", "z.test"]
+    np.testing.assert_array_equal(g["edge_src"], [0, 1, 1])
+    np.testing.assert_array_equal(g["edge_dst"], [1, 0, 2])
+
+
+def test_merge_web_graphs_empty():
+    g = merge_web_graphs([])
+    assert g["hosts"] == [] and g["edge_src"].size == 0
+
+
+# --------------------------------------------------------------------------
+# WarcTokenLoader workers= mode
+# --------------------------------------------------------------------------
+
+def test_loader_parallel_matches_serial(shards):
+    serial = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0)
+    par = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0,
+                          workers=2)
+    s = [b.copy() for _, b in zip(range(8), serial.batches())]
+    p = [b.copy() for _, b in zip(range(8), par.batches())]
+    par.close()
+    for a, b in zip(s, p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_loader_parallel_one_epoch(shards):
+    serial = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0,
+                             loop=False)
+    par = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0,
+                          loop=False, workers=2)
+    s = [b.copy() for b in serial.batches()]
+    p = [b.copy() for b in par.batches()]
+    assert len(s) == len(p)
+    for a, b in zip(s, p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_loader_parallel_exact_resume(shards):
+    l1 = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0, workers=2)
+    g1 = l1.batches()
+    for _ in range(5):
+        next(g1)
+    snap = l1.state()
+    expect = [next(g1).copy() for _ in range(3)]
+    g1.close()
+    l1.close()
+    # resume into the parallel path AND into the serial path: same batches
+    for workers in (2, 0):
+        l2 = WarcTokenLoader(shards, batch=4, seq_len=128, prefetch=0,
+                             workers=workers)
+        l2.restore(snap)
+        g2 = l2.batches()
+        got = [next(g2).copy() for _ in range(3)]
+        g2.close()
+        l2.close()
+        for a, b in zip(expect, got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_loader_parallel_prefetch_close_joins(shards):
+    loader = WarcTokenLoader(shards, batch=4, seq_len=64, prefetch=2,
+                             workers=2)
+    it = iter(loader)
+    next(it)
+    loader.close()
+    assert loader._thread is None
+    assert loader._pool is None
+
+
+def test_loader_close_returns_while_producer_starved(shards):
+    import time
+    # min_doc_len filters out every document: batches() loops shards
+    # forever without yielding, so close() must interrupt mid-parse
+    # rather than wait for a batch that will never come
+    loader = WarcTokenLoader(shards, batch=4, seq_len=64, prefetch=1,
+                             min_doc_len=10 ** 9)
+    it = iter(loader)
+    t = threading.Thread(target=lambda: next(it, None), daemon=True)
+    t.start()
+    time.sleep(0.3)  # let the producer get deep into fruitless parsing
+    t0 = time.monotonic()
+    loader.close()
+    assert time.monotonic() - t0 < 5.0
+    assert loader._thread is None

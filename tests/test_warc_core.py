@@ -20,6 +20,16 @@ from repro.core.warc.streams import GZipStream, LZ4Stream
 from repro.core.warc.xxh32 import xxh32
 from repro.data.synth import CorpusSpec, generate_warc, records_in
 
+try:
+    import zstandard  # noqa: F401
+    _HAS_ZSTD = True
+except ImportError:  # optional codec; container images vary
+    _HAS_ZSTD = False
+
+_ZSTD_PARAM = pytest.param(
+    "zstd", marks=pytest.mark.skipif(not _HAS_ZSTD,
+                                     reason="zstandard not installed"))
+
 
 # --------------------------------------------------------------------------
 # xxh32 / LZ4 codec
@@ -174,7 +184,7 @@ def test_record_lazy_headers_and_fields():
     assert rec.http_payload == b"body"
 
 
-@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", "zstd"])
+@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", _ZSTD_PARAM])
 def test_iterator_all_compressions(compression):
     spec = CorpusSpec(n_pages=40, seed=7)
     data = generate_warc(spec, compression)
@@ -189,7 +199,7 @@ def test_iterator_all_compressions(compression):
         assert r.http_payload.startswith(b"<!doctype html>")
 
 
-@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", "zstd"])
+@pytest.mark.parametrize("compression", ["none", "gzip", "lz4", _ZSTD_PARAM])
 def test_record_type_filtering_and_skip_count(compression):
     spec = CorpusSpec(n_pages=25, seed=3)
     data = generate_warc(spec, compression)
@@ -271,7 +281,8 @@ def test_digest_roundtrip():
 
 
 def test_writer_roundtrip_all_compressions(tmp_path):
-    for compression in ("none", "gzip", "lz4", "zstd"):
+    compressions = ["none", "gzip", "lz4"] + (["zstd"] if _HAS_ZSTD else [])
+    for compression in compressions:
         sink = io.BytesIO()
         w = WarcWriter(sink, compression)
         w.write_warcinfo()
@@ -297,3 +308,61 @@ def test_recompress_gzip_to_lz4(tmp_path):
     assert orig == out
     # paper: LZ4 costs ~30-40 % more storage than gzip (direction check)
     assert stats["size_ratio"] > 1.0
+
+
+# --------------------------------------------------------------------------
+# absolute stream offsets & resource lifecycle
+# --------------------------------------------------------------------------
+
+def test_stream_offsets_absolute_past_compact_rebase():
+    """Offsets must stay absolute after the 8 MiB buffer rebase.
+
+    Regression: `_iter_uncompressed` compacts its buffer (`buf = buf[pos:]`)
+    once the consumed prefix exceeds `_COMPACT_THRESHOLD`; the position
+    handed to `_finalize` is buffer-relative, so without a base-offset
+    correction every record past 8 MiB reported a wrong `stream_offset`.
+    """
+    payload = b"HTTP/1.1 200 OK\r\n\r\n" + b"x" * (1536 * 1024)
+    blob = bytearray()
+    offsets = []
+    for i in range(8):  # ~12 MiB total, crosses the threshold mid-file
+        offsets.append(len(blob))
+        blob += serialize_record("response", payload,
+                                 {"Content-Type": "application/http",
+                                  "WARC-Target-URI": f"https://t/{i}"})
+    assert len(blob) > 10 * 1024 * 1024
+    got = [r.stream_offset for r in FastWARCIterator(bytes(blob))]
+    assert got == offsets
+    # and the offsets are seekable: re-parse single records from each
+    tail = FastWARCIterator(bytes(blob[offsets[-1]:]))
+    assert next(iter(tail)).target_uri == "https://t/7"
+
+
+def test_iterator_closes_owned_file(tmp_path):
+    p = tmp_path / "a.warc"
+    p.write_bytes(serialize_record("resource", b"data"))
+    it = FastWARCIterator(str(p))
+    assert list(it)  # exhaustion closes the fd the iterator opened
+    assert it.closed
+    assert list(it) == []  # re-iteration reads as EOF, not a closed-fd error
+    # context-manager form closes even without exhaustion
+    with FastWARCIterator(str(p)) as it2:
+        pass
+    assert it2.closed
+    # early generator teardown also releases the fd
+    p2 = tmp_path / "two.warc"
+    p2.write_bytes(serialize_record("resource", b"one")
+                   + serialize_record("resource", b"two"))
+    it3 = FastWARCIterator(str(p2))
+    gen = iter(it3)
+    next(gen)           # mid-stream: one record still unread
+    gen.close()
+    assert it3.closed
+
+
+def test_iterator_does_not_close_caller_file(tmp_path):
+    p = tmp_path / "b.warc"
+    p.write_bytes(serialize_record("resource", b"data"))
+    with open(p, "rb") as f:
+        list(FastWARCIterator(f))
+        assert not f.closed  # caller-owned handles are left alone
