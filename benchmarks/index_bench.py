@@ -1,0 +1,133 @@
+"""Index-subsystem benchmarks: build throughput, random access, query speedup.
+
+Three claims measured, not asserted (ISSUE 2 acceptance criteria):
+
+* **build** — CDX index build throughput (records/s) over a sharded
+  synthetic gzip corpus, serial vs `map_shards` fan-out, plus index
+  compactness (bytes per record).
+* **random access** — mean per-lookup latency of
+  `RandomAccessReader.read(offset)` (one seek + one member decode + one
+  parse) vs *sequential scan-to-offset* (iterate from the shard head
+  until the target offset) over offsets sampled across one shard. This
+  is the paper's constant-time-random-access claim, quantified; target
+  ≥10× on this corpus.
+* **query** — indexed pattern search (signature pre-filter + batched
+  `find_pattern_mask_batch` dispatches) vs full-scan decompress+search
+  of every record, for a selective pattern (present in few records) and
+  a miss pattern (absent: the pre-filter's best case). Dispatch counts
+  are reported so "batched, not per-record" is checkable in the JSON.
+
+Scale with REPRO_BENCH_PAGES (default 400, split across 8 shards).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.warc import FastWARCIterator
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import QueryEngine, RandomAccessReader, build_index, \
+    full_scan_search
+
+_PAGES = int(os.environ.get("REPRO_BENCH_PAGES", "400"))
+_N_SHARDS = 8
+_N_LOOKUPS = 12
+_HIT_PATTERN = b"nginx/1.17"       # ~1/16 of response records
+_MISS_PATTERN = b"absent-needle!"  # pre-filter's best case
+
+
+def _best_s(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _scan_to_offset(path: str, offset: int):
+    """Baseline: parse records from the shard head until ``offset``."""
+    for record in FastWARCIterator(path, parse_http=False):
+        if record.stream_offset == offset:
+            record.content  # materialize, same work as the seek path
+            return record
+    raise ValueError(f"offset {offset} not found in {path}")
+
+
+def run(quiet: bool = False) -> list[str]:
+    rows = [f"index,env,host,cpu_count,{os.cpu_count()}"]
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        for i in range(_N_SHARDS):
+            p = os.path.join(d, f"s{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=_PAGES // _N_SHARDS, seed=i),
+                         "gzip")
+            paths.append(p)
+
+        # -- build throughput + compactness -----------------------------
+        t = _best_s(lambda: build_index(paths), reps=2)
+        index = build_index(paths)
+        rows.append(f"index,build,serial,records_per_s,{len(index) / t:.1f}")
+        t2 = _best_s(lambda: build_index(paths, workers=2), reps=2)
+        rows.append(f"index,build,workers2,records_per_s,"
+                    f"{len(index) / t2:.1f}")
+        cdx_path = os.path.join(d, "corpus.cdx")
+        nbytes = index.save(cdx_path)
+        rows.append(f"index,build,size,bytes_per_record,"
+                    f"{nbytes / max(len(index), 1):.1f}")
+
+        # -- random access vs sequential scan-to-offset ------------------
+        shard_rows = np.flatnonzero(index.shard_id == 0)
+        rng = np.random.default_rng(0)
+        sample = rng.choice(shard_rows, size=min(_N_LOOKUPS, shard_rows.size),
+                            replace=False)
+        offsets = [int(index.offset[i]) for i in sample]
+        with RandomAccessReader(paths[0], parse_http=False) as reader:
+            t_seek = _best_s(
+                lambda: [reader.read(o) for o in offsets]) / len(offsets)
+        t_scan = _best_s(
+            lambda: [_scan_to_offset(paths[0], o) for o in offsets],
+            reps=2) / len(offsets)
+        rows.append(f"index,random_access,seek,us_per_lookup,"
+                    f"{t_seek * 1e6:.0f}")
+        rows.append(f"index,random_access,scan,us_per_lookup,"
+                    f"{t_scan * 1e6:.0f}")
+        rows.append(f"index,random_access,seek,speedup,"
+                    f"{t_scan / t_seek:.2f}")
+
+        # -- indexed query vs full-scan decompress+search -----------------
+        t_full_hit = _best_s(lambda: full_scan_search(paths, _HIT_PATTERN),
+                             reps=2)
+        t_full_miss = _best_s(lambda: full_scan_search(paths, _MISS_PATTERN),
+                              reps=2)
+        engine = QueryEngine(index)
+        engine.search(_HIT_PATTERN)  # warm: compile kernel shapes, open fds
+        for name, pattern, t_full in (
+                ("hit", _HIT_PATTERN, t_full_hit),
+                ("miss", _MISS_PATTERN, t_full_miss)):
+            t_idx = _best_s(lambda: engine.search(pattern))
+            rows.append(f"index,query,fullscan_{name},ms,{t_full * 1e3:.1f}")
+            rows.append(f"index,query,indexed_{name},ms,{t_idx * 1e3:.1f}")
+            rows.append(f"index,query,indexed_{name},speedup,"
+                        f"{t_full / t_idx:.2f}")
+        stats = engine.stats
+        n_queries = max(stats["queries"], 1)
+        rows.append(f"index,query,per_query,records_scanned,"
+                    f"{stats['records_scanned'] / n_queries:.1f}")
+        rows.append(f"index,query,per_query,kernel_dispatches,"
+                    f"{stats['kernel_dispatches'] / n_queries:.2f}")
+        rows.append(f"index,query,corpus,records,{len(index)}")
+        engine.close()
+
+    if not quiet:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

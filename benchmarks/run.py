@@ -7,10 +7,14 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                Common-Crawl hours-saved projections;
   * kernels  — Pallas kernel micro-benches (interpret mode);
   * parallel — multi-worker shard fan-out scaling + batched-vs-looped
-               kernel dispatch (benchmarks/parallel_bench.py).
+               kernel dispatch (benchmarks/parallel_bench.py);
+  * index    — CDX build throughput, random-access vs sequential
+               scan-to-offset, indexed-query vs full-scan speedup
+               (benchmarks/index_bench.py).
 
-``--json`` additionally writes ``BENCH_pipeline.json`` (all rows as
-records plus a throughput summary) so the perf trajectory is tracked
+``--json`` additionally writes ``BENCH_pipeline.json`` (all non-index
+rows as records plus a throughput summary) and — when the index section
+ran — ``BENCH_index.json``, so each perf trajectory is tracked
 machine-readably across PRs. ``--sections a,b`` restricts the run.
 
 Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 elsewhere).
@@ -21,8 +25,9 @@ import argparse
 import json
 import os
 
-_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_pipeline.json")
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_pipeline.json")
+_INDEX_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_index.json")
 
 
 def _parse_row(line: str) -> dict:
@@ -55,11 +60,12 @@ def main(argv: list[str] | None = None) -> None:
     # parallel runs before kernels on purpose: its worker-scaling pass
     # forks, and forking before JAX spins up its thread pools is both
     # safer and fairer on small hosts
-    ap.add_argument("--sections", default="table1,pipeline,parallel,kernels",
+    ap.add_argument("--sections",
+                    default="table1,pipeline,parallel,index,kernels",
                     help="comma-separated subset of sections to run")
     args = ap.parse_args(argv)
     sections = [s.strip() for s in args.sections.split(",") if s.strip()]
-    known = {"table1", "pipeline", "kernels", "parallel"}
+    known = {"table1", "pipeline", "kernels", "parallel", "index"}
     unknown = [s for s in sections if s not in known]
     if unknown:
         ap.error(f"unknown sections {unknown}; choose from {sorted(known)}")
@@ -87,7 +93,8 @@ def main(argv: list[str] | None = None) -> None:
         return importlib.import_module(f"benchmarks.{name}_bench")
 
     section_mods = {"pipeline": "pipeline", "kernels": "kernel",
-                    "parallel": "parallel"}
+                    "parallel": "parallel", "index": "index"}
+    index_lines: list[str] = []
     for name in sections:
         if name not in section_mods:
             continue
@@ -95,16 +102,28 @@ def main(argv: list[str] | None = None) -> None:
         for line in rows:
             print(line)
         print()
-        lines.extend(rows)
+        # index rows track their own trajectory file (BENCH_index.json);
+        # mixing them into BENCH_pipeline.json would let an index-only
+        # run clobber the pipeline history
+        (index_lines if name == "index" else lines).extend(rows)
 
     if args.json:
-        records = [_parse_row(line) for line in lines]
-        payload = {"bench": "pipeline", "sections": sections,
-                   "rows": records, "summary": _summary(records)}
-        with open(_JSON_PATH, "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
-        print(f"wrote {_JSON_PATH}")
+
+        def _write(path: str, bench: str, rows: list[str],
+                   ran: list[str]) -> None:
+            records = [_parse_row(line) for line in rows]
+            payload = {"bench": bench, "sections": ran,
+                       "rows": records, "summary": _summary(records)}
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"wrote {path}")
+
+        non_index = [s for s in sections if s != "index"]
+        if non_index:
+            _write(_JSON_PATH, "pipeline", lines, non_index)
+        if index_lines:
+            _write(_INDEX_JSON_PATH, "index", index_lines, ["index"])
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ from .record import (
     WarcRecord,
     WarcRecordType,
 )
-from .fastwarc import FastWARCIterator, parse_header_block
+from .fastwarc import FastWARCIterator, parse_header_block, read_record_at
 from .warcio_ref import BaselineRecord, WARCIOArchiveIterator
 from .writer import WarcWriter, recompress, serialize_record
 from .checksum import block_digest, verify_digest, verify_digests_bulk
@@ -31,6 +31,7 @@ __all__ = [
     "block_digest",
     "lz4",
     "parse_header_block",
+    "read_record_at",
     "recompress",
     "serialize_record",
     "streams",

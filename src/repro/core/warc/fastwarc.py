@@ -309,6 +309,16 @@ class FastWARCIterator:
             if record is not None:
                 yield record
 
+    def read_one(self) -> WarcRecord | None:
+        """Parse and return the next record only (random-access support).
+
+        Used by :class:`repro.index.cdx.RandomAccessReader`: position the
+        underlying file at a record boundary (a CDX offset), construct the
+        iterator, call ``read_one()`` — exactly one member is decompressed
+        and one record parsed; the rest of the archive is never touched.
+        """
+        return next(iter(self), None)
+
     def _record_from_member(self, data: bytes, offset: int) -> WarcRecord | None:
         if not data.startswith(WARC_MAGIC):
             start = data.find(WARC_MAGIC)
@@ -328,3 +338,29 @@ class FastWARCIterator:
         body_start = hdr_end + 4
         content = memoryview(data)[body_start:body_start + clen]
         return self._finalize(header_block, type_value, content, offset)
+
+
+def read_record_at(source: BinaryIO, offset: int, *,
+                   parse_http: bool = True,
+                   verify_digests: bool = False) -> WarcRecord | None:
+    """Parse exactly one record at absolute ``offset`` in ``source``.
+
+    ``source`` must be a seekable file object over the *addressable*
+    stream: the compressed file for gzip/LZ4 members, the raw file for
+    uncompressed WARCs (zstd has no cheap member boundaries — callers
+    decompress first; see ``streams.ZstdStream``). This is the paper's
+    "constant-time random access" claim made executable: cost is one
+    seek + one member decode + one record parse, independent of archive
+    size. The returned record's ``stream_offset`` is rebased to the
+    absolute ``offset``.
+    """
+    source.seek(offset)
+    it = FastWARCIterator(source, parse_http=parse_http,
+                          verify_digests=verify_digests)
+    record = it.read_one()
+    if record is not None:
+        # content may be a zero-copy view into the iterator's buffer;
+        # materialize so the record outlives the abandoned iterator
+        record.content  # noqa: B018 - property materializes the memoryview
+        record.stream_offset = offset
+    return record

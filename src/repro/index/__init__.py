@@ -1,0 +1,45 @@
+"""``repro.index`` — CDX-style record index + archive query engine.
+
+The subsystem that makes the paper's "constant-time random access"
+claim executable at corpus scale (DESIGN.md §7):
+
+* :mod:`.cdx` — binary columnar CDX index (build / merge / save / load)
+  and :class:`RandomAccessReader` (one seek + one member decode + one
+  record parse per lookup);
+* :mod:`.signature` — per-record n-gram Bloom-style bitmaps, the
+  decompress-avoidance pre-filter;
+* :mod:`.query` — header-predicate + payload-pattern queries, candidate
+  payloads scanned in batched ``find_pattern_mask_batch`` dispatches;
+* :mod:`.service` — request-queue serving front end with ranked hits.
+
+>>> from repro.index import build_index, QueryEngine, HeaderFilter
+>>> index = build_index(["crawl-00.warc.gz"], workers=2)
+>>> with QueryEngine(index) as engine:
+...     hits = engine.search(b"archive", HeaderFilter(status=200))
+"""
+from .cdx import (
+    CdxEntry,
+    CdxIndex,
+    RandomAccessReader,
+    build_index,
+    verify_index,
+)
+from .query import HeaderFilter, PatternHit, QueryEngine, full_scan_search
+from .service import IndexQueryService, QueryRequest, QueryResponse
+from . import signature
+
+__all__ = [
+    "CdxEntry",
+    "CdxIndex",
+    "HeaderFilter",
+    "IndexQueryService",
+    "PatternHit",
+    "QueryEngine",
+    "QueryRequest",
+    "QueryResponse",
+    "RandomAccessReader",
+    "build_index",
+    "full_scan_search",
+    "signature",
+    "verify_index",
+]

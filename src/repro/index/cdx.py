@@ -1,0 +1,454 @@
+"""CDX-style record index: build, merge, persist, random-access (DESIGN.md §7).
+
+The paper's record-level compression "allows for constant-time random
+access to all kinds of web data" — this module is the subsystem that
+exercises the claim. An archive (or a sharded corpus) is swept **once**
+with the optimized parser and every record's location and metadata are
+captured into a compact binary *columnar* index:
+
+    shard_id · offset · comp_len · uncomp_len · type · status ·
+    uri · mime · adler32 digest · n-gram signature bitmap
+
+Columns are numpy arrays (header predicates evaluate as vector compares
+over the whole corpus, see :mod:`repro.index.query`); URIs/MIMEs live in
+shared byte heaps addressed by offset columns, and the per-record
+Bloom-style signature (:mod:`repro.index.signature`) lets pattern
+queries skip decompression of records that cannot match.
+
+Building fans out per shard through :func:`repro.core.parallel.map_shards`
+(one picklable partial per shard, merged deterministically in shard
+order); :class:`RandomAccessReader` then opens a shard at an indexed
+offset and parses exactly one record — one seek, one member decode, one
+record parse, independent of archive size. ``offset`` is the absolute
+position in the *addressable* stream: the compressed file for gzip/LZ4
+members, the raw file for uncompressed WARCs, and the decompressed
+stream for zstd (which has no cheap compressed-domain member boundaries;
+its reader decompresses once and then seeks in memory).
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.warc.fastwarc import FastWARCIterator, read_record_at
+from repro.core.warc.record import (
+    RECORD_TYPE_FROM_VALUE,
+    UNKNOWN_TYPE_VALUE,
+    WarcRecord,
+    WarcRecordType,
+)
+from repro.core.warc.streams import ZstdStream, detect_compression
+from .signature import SIG_BITS, SIG_HASHES, SIG_NGRAM, signature_of
+
+__all__ = [
+    "CdxEntry",
+    "CdxIndex",
+    "RandomAccessReader",
+    "build_index",
+    "verify_index",
+]
+
+_MAGIC = b"REPROCDX"
+_VERSION = 1
+_KIND_CODES = {"none": 0, "gzip": 1, "lz4": 2, "zstd": 3}
+_KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+
+
+@dataclass
+class CdxEntry:
+    """One materialized index row (columnar storage is the truth)."""
+
+    shard: str
+    kind: str
+    offset: int
+    comp_len: int
+    uncomp_len: int
+    record_type: WarcRecordType
+    status: int            # HTTP status, -1 when not an HTTP record
+    uri: bytes
+    mime: bytes
+    digest: int            # adler32 of the record content block
+
+    @property
+    def digest_header(self) -> str:
+        """WARC digest-header notation (``verify_digests_bulk`` input)."""
+        return f"adler32:{self.digest:08x}"
+
+
+class CdxIndex:
+    """Columnar CDX index over one or many WARC shards."""
+
+    def __init__(self, shard_paths: list[str], shard_kinds: list[str],
+                 columns: dict[str, np.ndarray],
+                 uri_heap: bytes, mime_heap: bytes,
+                 *, sig_bits: int = SIG_BITS, sig_ngram: int = SIG_NGRAM,
+                 sig_hashes: int = SIG_HASHES) -> None:
+        self.shard_paths = list(shard_paths)
+        self.shard_kinds = list(shard_kinds)
+        self.shard_id = columns["shard_id"]
+        self.offset = columns["offset"]
+        self.comp_len = columns["comp_len"]
+        self.uncomp_len = columns["uncomp_len"]
+        self.rtype = columns["rtype"]
+        self.status = columns["status"]
+        self.digest = columns["digest"]
+        self.signatures = columns["signatures"]
+        self.uri_off = columns["uri_off"]
+        self.mime_off = columns["mime_off"]
+        self.uri_heap = uri_heap
+        self.mime_heap = mime_heap
+        self.sig_bits = sig_bits
+        self.sig_ngram = sig_ngram
+        self.sig_hashes = sig_hashes
+        self._uris: np.ndarray | None = None
+        self._mimes: np.ndarray | None = None
+
+    # -- access ----------------------------------------------------------
+    def __len__(self) -> int:
+        return int(self.offset.size)
+
+    def uri(self, i: int) -> bytes:
+        return self.uri_heap[self.uri_off[i]:self.uri_off[i + 1]]
+
+    def mime(self, i: int) -> bytes:
+        return self.mime_heap[self.mime_off[i]:self.mime_off[i + 1]]
+
+    def uris(self) -> np.ndarray:
+        """Fixed-width bytes array of URIs (built once; the query
+        engine's URL-prefix predicate is a ``np.char`` vector compare)."""
+        if self._uris is None:
+            self._uris = np.array(
+                [self.uri(i) for i in range(len(self))], dtype=np.bytes_)
+        return self._uris
+
+    def mimes(self) -> np.ndarray:
+        """Fixed-width bytes array of MIME values (vector prefix filters)."""
+        if self._mimes is None:
+            self._mimes = np.array(
+                [self.mime(i) for i in range(len(self))], dtype=np.bytes_)
+        return self._mimes
+
+    def entry(self, i: int) -> CdxEntry:
+        i = int(i)
+        sid = int(self.shard_id[i])
+        return CdxEntry(
+            shard=self.shard_paths[sid],
+            kind=self.shard_kinds[sid],
+            offset=int(self.offset[i]),
+            comp_len=int(self.comp_len[i]),
+            uncomp_len=int(self.uncomp_len[i]),
+            record_type=RECORD_TYPE_FROM_VALUE.get(
+                int(self.rtype[i]),
+                RECORD_TYPE_FROM_VALUE[UNKNOWN_TYPE_VALUE]),
+            status=int(self.status[i]),
+            uri=self.uri(i),
+            mime=self.mime(i),
+            digest=int(self.digest[i]),
+        )
+
+    # -- persistence -----------------------------------------------------
+    def save(self, path: str) -> int:
+        """Write the binary columnar layout; returns bytes written."""
+        n = len(self)
+        out = io.BytesIO()
+        out.write(_MAGIC)
+        out.write(struct.pack("<IIIIIQ", _VERSION, self.sig_bits,
+                              self.sig_ngram, self.sig_hashes,
+                              len(self.shard_paths), n))
+        for p, kind in zip(self.shard_paths, self.shard_kinds):
+            raw = p.encode("utf-8")
+            out.write(struct.pack("<IB", len(raw), _KIND_CODES[kind]))
+            out.write(raw)
+        for col in (self.shard_id, self.offset, self.comp_len,
+                    self.uncomp_len, self.rtype, self.status, self.digest,
+                    self.signatures, self.uri_off, self.mime_off):
+            out.write(np.ascontiguousarray(col).tobytes())
+        out.write(struct.pack("<Q", len(self.uri_heap)))
+        out.write(self.uri_heap)
+        out.write(struct.pack("<Q", len(self.mime_heap)))
+        out.write(self.mime_heap)
+        blob = out.getvalue()
+        with open(path, "wb") as f:
+            f.write(blob)
+        return len(blob)
+
+    @classmethod
+    def load(cls, path: str) -> "CdxIndex":
+        with open(path, "rb") as f:
+            blob = f.read()
+        if blob[:8] != _MAGIC:
+            raise ValueError(f"{path}: not a CDX index (bad magic)")
+        version, bits, ngram, hashes, n_shards, n = struct.unpack_from(
+            "<IIIIIQ", blob, 8)
+        if version != _VERSION:
+            raise ValueError(f"{path}: unsupported CDX version {version}")
+        pos = 8 + struct.calcsize("<IIIIIQ")
+        shard_paths, shard_kinds = [], []
+        for _ in range(n_shards):
+            plen, kcode = struct.unpack_from("<IB", blob, pos)
+            pos += struct.calcsize("<IB")
+            shard_paths.append(blob[pos:pos + plen].decode("utf-8"))
+            shard_kinds.append(_KIND_NAMES[kcode])
+            pos += plen
+
+        def col(dtype, count, shape=None):
+            nonlocal pos
+            arr = np.frombuffer(blob, dtype, count, pos)
+            pos += arr.nbytes
+            return arr.reshape(shape) if shape else arr
+
+        words = bits // 64
+        columns = {
+            "shard_id": col(np.uint32, n),
+            "offset": col(np.uint64, n),
+            "comp_len": col(np.uint64, n),
+            "uncomp_len": col(np.uint64, n),
+            "rtype": col(np.uint16, n),
+            "status": col(np.int16, n),
+            "digest": col(np.uint32, n),
+            "signatures": col(np.uint64, n * words, (n, words)),
+            "uri_off": col(np.uint64, n + 1),
+            "mime_off": col(np.uint64, n + 1),
+        }
+        (uri_len,) = struct.unpack_from("<Q", blob, pos)
+        pos += 8
+        uri_heap = blob[pos:pos + uri_len]
+        pos += uri_len
+        (mime_len,) = struct.unpack_from("<Q", blob, pos)
+        pos += 8
+        mime_heap = blob[pos:pos + mime_len]
+        return cls(shard_paths, shard_kinds, columns, uri_heap, mime_heap,
+                   sig_bits=bits, sig_ngram=ngram, sig_hashes=hashes)
+
+    # -- merge -----------------------------------------------------------
+    @classmethod
+    def merge(cls, partials: list["CdxIndex"]) -> "CdxIndex":
+        """Concatenate per-shard partial indexes (deterministic: input
+        order is preserved; shard ids and heap offsets are rebased)."""
+        if not partials:
+            raise ValueError("nothing to merge")
+        ref = partials[0]
+        for p in partials[1:]:
+            if (p.sig_bits, p.sig_ngram, p.sig_hashes) != (
+                    ref.sig_bits, ref.sig_ngram, ref.sig_hashes):
+                raise ValueError("signature parameter mismatch across partials")
+        shard_paths: list[str] = []
+        shard_kinds: list[str] = []
+        cols: dict[str, list[np.ndarray]] = {k: [] for k in (
+            "shard_id", "offset", "comp_len", "uncomp_len", "rtype",
+            "status", "digest", "signatures")}
+        uri_offs, mime_offs = [np.zeros(1, np.uint64)], [np.zeros(1, np.uint64)]
+        uri_parts, mime_parts = [], []
+        uri_base = mime_base = 0
+        for p in partials:
+            shard_base = len(shard_paths)
+            shard_paths.extend(p.shard_paths)
+            shard_kinds.extend(p.shard_kinds)
+            cols["shard_id"].append(p.shard_id + np.uint32(shard_base))
+            for name in ("offset", "comp_len", "uncomp_len", "rtype",
+                         "status", "digest", "signatures"):
+                cols[name].append(getattr(p, name))
+            uri_offs.append(p.uri_off[1:] + np.uint64(uri_base))
+            mime_offs.append(p.mime_off[1:] + np.uint64(mime_base))
+            uri_parts.append(p.uri_heap)
+            mime_parts.append(p.mime_heap)
+            uri_base += len(p.uri_heap)
+            mime_base += len(p.mime_heap)
+        merged = {name: np.concatenate(parts) for name, parts in cols.items()}
+        merged["uri_off"] = np.concatenate(uri_offs)
+        merged["mime_off"] = np.concatenate(mime_offs)
+        return cls(shard_paths, shard_kinds, merged,
+                   b"".join(uri_parts), b"".join(mime_parts),
+                   sig_bits=ref.sig_bits, sig_ngram=ref.sig_ngram,
+                   sig_hashes=ref.sig_hashes)
+
+
+# --------------------------------------------------------------------------
+# Builder (module-level worker: picklable under spawn, like core.parallel)
+# --------------------------------------------------------------------------
+
+def _record_span(record: WarcRecord) -> int:
+    """Serialized record length in the decompressed stream (zstd tail)."""
+    hdr = record._header_block  # raw block kept by the lazy-header parser
+    hdr_len = len(hdr) if hdr else sum(
+        len(n) + len(v) + 4 for n, v in record.headers.items_bytes()) + len(
+            record.headers.status_line) + 2
+    return hdr_len + 4 + record.content_length + 4
+
+
+def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
+                 sig_ngram: int = SIG_NGRAM,
+                 sig_hashes: int = SIG_HASHES) -> CdxIndex:
+    """One-pass sweep of one shard into a single-shard partial index."""
+    with open(path, "rb") as f:
+        kind = detect_compression(f.read(8))
+    offsets: list[int] = []
+    uncomp: list[int] = []
+    rtypes: list[int] = []
+    statuses: list[int] = []
+    digests: list[int] = []
+    sigs: list[np.ndarray] = []
+    uri_parts: list[bytes] = []
+    mime_parts: list[bytes] = []
+    uri_off = [0]
+    mime_off = [0]
+    last_span = 0
+    for record in FastWARCIterator(path, parse_http=True):
+        content = record.content_view
+        offsets.append(record.stream_offset)
+        uncomp.append(record.content_length)
+        rtypes.append(int(record.record_type))
+        http = record.http_headers
+        status = (http.status_code if http is not None
+                  and http.status_code is not None else -1)
+        # hostile/malformed status lines ("HTTP/1.1 99999 ...") must not
+        # kill the shard sweep: anything outside the int16 column is as
+        # good as no status
+        statuses.append(status if 0 <= status <= 0x7FFF else -1)
+        digests.append(zlib.adler32(content) & 0xFFFFFFFF)
+        sigs.append(signature_of(content, bits=sig_bits, n=sig_ngram,
+                                 k=sig_hashes))
+        uri = record.header_bytes(b"WARC-Target-URI:") or b""
+        mime = (http.get_bytes(b"Content-Type", b"") if http is not None
+                else record.header_bytes(b"Content-Type:") or b"")
+        uri_parts.append(uri)
+        mime_parts.append(mime)
+        uri_off.append(uri_off[-1] + len(uri))
+        mime_off.append(mime_off[-1] + len(mime))
+        last_span = _record_span(record)
+    n = len(offsets)
+    off = np.asarray(offsets, np.uint64)
+    # comp_len = distance to the next record in the addressable stream;
+    # the tail record ends at the file size (member formats) or at its
+    # own serialized span (zstd: addressable space is the decompressed
+    # stream, whose total length the compressed file size says nothing
+    # about)
+    if n:
+        end = (off[-1] + np.uint64(last_span)) if kind == "zstd" \
+            else np.uint64(os.path.getsize(path))
+        comp = np.diff(np.concatenate([off, [end]])).astype(np.uint64)
+    else:
+        comp = np.empty(0, np.uint64)
+    columns = {
+        "shard_id": np.zeros(n, np.uint32),
+        "offset": off,
+        "comp_len": comp,
+        "uncomp_len": np.asarray(uncomp, np.uint64),
+        "rtype": np.asarray(rtypes, np.uint16),
+        "status": np.asarray(statuses, np.int16),
+        "digest": np.asarray(digests, np.uint32),
+        "signatures": (np.stack(sigs) if sigs
+                       else np.empty((0, sig_bits // 64), np.uint64)),
+        "uri_off": np.asarray(uri_off, np.uint64),
+        "mime_off": np.asarray(mime_off, np.uint64),
+    }
+    return CdxIndex([path], [kind], columns, b"".join(uri_parts),
+                    b"".join(mime_parts), sig_bits=sig_bits,
+                    sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+
+
+def build_index(paths, *, workers: int = 0) -> CdxIndex:
+    """Index a sharded corpus: one parser sweep per shard, merged.
+
+    ``workers > 0`` fans the per-shard sweeps out through
+    :func:`repro.core.parallel.map_shards` (each partial is a picklable
+    single-shard :class:`CdxIndex`); ``workers=0`` sweeps serially.
+    Either way the merge is deterministic in shard order.
+    """
+    from repro.core.parallel import map_shards
+
+    partials = map_shards(_index_shard, [str(p) for p in paths],
+                          workers=workers)
+    return CdxIndex.merge(partials)
+
+
+# --------------------------------------------------------------------------
+# Random access
+# --------------------------------------------------------------------------
+
+class RandomAccessReader:
+    """Fetch single records from one shard by CDX offset.
+
+    The shard is opened once; every :meth:`read` is one seek + one member
+    decode + one record parse — cost independent of archive size (the
+    benchmark harness measures this against sequential scan-to-offset).
+    zstd shards have no compressed-domain member boundaries, so the
+    stream is decompressed once on first access and reads become
+    in-memory seeks (constant-time thereafter; the decompress is the
+    documented zstd trade-off, see ``streams.ZstdStream``).
+    """
+
+    def __init__(self, path: str, *, parse_http: bool = True,
+                 verify_digests: bool = False) -> None:
+        self.path = path
+        self._f = open(path, "rb")
+        self.kind = detect_compression(self._f.read(8))
+        self._f.seek(0)
+        self._parse_http = parse_http
+        self._verify = verify_digests
+        self._zbuf: bytes | None = None
+
+    def read(self, offset: int) -> WarcRecord | None:
+        """Parse exactly the record starting at ``offset``."""
+        if self.kind == "zstd":
+            if self._zbuf is None:
+                self._f.seek(0)
+                self._zbuf = ZstdStream(self._f).read()
+            return read_record_at(io.BytesIO(self._zbuf), int(offset),
+                                  parse_http=self._parse_http,
+                                  verify_digests=self._verify)
+        return read_record_at(self._f, int(offset),
+                              parse_http=self._parse_http,
+                              verify_digests=self._verify)
+
+    def read_entry(self, entry: CdxEntry) -> WarcRecord | None:
+        return self.read(entry.offset)
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        self._f.close()
+        self._zbuf = None
+
+    def __enter__(self) -> "RandomAccessReader":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+
+def verify_index(index: CdxIndex, *, limit: int | None = None,
+                 use_kernel: bool = True, interpret: bool = True) -> list[bool]:
+    """Bulk-verify indexed adler32 digests against re-read record content.
+
+    Every checked record is fetched through :class:`RandomAccessReader`
+    and the whole batch is verified in one
+    :func:`repro.core.warc.verify_digests_bulk` call — the adler32
+    entries all go through the single batched ``(B, nblocks)``-gridded
+    Pallas dispatch rather than one device call per record.
+    """
+    from repro.core.warc.checksum import verify_digests_bulk
+
+    n = len(index) if limit is None else min(limit, len(index))
+    datas: list[bytes] = []
+    headers: list[str] = []
+    readers: dict[int, RandomAccessReader] = {}
+    try:
+        for i in range(n):
+            sid = int(index.shard_id[i])
+            reader = readers.get(sid)
+            if reader is None:
+                reader = readers[sid] = RandomAccessReader(
+                    index.shard_paths[sid], parse_http=False)
+            record = reader.read(int(index.offset[i]))
+            datas.append(record.content if record is not None else b"")
+            headers.append(f"adler32:{int(index.digest[i]):08x}")
+    finally:
+        for reader in readers.values():
+            reader.close()
+    return verify_digests_bulk(datas, headers, use_kernel=use_kernel,
+                               interpret=interpret)

@@ -1,0 +1,251 @@
+"""Indexed archive query engine: header predicates + batched pattern scan.
+
+The filter-first pipeline over a :class:`repro.index.cdx.CdxIndex`
+(DESIGN.md §7). A query narrows the corpus in three strictly cheaper-
+to-more-expensive stages:
+
+1. **header predicates** — record type / HTTP status / MIME prefix /
+   URL prefix evaluate as vector compares over the columnar index; no
+   archive byte is touched.
+2. **signature pre-filter** — the per-record n-gram bitmap
+   (:mod:`repro.index.signature`) eliminates records that *cannot*
+   contain the pattern; eliminated records are never decompressed.
+3. **batched payload scan** — surviving candidates are fetched through
+   per-shard :class:`~repro.index.cdx.RandomAccessReader`\\ s (offsets
+   sorted for locality), gathered into ragged batches, and each batch
+   goes through **one** :func:`repro.kernels.find_pattern_mask_batch`
+   dispatch — the bulk consumer of the batched pattern kernel; the
+   power-of-two width bucketing keeps repeated ragged batches on a
+   bounded set of compiled shapes.
+
+``engine.stats`` records how much work each stage avoided (candidate
+counts, records scanned, kernel dispatches) so the benchmarks can report
+indexed-query vs full-scan speedups honestly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.warc.record import WarcRecordType
+from .cdx import CdxIndex, RandomAccessReader
+from .signature import candidate_mask
+
+__all__ = ["HeaderFilter", "PatternHit", "QueryEngine", "full_scan_search"]
+
+_DEFAULT_BATCH_RECORDS = 64
+_DEFAULT_BATCH_BYTES = 4 << 20
+_DEFAULT_SCAN_BLOCK = 8192  # kernel tile: few-KiB records pad ≤2×, not to
+                            # the 64 KiB DEFAULT_BLOCK sized for whole shards
+
+
+@dataclass
+class HeaderFilter:
+    """Columnar header predicates (all optional, AND-combined)."""
+
+    record_type: WarcRecordType | None = None
+    status: int | None = None
+    mime_prefix: bytes | None = None
+    url_prefix: bytes | None = None
+
+
+@dataclass
+class PatternHit:
+    """One matching record with its in-content match positions."""
+
+    index_row: int
+    shard: str
+    offset: int
+    uri: bytes
+    n_matches: int
+    positions: np.ndarray = field(repr=False)
+    excerpt: bytes = b""
+
+
+class QueryEngine:
+    """Run header + pattern queries against an indexed corpus."""
+
+    def __init__(self, index: CdxIndex, *,
+                 batch_records: int = _DEFAULT_BATCH_RECORDS,
+                 batch_bytes: int = _DEFAULT_BATCH_BYTES,
+                 use_kernel: bool = True, interpret: bool = True,
+                 scan_block: int = _DEFAULT_SCAN_BLOCK,
+                 excerpt_bytes: int = 80) -> None:
+        self.index = index
+        self.batch_records = max(1, batch_records)
+        self.batch_bytes = max(1, batch_bytes)
+        self.scan_block = scan_block
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.excerpt_bytes = excerpt_bytes
+        self._readers: dict[int, RandomAccessReader] = {}
+        self.stats = {"queries": 0, "header_candidates": 0,
+                      "sig_candidates": 0, "records_scanned": 0,
+                      "bytes_scanned": 0, "kernel_dispatches": 0,
+                      "batches": 0}
+
+    # -- stage 1: header predicates (pure columnar) ----------------------
+    def header_mask(self, flt: HeaderFilter | None) -> np.ndarray:
+        """Boolean row mask from the metadata columns alone."""
+        idx = self.index
+        mask = np.ones(len(idx), dtype=bool)
+        if flt is None:
+            return mask
+        if flt.record_type is not None:
+            mask &= (idx.rtype.astype(np.int64)
+                     & np.int64(int(flt.record_type))) != 0
+        if flt.status is not None:
+            # int64 compare: a bad user-supplied status (out of int16
+            # range) selects nothing instead of raising OverflowError
+            mask &= idx.status.astype(np.int64) == int(flt.status)
+        if flt.mime_prefix is not None:
+            mask &= np.char.startswith(idx.mimes(), bytes(flt.mime_prefix))
+        if flt.url_prefix is not None:
+            mask &= np.char.startswith(idx.uris(), bytes(flt.url_prefix))
+        return mask
+
+    def select(self, flt: HeaderFilter | None = None) -> np.ndarray:
+        """Index rows satisfying the header predicates (sorted)."""
+        return np.flatnonzero(self.header_mask(flt))
+
+    # -- stage 2+3: pattern search ---------------------------------------
+    def search(self, pattern: bytes, flt: HeaderFilter | None = None, *,
+               prefilter: bool = True) -> list[PatternHit]:
+        """All records whose content block contains ``pattern``.
+
+        Results are in index order. Candidates are fetched shard-by-shard
+        in ascending offset order and scanned in ragged batches of at
+        most ``batch_records`` records / ``batch_bytes`` bytes — each
+        batch is one (bucketed) kernel dispatch, never one per record.
+        """
+        pattern = bytes(pattern)
+        if not pattern:
+            raise ValueError("empty pattern")
+        mask = self.header_mask(flt)
+        self.stats["queries"] += 1
+        self.stats["header_candidates"] += int(mask.sum())
+        if prefilter:
+            mask &= candidate_mask(self.index.signatures, pattern,
+                                   n=self.index.sig_ngram,
+                                   k=self.index.sig_hashes)
+        rows = np.flatnonzero(mask)
+        self.stats["sig_candidates"] += int(rows.size)
+        # shard-grouped, offset-sorted fetch order for read locality
+        order = np.lexsort((self.index.offset[rows],
+                            self.index.shard_id[rows]))
+        hits: list[PatternHit] = []
+        batch_rows: list[int] = []
+        batch_bufs: list[bytes] = []
+        pending = 0
+        for r in rows[order]:
+            content = self._fetch(int(r))
+            batch_rows.append(int(r))
+            batch_bufs.append(content)
+            pending += len(content)
+            if (len(batch_rows) >= self.batch_records
+                    or pending >= self.batch_bytes):
+                hits.extend(self._scan_batch(batch_rows, batch_bufs, pattern))
+                batch_rows, batch_bufs, pending = [], [], 0
+        if batch_rows:
+            hits.extend(self._scan_batch(batch_rows, batch_bufs, pattern))
+        hits.sort(key=lambda h: h.index_row)
+        return hits
+
+    # -- internals -------------------------------------------------------
+    def _fetch(self, row: int) -> bytes:
+        sid = int(self.index.shard_id[row])
+        reader = self._readers.get(sid)
+        if reader is None:
+            reader = self._readers[sid] = RandomAccessReader(
+                self.index.shard_paths[sid], parse_http=False)
+        record = reader.read(int(self.index.offset[row]))
+        return record.content if record is not None else b""
+
+    @staticmethod
+    def _host_positions(buf: bytes, pattern: bytes) -> np.ndarray:
+        pos, i = [], buf.find(pattern)
+        while i >= 0:
+            pos.append(i)
+            i = buf.find(pattern, i + 1)
+        return np.asarray(pos, np.int64)
+
+    def _scan_batch(self, rows: list[int], bufs: list[bytes],
+                    pattern: bytes) -> list[PatternHit]:
+        self.stats["batches"] += 1
+        self.stats["records_scanned"] += len(rows)
+        self.stats["bytes_scanned"] += sum(len(b) for b in bufs)
+        if self.use_kernel:
+            from repro.kernels.bucketing import bucket_width
+            from repro.kernels.pattern_scan import find_pattern_mask_batch
+            from repro.kernels.pattern_scan.pattern_scan import MAX_PATTERN
+
+            # kernel scans the first MAX_PATTERN bytes; longer patterns
+            # get their (few) candidate positions host-verified
+            kpat = pattern[:MAX_PATTERN]
+            if not any(kpat):  # all-zero prefix: kernel rejects, host scans
+                positions = [self._host_positions(buf, pattern)
+                             for buf in bufs]
+            else:
+                masks = find_pattern_mask_batch(bufs, kpat,
+                                                block=self.scan_block,
+                                                interpret=self.interpret)
+                positions = [np.flatnonzero(m) for m in masks]
+                if len(pattern) > len(kpat):
+                    positions = [
+                        np.asarray([p for p in pos
+                                    if buf[p:p + len(pattern)] == pattern],
+                                   np.int64)
+                        for buf, pos in zip(bufs, positions)]
+                self.stats["kernel_dispatches"] += len(
+                    {bucket_width(len(b), self.scan_block) for b in bufs})
+        else:  # host fallback: plain bytes.find sweep
+            positions = [self._host_positions(buf, pattern) for buf in bufs]
+        hits = []
+        for row, buf, pos in zip(rows, bufs, positions):
+            if pos.size == 0:
+                continue
+            first = int(pos[0])
+            excerpt = bytes(buf[max(0, first - 16):
+                                first + len(pattern) + self.excerpt_bytes])
+            sid = int(self.index.shard_id[row])
+            hits.append(PatternHit(
+                index_row=row, shard=self.index.shard_paths[sid],
+                offset=int(self.index.offset[row]), uri=self.index.uri(row),
+                n_matches=int(pos.size), positions=pos, excerpt=excerpt))
+        return hits
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        for reader in self._readers.values():
+            reader.close()
+        self._readers.clear()
+
+    def __enter__(self) -> "QueryEngine":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+
+def full_scan_search(paths, pattern: bytes) -> dict[tuple[str, int], int]:
+    """Naive baseline: decompress + scan **every** record of every shard.
+
+    Returns ``{(shard, offset): n_matches}`` for records containing the
+    pattern — the oracle the property tests compare the indexed path
+    against, and the benchmark's un-indexed comparison point.
+    """
+    from repro.core.warc.fastwarc import FastWARCIterator
+
+    pattern = bytes(pattern)
+    out: dict[tuple[str, int], int] = {}
+    for path in paths:
+        for record in FastWARCIterator(str(path), parse_http=False):
+            content = record.content
+            n, i = 0, content.find(pattern)
+            while i >= 0:
+                n += 1
+                i = content.find(pattern, i + 1)
+            if n:
+                out[(str(path), record.stream_offset)] = n
+    return out

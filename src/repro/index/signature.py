@@ -1,0 +1,97 @@
+"""Per-record n-gram signatures: the query engine's decompress-avoidance
+pre-filter (DESIGN.md §7).
+
+At index time every record's content block is folded into a small
+Bloom-style bitmap: each overlapping byte n-gram is hashed to ``k`` bit
+positions which are set in an ``m``-bit signature. At query time a
+pattern of length ≥ n is folded the same way; any record whose signature
+is missing one of the pattern's bits **cannot** contain the pattern
+(every substring occurrence implies all of its n-grams occur), so the
+record is never even decompressed. False positives only cost a wasted
+decompress + scan — correctness never depends on the filter.
+
+Everything is vectorized: signatures are built with one rolling-hash
+sweep per record (numpy, no per-byte Python), and candidate selection is
+a single ``(N, words)`` bitwise-AND/compare over the whole index column.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.bucketing import as_u8
+
+__all__ = [
+    "SIG_BITS",
+    "SIG_HASHES",
+    "SIG_NGRAM",
+    "SIG_WORDS",
+    "candidate_mask",
+    "pattern_bits",
+    "signature_of",
+]
+
+SIG_BITS = 4096     # bitmap size m (bits): 512 B per record. Sized for the
+                    # few-KiB records web archives actually hold — a few
+                    # hundred distinct n-grams per record keeps fill ~15 %,
+                    # so a 10-byte pattern's ~14 required bits reject
+                    # non-matching records with high probability. (At 256
+                    # bits the map saturates and filters nothing.)
+SIG_WORDS = SIG_BITS // 64
+SIG_NGRAM = 4       # n-gram length; patterns shorter than this skip the filter
+SIG_HASHES = 2      # k bit positions per n-gram (Kirsch–Mitzenmacher)
+
+_FNV_PRIME = np.uint32(0x01000193)
+_MIX = np.uint32(0x9E3779B1)
+
+
+def _ngram_hashes(buf: np.ndarray, n: int) -> np.ndarray:
+    """uint32 polynomial hash of every overlapping n-gram (one sweep)."""
+    m = buf.size - n + 1
+    h = np.zeros(m, dtype=np.uint32)
+    for j in range(n):  # unrolled over the (tiny, static) n-gram length
+        h = h * _FNV_PRIME + buf[j:j + m].astype(np.uint32)
+    return h
+
+
+def _bit_positions(h: np.ndarray, bits: int, k: int) -> np.ndarray:
+    """k derived bit indices per hash, flattened (double hashing)."""
+    h2 = (h ^ (h >> np.uint32(15))) * _MIX
+    idx = (h[None, :] + np.arange(k, dtype=np.uint32)[:, None] * h2[None, :])
+    return (idx % np.uint32(bits)).ravel()
+
+
+def _fold(positions: np.ndarray, bits: int) -> np.ndarray:
+    sig = np.zeros(bits // 64, dtype=np.uint64)
+    words = (positions >> np.uint32(6)).astype(np.intp)
+    shifts = (positions & np.uint32(63)).astype(np.uint64)
+    np.bitwise_or.at(sig, words, np.uint64(1) << shifts)
+    return sig
+
+
+def signature_of(data, *, bits: int = SIG_BITS, n: int = SIG_NGRAM,
+                 k: int = SIG_HASHES) -> np.ndarray:
+    """``(bits // 64,)`` uint64 signature of one record's content bytes."""
+    buf = as_u8(data)
+    if buf.size < n:
+        return np.zeros(bits // 64, dtype=np.uint64)
+    return _fold(_bit_positions(_ngram_hashes(buf, n), bits, k), bits)
+
+
+def pattern_bits(pattern, *, bits: int = SIG_BITS, n: int = SIG_NGRAM,
+                 k: int = SIG_HASHES) -> np.ndarray | None:
+    """Required-bits mask for a query pattern, or ``None`` when the
+    pattern is shorter than the n-gram length (filter inapplicable)."""
+    pat = as_u8(pattern)
+    if pat.size < n:
+        return None
+    return _fold(_bit_positions(_ngram_hashes(pat, n), bits, k), bits)
+
+
+def candidate_mask(signatures: np.ndarray, pattern, *, n: int = SIG_NGRAM,
+                   k: int = SIG_HASHES) -> np.ndarray:
+    """Boolean ``(N,)`` mask: which rows of a ``(N, words)`` signature
+    column *may* contain ``pattern`` (exact for "cannot contain")."""
+    required = pattern_bits(pattern, bits=signatures.shape[1] * 64, n=n, k=k)
+    if required is None:  # short pattern: every record is a candidate
+        return np.ones(signatures.shape[0], dtype=bool)
+    return ((signatures & required[None, :]) == required[None, :]).all(axis=1)

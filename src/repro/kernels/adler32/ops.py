@@ -9,15 +9,10 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
 from .adler32 import BLOCK, MOD, adler32_partials_batch
 
 __all__ = ["adler32", "adler32_batch"]
-
-
-def _as_u8(data) -> np.ndarray:
-    if isinstance(data, (bytes, bytearray, memoryview)):
-        return np.frombuffer(bytes(data), dtype=np.uint8)
-    return np.asarray(data, np.uint8)
 
 
 def _combine(s: np.ndarray, t: np.ndarray, lengths: np.ndarray,
@@ -38,12 +33,6 @@ def _combine(s: np.ndarray, t: np.ndarray, lengths: np.ndarray,
     return out
 
 
-def _bucket_width(size: int, block: int) -> int:
-    """Block-multiple width bucket: next power-of-two block count."""
-    nblocks = max((size + block - 1) // block, 1)
-    return block * (1 << (nblocks - 1).bit_length())
-
-
 def adler32_batch(payloads, *, block: int = BLOCK,
                   interpret: bool = True) -> np.ndarray:
     """Adler-32 of every payload in a ragged batch (few kernel dispatches).
@@ -61,7 +50,7 @@ def adler32_batch(payloads, *, block: int = BLOCK,
     out = np.empty(nrows, np.uint32)
     buckets: dict[int, list[int]] = {}
     for i, buf in enumerate(bufs):
-        buckets.setdefault(_bucket_width(buf.size, block), []).append(i)
+        buckets.setdefault(bucket_width(buf.size, block), []).append(i)
     for width, idxs in buckets.items():
         padded = np.zeros((len(idxs), width), dtype=np.uint8)
         for row, i in enumerate(idxs):

@@ -1,0 +1,28 @@
+"""Shared ragged-batch helpers for the byte kernels' public wrappers.
+
+Both byte kernels (`adler32`, `pattern_scan`) batch ragged payload lists
+into padded ``(B, W)`` matrices; ``bucket_width`` is the common
+power-of-two width-bucketing rule (one gridded dispatch per bucket, so
+padding waste is ≤ 2× per row and repeated ragged batches reuse a
+bounded set of compiled shapes). Kept in one place so the wrappers —
+and consumers that account dispatches, like the index query engine —
+cannot drift apart.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["as_u8", "bucket_width"]
+
+
+def as_u8(data) -> np.ndarray:
+    """View bytes-like or array input as a uint8 numpy array."""
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return np.frombuffer(bytes(data), dtype=np.uint8)
+    return np.asarray(data, np.uint8)
+
+
+def bucket_width(size: int, block: int) -> int:
+    """Block-multiple width bucket: next power-of-two block count."""
+    nblocks = max((size + block - 1) // block, 1)
+    return block * (1 << (nblocks - 1).bit_length())

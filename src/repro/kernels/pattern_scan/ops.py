@@ -1,25 +1,24 @@
 """Public jit'd wrappers for the pattern-scan kernel.
 
 ``find_pattern_mask`` scans one buffer; ``find_pattern_mask_batch`` packs
-a ragged batch of payloads into one padded byte matrix and issues a
-single ``(B, nblocks)``-gridded dispatch. Both build the explicit halo
-input the blocked kernel needs (see :mod:`.pattern_scan`).
+a ragged batch of payloads into padded byte matrices and issues one
+``(B, nblocks)``-gridded dispatch per power-of-two **width bucket**
+(parity with ``adler32_batch``): a uniform batch costs a single dispatch,
+repeated ragged batches reuse a handful of compiled shapes instead of
+recompiling per max-length, and one giant outlier cannot inflate every
+row to its width. Both wrappers build the explicit halo input the
+blocked kernel needs (see :mod:`.pattern_scan`).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
 from .pattern_scan import DEFAULT_BLOCK, MAX_PATTERN, pattern_scan_batch
 
 __all__ = ["find_pattern_mask", "find_pattern_mask_batch",
            "find_pattern_positions", "count_matches"]
-
-
-def _as_u8(buf) -> np.ndarray:
-    if isinstance(buf, (bytes, bytearray, memoryview)):
-        return np.frombuffer(bytes(buf), dtype=np.uint8)
-    return np.asarray(buf, np.uint8)
 
 
 def _check_pattern(pattern) -> tuple[np.ndarray, int]:
@@ -35,11 +34,9 @@ def _check_pattern(pattern) -> tuple[np.ndarray, int]:
     return pad_vec, int(pat.size)
 
 
-def _pack(bufs: list[np.ndarray], block: int
+def _pack(bufs: list[np.ndarray], block: int, width: int
           ) -> tuple[np.ndarray, np.ndarray]:
-    """Stack ragged buffers into (B, W) plus each tile's right-edge halo."""
-    lengths = [b.size for b in bufs]
-    width = max((max(lengths) + block - 1) // block * block, block)
+    """Stack ragged buffers into (B, width) plus each tile's right-edge halo."""
     nblocks = width // block
     # W + MAX_PATTERN scratch so every halo gather is in-bounds (zeros there)
     ext = np.zeros((len(bufs), width + MAX_PATTERN), dtype=np.uint8)
@@ -64,20 +61,31 @@ def _trim(mask_row: np.ndarray, n: int, plen: int) -> np.ndarray:
 
 def find_pattern_mask_batch(bufs, pattern, *, block: int = DEFAULT_BLOCK,
                             interpret: bool = True) -> list[np.ndarray]:
-    """uint8 match masks for a ragged batch — one kernel dispatch.
+    """uint8 match masks for a ragged batch — few kernel dispatches.
 
     Returns one mask per input, each the same length as its buffer.
+    Inputs are grouped into power-of-two width buckets — one
+    ``(B, nblocks)``-gridded call per bucket — so a uniform batch is a
+    single dispatch and ragged query batches hit a bounded set of
+    compiled shapes (padding waste ≤ 2× per row).
     """
     pat_vec, plen = _check_pattern(pattern)
     arrs = [_as_u8(b) for b in bufs]
     if not arrs:
         return []
-    padded, halos = _pack(arrs, block)
-    masks = pattern_scan_batch(jnp.asarray(padded), jnp.asarray(halos),
-                               jnp.asarray(pat_vec), pat_len=plen,
-                               block=block, interpret=interpret)
-    masks = np.asarray(masks)
-    return [_trim(masks[i], arr.size, plen) for i, arr in enumerate(arrs)]
+    out: list = [None] * len(arrs)
+    buckets: dict[int, list[int]] = {}
+    for i, arr in enumerate(arrs):
+        buckets.setdefault(bucket_width(arr.size, block), []).append(i)
+    for width, idxs in buckets.items():
+        padded, halos = _pack([arrs[i] for i in idxs], block, width)
+        masks = pattern_scan_batch(jnp.asarray(padded), jnp.asarray(halos),
+                                   jnp.asarray(pat_vec), pat_len=plen,
+                                   block=block, interpret=interpret)
+        masks = np.asarray(masks)
+        for row, i in enumerate(idxs):
+            out[i] = _trim(masks[row], arrs[i].size, plen)
+    return out
 
 
 def find_pattern_mask(buf, pattern, *, block: int = DEFAULT_BLOCK,

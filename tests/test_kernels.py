@@ -159,6 +159,27 @@ def test_pattern_scan_batch_matches_single_and_ref():
         np.testing.assert_array_equal(mask, ref[:len(mask)])
 
 
+def test_pattern_scan_batch_width_bucketing():
+    # power-of-two width buckets (parity with adler32_batch): outliers
+    # don't inflate every row, and bucketed results equal unbucketed
+    from repro.kernels.bucketing import bucket_width
+    from repro.kernels.pattern_scan import find_pattern_mask_batch
+
+    block = 512
+    assert bucket_width(0, block) == block
+    assert bucket_width(block, block) == block
+    assert bucket_width(block + 1, block) == 2 * block
+    assert bucket_width(3 * block, block) == 4 * block
+    sizes = [1, 100, 511, 512, 513, 2000, 5000, 9000]
+    bufs = _ragged_payloads(13, sizes)
+    assert len({bucket_width(len(b), block) for b in bufs}) > 1
+    masks = find_pattern_mask_batch(bufs, b"\r\n", block=block)
+    for mask, buf in zip(masks, bufs):  # order preserved across buckets
+        assert mask.shape == (len(buf),)
+        np.testing.assert_array_equal(
+            mask, find_pattern_mask(buf, b"\r\n", block=block))
+
+
 def test_pattern_scan_batch_cross_tile_matches():
     # matches straddling tile boundaries exercise the explicit halo input
     from repro.kernels.pattern_scan import find_pattern_mask_batch
