@@ -10,12 +10,16 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                kernel dispatch (benchmarks/parallel_bench.py);
   * index    — CDX build throughput, random-access vs sequential
                scan-to-offset, indexed-query vs full-scan speedup
-               (benchmarks/index_bench.py).
+               (benchmarks/index_bench.py);
+  * serve    — archive-gateway vs synchronous query service under
+               1/8/64 concurrent clients: throughput, dispatches per
+               request, coalesce/cache rates (benchmarks/serve_bench.py).
 
 ``--json`` additionally writes ``BENCH_pipeline.json`` (all non-index
-rows as records plus a throughput summary) and — when the index section
-ran — ``BENCH_index.json``, so each perf trajectory is tracked
-machine-readably across PRs. ``--sections a,b`` restricts the run.
+rows as records plus a throughput summary) and — per section that ran —
+``BENCH_index.json`` / ``BENCH_serve.json``, so each perf trajectory is
+tracked machine-readably across PRs. ``--sections a,b`` restricts the
+run.
 
 Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 elsewhere).
 """
@@ -28,6 +32,7 @@ import os
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_pipeline.json")
 _INDEX_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_index.json")
+_SERVE_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_serve.json")
 
 
 def _parse_row(line: str) -> dict:
@@ -48,7 +53,9 @@ def _summary(records: list[dict]) -> dict:
         if not isinstance(r["value"], float):
             continue
         if r["metric"] in ("records_per_s", "docs_per_s", "tokens_per_s",
-                           "speedup"):
+                           "speedup", "requests_per_s",
+                           "dispatches_per_request",
+                           "dispatch_reduction_vs_sync"):
             out[".".join([r["section"], *r["keys"], r["metric"]])] = r["value"]
     return out
 
@@ -61,11 +68,11 @@ def main(argv: list[str] | None = None) -> None:
     # forks, and forking before JAX spins up its thread pools is both
     # safer and fairer on small hosts
     ap.add_argument("--sections",
-                    default="table1,pipeline,parallel,index,kernels",
+                    default="table1,pipeline,parallel,index,serve,kernels",
                     help="comma-separated subset of sections to run")
     args = ap.parse_args(argv)
     sections = [s.strip() for s in args.sections.split(",") if s.strip()]
-    known = {"table1", "pipeline", "kernels", "parallel", "index"}
+    known = {"table1", "pipeline", "kernels", "parallel", "index", "serve"}
     unknown = [s for s in sections if s not in known]
     if unknown:
         ap.error(f"unknown sections {unknown}; choose from {sorted(known)}")
@@ -93,8 +100,10 @@ def main(argv: list[str] | None = None) -> None:
         return importlib.import_module(f"benchmarks.{name}_bench")
 
     section_mods = {"pipeline": "pipeline", "kernels": "kernel",
-                    "parallel": "parallel", "index": "index"}
+                    "parallel": "parallel", "index": "index",
+                    "serve": "serve"}
     index_lines: list[str] = []
+    serve_lines: list[str] = []
     for name in sections:
         if name not in section_mods:
             continue
@@ -102,10 +111,16 @@ def main(argv: list[str] | None = None) -> None:
         for line in rows:
             print(line)
         print()
-        # index rows track their own trajectory file (BENCH_index.json);
-        # mixing them into BENCH_pipeline.json would let an index-only
-        # run clobber the pipeline history
-        (index_lines if name == "index" else lines).extend(rows)
+        # index/serve rows track their own trajectory files
+        # (BENCH_index.json / BENCH_serve.json); mixing them into
+        # BENCH_pipeline.json would let a section-only run clobber the
+        # pipeline history
+        if name == "index":
+            index_lines.extend(rows)
+        elif name == "serve":
+            serve_lines.extend(rows)
+        else:
+            lines.extend(rows)
 
     if args.json:
 
@@ -119,11 +134,13 @@ def main(argv: list[str] | None = None) -> None:
                 f.write("\n")
             print(f"wrote {path}")
 
-        non_index = [s for s in sections if s != "index"]
+        non_index = [s for s in sections if s not in ("index", "serve")]
         if non_index:
             _write(_JSON_PATH, "pipeline", lines, non_index)
         if index_lines:
             _write(_INDEX_JSON_PATH, "index", index_lines, ["index"])
+        if serve_lines:
+            _write(_SERVE_JSON_PATH, "serve", serve_lines, ["serve"])
 
 
 if __name__ == "__main__":

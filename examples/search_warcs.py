@@ -56,6 +56,9 @@ def main() -> None:
                     help="CDX index path (built and saved if missing)")
     ap.add_argument("--pattern", action="append", default=None,
                     help="byte pattern(s) to search (repeatable)")
+    ap.add_argument("--regex", action="append", default=None,
+                    help="bytes regex(es) to search (repeatable); required "
+                         "literals drive the pre-filter, re verifies")
     ap.add_argument("--status", type=int, default=None,
                     help="restrict to records with this HTTP status")
     ap.add_argument("--top-k", type=int, default=5)
@@ -88,16 +91,25 @@ def main() -> None:
 
     filters = HeaderFilter(status=args.status) \
         if args.status is not None else None
-    patterns = [p.encode() for p in (args.pattern
-                                     or ["web archive", "nginx/1.17"])]
+    # defaults demo both query kinds; either explicit flag suppresses
+    # the other kind's default
+    patterns = [p.encode() for p in (
+        args.pattern if args.pattern is not None
+        else ([] if args.regex else ["web archive", "nginx/1.17"]))]
+    regexes = [r.encode() for r in (
+        args.regex if args.regex is not None
+        else ([] if args.pattern else [r"nginx/1\.1[0-9]"]))]
     with IndexQueryService(index) as service:
-        responses = service.serve([
-            QueryRequest(pat, filters=filters, top_k=args.top_k)
-            for pat in patterns])
+        responses = service.serve(
+            [QueryRequest(pat, filters=filters, top_k=args.top_k)
+             for pat in patterns]
+            + [QueryRequest(rx, filters=filters, top_k=args.top_k,
+                            regex=True) for rx in regexes])
         for resp in responses:
             pat = resp.request.pattern.decode("latin-1")
-            print(f"\n=== {pat!r}: {resp.total_matches} matching records "
-                  f"({resp.latency_s * 1e3:.1f} ms)")
+            kind = "regex " if resp.request.regex else ""
+            print(f"\n=== {kind}{pat!r}: {resp.total_matches} matching "
+                  f"records ({resp.latency_s * 1e3:.1f} ms)")
             for hit in resp.hits:
                 print(f"  {hit.n_matches:4d}x  "
                       f"{hit.uri.decode('latin-1') or '<no uri>':48s} "

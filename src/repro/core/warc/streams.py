@@ -246,6 +246,72 @@ class ZstdStream:
         return self._reader.read(n if n >= 0 else -1)
 
 
+class ForwardWindow:
+    """Seekable facade over a forward-only reader, at an offset origin.
+
+    Wraps a streaming decompressor (e.g. :class:`ZstdStream` opened at a
+    frame boundary) so :func:`repro.core.warc.read_record_at` can use it
+    like a file positioned in the *decompressed* stream: position ``base``
+    corresponds to the wrapped reader's byte 0, forward seeks discard,
+    and a small pushback tail absorbs the parser's short look-behind
+    (the 8-byte compression sniff). Backward seeks past the tail raise —
+    the record parser never does that.
+    """
+
+    _KEEP = 64  # pushback capacity; the parser rewinds ≤ 8 bytes
+
+    def __init__(self, reader, base: int = 0) -> None:
+        self._r = reader
+        self._pos = base
+        self._origin = base
+        self._pending = b""   # pushed-back bytes, next to be read
+        self._tail = b""      # most recent _KEEP bytes handed out
+
+    def read(self, n: int = -1) -> bytes:
+        parts: list[bytes] = []
+        if self._pending:
+            take = self._pending if n < 0 else self._pending[:n]
+            self._pending = self._pending[len(take):]
+            parts.append(take)
+        need = -1 if n < 0 else n - sum(len(p) for p in parts)
+        while need != 0:
+            chunk = self._r.read(_READ_BLOCK if need < 0 else need)
+            if not chunk:
+                break
+            parts.append(chunk)
+            if need > 0:
+                need -= len(chunk)
+        out = b"".join(parts)
+        self._pos += len(out)
+        self._tail = (self._tail + out)[-self._KEEP:]
+        return out
+
+    def seek(self, offset: int, whence: int = io.SEEK_SET) -> int:
+        if whence == io.SEEK_CUR:
+            target = self._pos + offset
+        elif whence == io.SEEK_SET:
+            target = offset
+        else:  # SEEK_END needs the stream length, which is unknowable here
+            raise ValueError(f"unsupported whence {whence}")
+        if target < self._origin:
+            raise ValueError(f"seek before window origin {self._origin}")
+        delta = target - self._pos
+        if delta < 0:
+            if -delta > len(self._tail):
+                raise ValueError("seek beyond the pushback tail")
+            self._pending = self._tail[delta:] + self._pending
+            self._tail = self._tail[:delta]
+            self._pos = target
+        elif delta > 0:
+            while self._pos < target:
+                if not self.read(min(target - self._pos, _READ_BLOCK)):
+                    break  # short stream: behave like file seek past EOF
+        return self._pos
+
+    def tell(self) -> int:
+        return self._pos
+
+
 class UncompressedMemberStream(MemberStream):
     """Degenerate member stream: one member == the whole file.
 

@@ -24,7 +24,15 @@ from .cdx import (
     build_index,
     verify_index,
 )
-from .query import HeaderFilter, PatternHit, QueryEngine, full_scan_search
+from .query import (
+    HeaderFilter,
+    PatternHit,
+    QueryEngine,
+    QueryPlan,
+    full_scan_regex,
+    full_scan_search,
+    required_literals,
+)
 from .service import IndexQueryService, QueryRequest, QueryResponse
 from . import signature
 
@@ -35,11 +43,14 @@ __all__ = [
     "IndexQueryService",
     "PatternHit",
     "QueryEngine",
+    "QueryPlan",
     "QueryRequest",
     "QueryResponse",
     "RandomAccessReader",
     "build_index",
+    "full_scan_regex",
     "full_scan_search",
+    "required_literals",
     "signature",
     "verify_index",
 ]

@@ -22,8 +22,11 @@ offset and parses exactly one record — one seek, one member decode, one
 record parse, independent of archive size. ``offset`` is the absolute
 position in the *addressable* stream: the compressed file for gzip/LZ4
 members, the raw file for uncompressed WARCs, and the decompressed
-stream for zstd (which has no cheap compressed-domain member boundaries;
-its reader decompresses once and then seeks in memory).
+stream for zstd. zstd rows additionally store the compressed offset of
+the frame containing the record (walked without decompression at build
+time, :mod:`repro.core.warc.zstd_frames`), so random access seeks to the
+containing frame and decompresses only from there instead of inflating
+the whole shard on first read.
 """
 from __future__ import annotations
 
@@ -42,21 +45,31 @@ from repro.core.warc.record import (
     WarcRecord,
     WarcRecordType,
 )
-from repro.core.warc.streams import ZstdStream, detect_compression
+from repro.core.warc.streams import (
+    ForwardWindow,
+    ZstdStream,
+    detect_compression,
+)
 from .signature import SIG_BITS, SIG_HASHES, SIG_NGRAM, signature_of
 
 __all__ = [
     "CdxEntry",
     "CdxIndex",
+    "NO_FRAME",
     "RandomAccessReader",
     "build_index",
     "verify_index",
 ]
 
 _MAGIC = b"REPROCDX"
-_VERSION = 1
+_VERSION = 2  # v2 adds the zstd frame columns (frame_off / frame_base)
 _KIND_CODES = {"none": 0, "gzip": 1, "lz4": 2, "zstd": 3}
 _KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+
+# rows without a usable compressed-frame mapping (legacy v1 zstd indexes,
+# unwalkable frames) carry this sentinel: readers fall back to the
+# decompress-whole-shard path
+NO_FRAME = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
 @dataclass
@@ -98,6 +111,19 @@ class CdxIndex:
         self.status = columns["status"]
         self.digest = columns["digest"]
         self.signatures = columns["signatures"]
+        # compressed-domain offset of the frame holding each record plus
+        # that frame's decompressed base (zstd random access); identity
+        # for member formats, NO_FRAME when unknown (legacy v1 indexes)
+        if "frame_off" in columns:
+            self.frame_off = columns["frame_off"]
+            self.frame_base = columns["frame_base"]
+        else:
+            self.frame_off = self.offset.copy()
+            self.frame_base = self.offset.copy()
+            zstd_rows = np.asarray(
+                [k == "zstd" for k in shard_kinds], bool)[self.shard_id]
+            self.frame_off[zstd_rows] = NO_FRAME
+            self.frame_base[zstd_rows] = NO_FRAME
         self.uri_off = columns["uri_off"]
         self.mime_off = columns["mime_off"]
         self.uri_heap = uri_heap
@@ -133,6 +159,14 @@ class CdxIndex:
                 [self.mime(i) for i in range(len(self))], dtype=np.bytes_)
         return self._mimes
 
+    def frame_hint(self, i: int) -> tuple[int, int] | None:
+        """``(frame_off, frame_base)`` for seek-to-frame reads of row ``i``,
+        or ``None`` when no usable mapping is stored (legacy indexes)."""
+        fo = int(self.frame_off[i])
+        if np.uint64(fo) == NO_FRAME:
+            return None
+        return fo, int(self.frame_base[i])
+
     def entry(self, i: int) -> CdxEntry:
         i = int(i)
         sid = int(self.shard_id[i])
@@ -166,7 +200,8 @@ class CdxIndex:
             out.write(raw)
         for col in (self.shard_id, self.offset, self.comp_len,
                     self.uncomp_len, self.rtype, self.status, self.digest,
-                    self.signatures, self.uri_off, self.mime_off):
+                    self.signatures, self.frame_off, self.frame_base,
+                    self.uri_off, self.mime_off):
             out.write(np.ascontiguousarray(col).tobytes())
         out.write(struct.pack("<Q", len(self.uri_heap)))
         out.write(self.uri_heap)
@@ -185,8 +220,18 @@ class CdxIndex:
             raise ValueError(f"{path}: not a CDX index (bad magic)")
         version, bits, ngram, hashes, n_shards, n = struct.unpack_from(
             "<IIIIIQ", blob, 8)
-        if version != _VERSION:
+        if version not in (1, _VERSION):  # v1 readable: frame cols absent
             raise ValueError(f"{path}: unsupported CDX version {version}")
+        # signature geometry is a per-index build parameter — validate it
+        # before trusting it to slice the column region
+        if bits == 0 or bits % 64:
+            raise ValueError(
+                f"{path}: invalid signature width {bits} (need a positive "
+                f"multiple of 64)")
+        if ngram == 0 or hashes == 0:
+            raise ValueError(
+                f"{path}: invalid signature parameters "
+                f"(ngram={ngram}, hashes={hashes})")
         pos = 8 + struct.calcsize("<IIIIIQ")
         shard_paths, shard_kinds = [], []
         for _ in range(n_shards):
@@ -212,9 +257,13 @@ class CdxIndex:
             "status": col(np.int16, n),
             "digest": col(np.uint32, n),
             "signatures": col(np.uint64, n * words, (n, words)),
-            "uri_off": col(np.uint64, n + 1),
-            "mime_off": col(np.uint64, n + 1),
         }
+        if version >= 2:
+            columns["frame_off"] = col(np.uint64, n)
+            columns["frame_base"] = col(np.uint64, n)
+        # v1: constructor synthesizes identity/NO_FRAME frame columns
+        columns["uri_off"] = col(np.uint64, n + 1)
+        columns["mime_off"] = col(np.uint64, n + 1)
         (uri_len,) = struct.unpack_from("<Q", blob, pos)
         pos += 8
         uri_heap = blob[pos:pos + uri_len]
@@ -241,7 +290,7 @@ class CdxIndex:
         shard_kinds: list[str] = []
         cols: dict[str, list[np.ndarray]] = {k: [] for k in (
             "shard_id", "offset", "comp_len", "uncomp_len", "rtype",
-            "status", "digest", "signatures")}
+            "status", "digest", "signatures", "frame_off", "frame_base")}
         uri_offs, mime_offs = [np.zeros(1, np.uint64)], [np.zeros(1, np.uint64)]
         uri_parts, mime_parts = [], []
         uri_base = mime_base = 0
@@ -251,7 +300,8 @@ class CdxIndex:
             shard_kinds.extend(p.shard_kinds)
             cols["shard_id"].append(p.shard_id + np.uint32(shard_base))
             for name in ("offset", "comp_len", "uncomp_len", "rtype",
-                         "status", "digest", "signatures"):
+                         "status", "digest", "signatures", "frame_off",
+                         "frame_base"):
                 cols[name].append(getattr(p, name))
             uri_offs.append(p.uri_off[1:] + np.uint64(uri_base))
             mime_offs.append(p.mime_off[1:] + np.uint64(mime_base))
@@ -334,6 +384,29 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         comp = np.diff(np.concatenate([off, [end]])).astype(np.uint64)
     else:
         comp = np.empty(0, np.uint64)
+    # frame mapping: member formats address the compressed stream, so a
+    # record's "frame" is itself; zstd offsets live in the decompressed
+    # stream, so map each record onto the compressed frame containing it
+    # (walked without decompression — see core.warc.zstd_frames)
+    frame_off, frame_base = off.copy(), off.copy()
+    if kind == "zstd" and n:
+        import mmap
+
+        from repro.core.warc.zstd_frames import frame_table
+        try:
+            with open(path, "rb") as f, \
+                    mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+                # the walk touches a few bytes per block header; mmap
+                # keeps it O(1) resident even for multi-GB shards
+                comp_offs, bases = frame_table(mm)
+            which = np.searchsorted(bases, off, side="right") - 1
+            frame_off = comp_offs[which]
+            frame_base = bases[which]
+        except (ValueError, RuntimeError):
+            # unwalkable frames: index stays usable, reads fall back to
+            # the decompress-whole-shard path
+            frame_off = np.full(n, NO_FRAME, np.uint64)
+            frame_base = np.full(n, NO_FRAME, np.uint64)
     columns = {
         "shard_id": np.zeros(n, np.uint32),
         "offset": off,
@@ -344,6 +417,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         "digest": np.asarray(digests, np.uint32),
         "signatures": (np.stack(sigs) if sigs
                        else np.empty((0, sig_bits // 64), np.uint64)),
+        "frame_off": frame_off,
+        "frame_base": frame_base,
         "uri_off": np.asarray(uri_off, np.uint64),
         "mime_off": np.asarray(mime_off, np.uint64),
     }
@@ -352,18 +427,34 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
                     sig_ngram=sig_ngram, sig_hashes=sig_hashes)
 
 
-def build_index(paths, *, workers: int = 0) -> CdxIndex:
+def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
+                sig_ngram: int = SIG_NGRAM,
+                sig_hashes: int = SIG_HASHES) -> CdxIndex:
     """Index a sharded corpus: one parser sweep per shard, merged.
 
     ``workers > 0`` fans the per-shard sweeps out through
     :func:`repro.core.parallel.map_shards` (each partial is a picklable
     single-shard :class:`CdxIndex`); ``workers=0`` sweeps serially.
     Either way the merge is deterministic in shard order.
+
+    The signature geometry (``sig_bits``/``sig_ngram``/``sig_hashes``)
+    is a **per-index build parameter**: it is persisted in the CDX
+    header, validated on load, and every query against the index adapts
+    to it — the module constants are only defaults. ``sig_bits`` must be
+    a positive multiple of 64.
     """
+    import functools
+
     from repro.core.parallel import map_shards
 
-    partials = map_shards(_index_shard, [str(p) for p in paths],
-                          workers=workers)
+    if sig_bits <= 0 or sig_bits % 64:
+        raise ValueError(f"sig_bits must be a positive multiple of 64, "
+                         f"got {sig_bits}")
+    if sig_ngram < 1 or sig_hashes < 1:
+        raise ValueError("sig_ngram and sig_hashes must be >= 1")
+    sweep = functools.partial(_index_shard, sig_bits=sig_bits,
+                              sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+    partials = map_shards(sweep, [str(p) for p in paths], workers=workers)
     return CdxIndex.merge(partials)
 
 
@@ -377,10 +468,13 @@ class RandomAccessReader:
     The shard is opened once; every :meth:`read` is one seek + one member
     decode + one record parse — cost independent of archive size (the
     benchmark harness measures this against sequential scan-to-offset).
-    zstd shards have no compressed-domain member boundaries, so the
-    stream is decompressed once on first access and reads become
-    in-memory seeks (constant-time thereafter; the decompress is the
-    documented zstd trade-off, see ``streams.ZstdStream``).
+    zstd shards have no compressed-domain member boundaries; when the
+    caller supplies a ``frame`` hint (the v2 CDX stores one per record,
+    see :meth:`CdxIndex.frame_hint`), the reader seeks straight to the
+    containing compressed frame and decompresses only from there —
+    without a hint it falls back to decompressing the stream once on
+    first access (legacy v1 behaviour; reads then become in-memory
+    seeks).
     """
 
     def __init__(self, path: str, *, parse_http: bool = True,
@@ -393,9 +487,24 @@ class RandomAccessReader:
         self._verify = verify_digests
         self._zbuf: bytes | None = None
 
-    def read(self, offset: int) -> WarcRecord | None:
-        """Parse exactly the record starting at ``offset``."""
+    def read(self, offset: int,
+             frame: tuple[int, int] | None = None) -> WarcRecord | None:
+        """Parse exactly the record starting at ``offset``.
+
+        ``frame`` — optional ``(frame_off, frame_base)`` pair for zstd
+        shards: the compressed offset of the frame containing the record
+        and that frame's decompressed base. Ignored for member formats
+        (their offsets already address the compressed stream).
+        """
         if self.kind == "zstd":
+            if frame is not None and self._zbuf is None:
+                frame_off, frame_base = frame
+                self._f.seek(int(frame_off))
+                window = ForwardWindow(ZstdStream(self._f),
+                                       base=int(frame_base))
+                return read_record_at(window, int(offset),
+                                      parse_http=self._parse_http,
+                                      verify_digests=self._verify)
             if self._zbuf is None:
                 self._f.seek(0)
                 self._zbuf = ZstdStream(self._f).read()
@@ -444,7 +553,8 @@ def verify_index(index: CdxIndex, *, limit: int | None = None,
             if reader is None:
                 reader = readers[sid] = RandomAccessReader(
                     index.shard_paths[sid], parse_http=False)
-            record = reader.read(int(index.offset[i]))
+            record = reader.read(int(index.offset[i]),
+                                 frame=index.frame_hint(i))
             datas.append(record.content if record is not None else b"")
             headers.append(f"adler32:{int(index.digest[i]):08x}")
     finally:

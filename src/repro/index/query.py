@@ -18,12 +18,28 @@ to-more-expensive stages:
    power-of-two width bucketing keeps repeated ragged batches on a
    bounded set of compiled shapes.
 
+Stages 1–2 are reified as a :class:`QueryPlan` (``engine.plan`` /
+``engine.plan_regex``): the candidate row set plus everything stage 3
+needs to scan and verify one record. ``engine.execute`` runs a plan to
+hits; the serve-layer gateway (:mod:`repro.serve.archive`) instead
+*merges* the plans of concurrent queries and scans their candidates
+through shared multi-pattern kernel dispatches — same verification
+helpers, byte-identical hits.
+
+**Regex queries** (``search_regex``) compile to this same shape: the
+regex's required literal runs (extracted from the parsed pattern) drive
+the signature pre-filter and the kernel scan, and surviving candidates
+are host-verified with ``re`` — closing the pattern-literal-only gap
+(the WarcSearcher workload). A regex with no usable literal degrades to
+host ``re`` over the header-filtered candidates, still correct.
+
 ``engine.stats`` records how much work each stage avoided (candidate
 counts, records scanned, kernel dispatches) so the benchmarks can report
 indexed-query vs full-scan speedups honestly.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -32,7 +48,13 @@ from repro.core.warc.record import WarcRecordType
 from .cdx import CdxIndex, RandomAccessReader
 from .signature import candidate_mask
 
-__all__ = ["HeaderFilter", "PatternHit", "QueryEngine", "full_scan_search"]
+try:  # renamed in 3.11+; both expose the same parse tree
+    from re import _parser as _sre_parse  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - Python < 3.11
+    import sre_parse as _sre_parse  # type: ignore[no-redef]
+
+__all__ = ["HeaderFilter", "PatternHit", "QueryEngine", "QueryPlan",
+           "full_scan_search", "full_scan_regex", "required_literals"]
 
 _DEFAULT_BATCH_RECORDS = 64
 _DEFAULT_BATCH_BYTES = 4 << 20
@@ -49,6 +71,11 @@ class HeaderFilter:
     mime_prefix: bytes | None = None
     url_prefix: bytes | None = None
 
+    def key(self) -> tuple:
+        """Hashable identity (dataclass __hash__ is suppressed by eq)."""
+        return (None if self.record_type is None else int(self.record_type),
+                self.status, self.mime_prefix, self.url_prefix)
+
 
 @dataclass
 class PatternHit:
@@ -61,6 +88,134 @@ class PatternHit:
     n_matches: int
     positions: np.ndarray = field(repr=False)
     excerpt: bytes = b""
+
+
+@dataclass
+class QueryPlan:
+    """Stages 1–2 of one query, reified: what to scan and how to verify.
+
+    ``rows`` is the candidate set in fetch order (shard-grouped,
+    offset-sorted). Stage 3 scans each candidate for ``kernel_pattern``
+    on the device (``None`` → host-only scan), then
+    :meth:`verify` maps a candidate's literal hits to its final match
+    positions — full-literal compare for patterns longer than the kernel
+    window, ``re`` for regex queries. Plans from *different* queries can
+    be scanned through one shared kernel dispatch (the serve gateway
+    does), because verification is per-plan.
+    """
+
+    pattern: bytes               # the query as submitted (literal / source)
+    rows: np.ndarray             # candidate index rows, fetch order
+    kernel_pattern: bytes | None  # device-scannable literal prefix
+    literal: bytes | None        # full required literal (None: regex w/o one)
+    regex: "re.Pattern | None" = None
+
+    def verify(self, buf: bytes,
+               literal_positions: np.ndarray) -> tuple[np.ndarray, int]:
+        """Final match positions in ``buf`` + first-match byte length.
+
+        ``literal_positions`` are the scan stage's hits for
+        ``kernel_pattern`` (or for ``literal`` on the host path). The
+        length is what excerpting needs — fixed for literal queries,
+        the first match's span for regex.
+        """
+        if self.regex is not None:
+            if self.literal is not None and literal_positions.size == 0:
+                return np.empty(0, np.int64), 0
+            matches = list(self.regex.finditer(buf))
+            if not matches:
+                return np.empty(0, np.int64), 0
+            first = matches[0]
+            return (np.asarray([m.start() for m in matches], np.int64),
+                    max(first.end() - first.start(), 1))
+        lit = self.literal if self.literal is not None else self.pattern
+        positions = literal_positions
+        if self.kernel_pattern is not None and len(lit) > len(
+                self.kernel_pattern):
+            # kernel scanned a prefix; confirm the (few) survivors
+            positions = np.asarray(
+                [p for p in positions if buf[p:p + len(lit)] == lit],
+                np.int64)
+        return positions, len(lit)
+
+    @property
+    def needs_host_scan(self) -> bool:
+        """True when the scan stage itself must run on the host (no
+        device-safe literal: all-zero prefix, or a literal-free regex)."""
+        return self.kernel_pattern is None
+
+    def host_scan(self, buf: bytes) -> np.ndarray:
+        """Host-side scan-stage positions for one candidate payload —
+        the ``literal_positions`` input :meth:`verify` expects. A
+        literal-free regex has nothing to pre-scan for: a non-empty
+        sentinel makes verify() run the regex on every candidate."""
+        if self.regex is not None and self.literal is None:
+            return np.zeros(1, np.int64)
+        return host_positions(
+            buf, self.literal if self.literal is not None else self.pattern)
+
+
+def host_positions(buf: bytes, pattern: bytes) -> np.ndarray:
+    """All (overlapping) occurrences of ``pattern`` — host scan path."""
+    pos, i = [], buf.find(pattern)
+    while i >= 0:
+        pos.append(i)
+        i = buf.find(pattern, i + 1)
+    return np.asarray(pos, np.int64)
+
+
+def required_literals(pattern: bytes, flags: int = 0) -> list[bytes]:
+    """Literal byte runs every match of ``pattern`` must contain.
+
+    Conservative walk of the parsed regex: top-level concatenation
+    literals form runs; a group or a repeat with ``min >= 1`` is entered
+    (its own requirements hold at least once); branches, classes,
+    optional parts contribute nothing. Case-insensitive patterns return
+    no literals (the bytes are not required as written). Soundness is
+    what matters — every returned literal occurs in every match — since
+    literals only *pre-filter*; ``re`` always confirms.
+    """
+    if flags & re.IGNORECASE:
+        return []
+    try:
+        parsed = _sre_parse.parse(pattern, flags)
+    except re.error:
+        return []
+    # inline flags ((?i)...) surface only after the parse
+    if getattr(parsed.state, "flags", 0) & re.IGNORECASE:
+        return []
+    literals: list[bytes] = []
+
+    def walk(ops) -> None:
+        run = bytearray()
+
+        def flush() -> None:
+            if run:
+                literals.append(bytes(run))
+                run.clear()
+
+        for op, args in ops:
+            name = str(op)
+            if name == "LITERAL" and args <= 0xFF:
+                run.append(args)
+                continue
+            flush()
+            if name in ("MAX_REPEAT", "MIN_REPEAT"):
+                lo, _hi, sub = args
+                if lo >= 1:
+                    walk(sub)
+            elif name == "SUBPATTERN":
+                # scoped inline flags ((?i:...)) make the group's bytes
+                # not-required-as-written: contribute nothing from it
+                if not args[1] & re.IGNORECASE:
+                    walk(args[3])
+            elif name == "ATOMIC_GROUP":
+                walk(args)
+            # BRANCH / IN / ANY / AT / NOT_LITERAL / ...: no requirement
+        flush()
+
+    walk(parsed)
+    return [lit for lit in literals if lit]
 
 
 class QueryEngine:
@@ -109,7 +264,65 @@ class QueryEngine:
         """Index rows satisfying the header predicates (sorted)."""
         return np.flatnonzero(self.header_mask(flt))
 
-    # -- stage 2+3: pattern search ---------------------------------------
+    # -- stages 1+2: plan construction -----------------------------------
+    def _finish_plan(self, mask: np.ndarray, literals: list[bytes],
+                     prefilter: bool) -> np.ndarray:
+        """Apply the signature pre-filter and fix the fetch order."""
+        self.stats["queries"] += 1
+        self.stats["header_candidates"] += int(mask.sum())
+        if prefilter:
+            for lit in literals:
+                mask &= candidate_mask(self.index.signatures, lit,
+                                       n=self.index.sig_ngram,
+                                       k=self.index.sig_hashes)
+        rows = np.flatnonzero(mask)
+        self.stats["sig_candidates"] += int(rows.size)
+        # shard-grouped, offset-sorted fetch order for read locality
+        order = np.lexsort((self.index.offset[rows],
+                            self.index.shard_id[rows]))
+        return rows[order]
+
+    @staticmethod
+    def _kernel_literal(literal: bytes) -> bytes | None:
+        """Device-scannable prefix of a literal, or None (host scan)."""
+        from repro.kernels.pattern_scan.pattern_scan import MAX_PATTERN
+
+        kpat = literal[:MAX_PATTERN]
+        # all-zero prefix: the kernel wrapper rejects it (zero padding
+        # could false-positive); those rare queries scan on the host
+        return kpat if any(kpat) else None
+
+    def plan(self, pattern: bytes, flt: HeaderFilter | None = None, *,
+             prefilter: bool = True) -> QueryPlan:
+        """Stages 1+2 for a literal pattern query."""
+        pattern = bytes(pattern)
+        if not pattern:
+            raise ValueError("empty pattern")
+        rows = self._finish_plan(self.header_mask(flt), [pattern], prefilter)
+        return QueryPlan(pattern=pattern, rows=rows,
+                         kernel_pattern=self._kernel_literal(pattern),
+                         literal=pattern)
+
+    def plan_regex(self, regex: "bytes | re.Pattern",
+                   flt: HeaderFilter | None = None, *,
+                   prefilter: bool = True) -> QueryPlan:
+        """Stages 1+2 for a regex query: required literals drive the
+        pre-filter and the kernel scan; ``re`` verifies survivors."""
+        compiled = regex if isinstance(regex, re.Pattern) else re.compile(
+            regex)
+        if not isinstance(compiled.pattern, bytes):
+            raise TypeError("content scans need a bytes regex")
+        literals = required_literals(compiled.pattern, compiled.flags
+                                     & ~re.UNICODE)
+        rows = self._finish_plan(self.header_mask(flt), literals, prefilter)
+        scan_literal = max(literals, key=len) if literals else None
+        return QueryPlan(
+            pattern=compiled.pattern, rows=rows,
+            kernel_pattern=(self._kernel_literal(scan_literal)
+                            if scan_literal else None),
+            literal=scan_literal, regex=compiled)
+
+    # -- stage 3: execution ----------------------------------------------
     def search(self, pattern: bytes, flt: HeaderFilter | None = None, *,
                prefilter: bool = True) -> list[PatternHit]:
         """All records whose content block contains ``pattern``.
@@ -119,36 +332,35 @@ class QueryEngine:
         most ``batch_records`` records / ``batch_bytes`` bytes — each
         batch is one (bucketed) kernel dispatch, never one per record.
         """
-        pattern = bytes(pattern)
-        if not pattern:
-            raise ValueError("empty pattern")
-        mask = self.header_mask(flt)
-        self.stats["queries"] += 1
-        self.stats["header_candidates"] += int(mask.sum())
-        if prefilter:
-            mask &= candidate_mask(self.index.signatures, pattern,
-                                   n=self.index.sig_ngram,
-                                   k=self.index.sig_hashes)
-        rows = np.flatnonzero(mask)
-        self.stats["sig_candidates"] += int(rows.size)
-        # shard-grouped, offset-sorted fetch order for read locality
-        order = np.lexsort((self.index.offset[rows],
-                            self.index.shard_id[rows]))
+        return self.execute(self.plan(pattern, flt, prefilter=prefilter))
+
+    def search_regex(self, regex: "bytes | re.Pattern",
+                     flt: HeaderFilter | None = None, *,
+                     prefilter: bool = True) -> list[PatternHit]:
+        """All records whose content block matches ``regex`` (bytes).
+
+        ``n_matches``/``positions`` follow ``re.finditer`` semantics
+        (non-overlapping matches).
+        """
+        return self.execute(self.plan_regex(regex, flt, prefilter=prefilter))
+
+    def execute(self, plan: QueryPlan) -> list[PatternHit]:
+        """Run a plan's scan stage: fetch, batch, dispatch, verify."""
         hits: list[PatternHit] = []
         batch_rows: list[int] = []
         batch_bufs: list[bytes] = []
         pending = 0
-        for r in rows[order]:
+        for r in plan.rows:
             content = self._fetch(int(r))
             batch_rows.append(int(r))
             batch_bufs.append(content)
             pending += len(content)
             if (len(batch_rows) >= self.batch_records
                     or pending >= self.batch_bytes):
-                hits.extend(self._scan_batch(batch_rows, batch_bufs, pattern))
+                hits.extend(self._scan_batch(batch_rows, batch_bufs, plan))
                 batch_rows, batch_bufs, pending = [], [], 0
         if batch_rows:
-            hits.extend(self._scan_batch(batch_rows, batch_bufs, pattern))
+            hits.extend(self._scan_batch(batch_rows, batch_bufs, plan))
         hits.sort(key=lambda h: h.index_row)
         return hits
 
@@ -159,60 +371,45 @@ class QueryEngine:
         if reader is None:
             reader = self._readers[sid] = RandomAccessReader(
                 self.index.shard_paths[sid], parse_http=False)
-        record = reader.read(int(self.index.offset[row]))
+        record = reader.read(int(self.index.offset[row]),
+                             frame=self.index.frame_hint(row))
         return record.content if record is not None else b""
 
-    @staticmethod
-    def _host_positions(buf: bytes, pattern: bytes) -> np.ndarray:
-        pos, i = [], buf.find(pattern)
-        while i >= 0:
-            pos.append(i)
-            i = buf.find(pattern, i + 1)
-        return np.asarray(pos, np.int64)
+    def make_hit(self, row: int, buf: bytes, positions: np.ndarray,
+                 first_len: int) -> PatternHit:
+        """Assemble one hit (shared with the serve gateway)."""
+        first = int(positions[0])
+        excerpt = bytes(buf[max(0, first - 16):
+                            first + first_len + self.excerpt_bytes])
+        sid = int(self.index.shard_id[row])
+        return PatternHit(
+            index_row=row, shard=self.index.shard_paths[sid],
+            offset=int(self.index.offset[row]), uri=self.index.uri(row),
+            n_matches=int(positions.size), positions=positions,
+            excerpt=excerpt)
 
     def _scan_batch(self, rows: list[int], bufs: list[bytes],
-                    pattern: bytes) -> list[PatternHit]:
+                    plan: QueryPlan) -> list[PatternHit]:
         self.stats["batches"] += 1
         self.stats["records_scanned"] += len(rows)
         self.stats["bytes_scanned"] += sum(len(b) for b in bufs)
-        if self.use_kernel:
-            from repro.kernels.bucketing import bucket_width
+        if self.use_kernel and not plan.needs_host_scan:
+            from repro.kernels.bucketing import dispatch_count
             from repro.kernels.pattern_scan import find_pattern_mask_batch
-            from repro.kernels.pattern_scan.pattern_scan import MAX_PATTERN
 
-            # kernel scans the first MAX_PATTERN bytes; longer patterns
-            # get their (few) candidate positions host-verified
-            kpat = pattern[:MAX_PATTERN]
-            if not any(kpat):  # all-zero prefix: kernel rejects, host scans
-                positions = [self._host_positions(buf, pattern)
-                             for buf in bufs]
-            else:
-                masks = find_pattern_mask_batch(bufs, kpat,
-                                                block=self.scan_block,
-                                                interpret=self.interpret)
-                positions = [np.flatnonzero(m) for m in masks]
-                if len(pattern) > len(kpat):
-                    positions = [
-                        np.asarray([p for p in pos
-                                    if buf[p:p + len(pattern)] == pattern],
-                                   np.int64)
-                        for buf, pos in zip(bufs, positions)]
-                self.stats["kernel_dispatches"] += len(
-                    {bucket_width(len(b), self.scan_block) for b in bufs})
-        else:  # host fallback: plain bytes.find sweep
-            positions = [self._host_positions(buf, pattern) for buf in bufs]
+            masks = find_pattern_mask_batch(bufs, plan.kernel_pattern,
+                                            block=self.scan_block,
+                                            interpret=self.interpret)
+            lit_positions = [np.flatnonzero(m) for m in masks]
+            self.stats["kernel_dispatches"] += dispatch_count(
+                [len(b) for b in bufs], self.scan_block)
+        else:  # host fallback: plain bytes.find sweep (or regex verify-all)
+            lit_positions = [plan.host_scan(buf) for buf in bufs]
         hits = []
-        for row, buf, pos in zip(rows, bufs, positions):
-            if pos.size == 0:
-                continue
-            first = int(pos[0])
-            excerpt = bytes(buf[max(0, first - 16):
-                                first + len(pattern) + self.excerpt_bytes])
-            sid = int(self.index.shard_id[row])
-            hits.append(PatternHit(
-                index_row=row, shard=self.index.shard_paths[sid],
-                offset=int(self.index.offset[row]), uri=self.index.uri(row),
-                n_matches=int(pos.size), positions=pos, excerpt=excerpt))
+        for row, buf, lpos in zip(rows, bufs, lit_positions):
+            positions, first_len = plan.verify(buf, lpos)
+            if positions.size:
+                hits.append(self.make_hit(row, buf, positions, first_len))
         return hits
 
     # -- lifecycle -------------------------------------------------------
@@ -246,6 +443,21 @@ def full_scan_search(paths, pattern: bytes) -> dict[tuple[str, int], int]:
             while i >= 0:
                 n += 1
                 i = content.find(pattern, i + 1)
+            if n:
+                out[(str(path), record.stream_offset)] = n
+    return out
+
+
+def full_scan_regex(paths, regex: "bytes | re.Pattern"
+                    ) -> dict[tuple[str, int], int]:
+    """Regex oracle: ``re.finditer`` over every record of every shard."""
+    from repro.core.warc.fastwarc import FastWARCIterator
+
+    compiled = regex if isinstance(regex, re.Pattern) else re.compile(regex)
+    out: dict[tuple[str, int], int] = {}
+    for path in paths:
+        for record in FastWARCIterator(str(path), parse_http=False):
+            n = sum(1 for _ in compiled.finditer(record.content))
             if n:
                 out[(str(path), record.stream_offset)] = n
     return out

@@ -22,12 +22,24 @@ __all__ = ["IndexQueryService", "QueryRequest", "QueryResponse"]
 
 @dataclass
 class QueryRequest:
-    """One search: a byte pattern plus optional header predicates."""
+    """One search: a byte pattern plus optional header predicates.
+
+    ``regex=True`` interprets ``pattern`` as a bytes regex source
+    (served through :meth:`QueryEngine.search_regex`).
+    """
 
     pattern: bytes
     filters: HeaderFilter | None = None
     top_k: int = 10
     prefilter: bool = True
+    regex: bool = False
+
+    def scan_key(self) -> tuple:
+        """Identity of the *scan* this request needs (not of the
+        response shaping — ``top_k`` ranks after the scan), i.e. what
+        the serve gateway coalesces on."""
+        return (self.pattern, self.regex, self.prefilter,
+                None if self.filters is None else self.filters.key())
 
 
 @dataclass
@@ -64,8 +76,12 @@ class IndexQueryService:
         responses = []
         for req in requests:
             t0 = time.perf_counter()
-            hits = self.engine.search(req.pattern, req.filters,
-                                      prefilter=req.prefilter)
+            if req.regex:
+                hits = self.engine.search_regex(req.pattern, req.filters,
+                                                prefilter=req.prefilter)
+            else:
+                hits = self.engine.search(req.pattern, req.filters,
+                                          prefilter=req.prefilter)
             # rank: most matches first, index order breaks ties (stable)
             ranked = sorted(hits, key=lambda h: -h.n_matches)
             responses.append(QueryResponse(

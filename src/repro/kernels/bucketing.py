@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["as_u8", "bucket_width"]
+__all__ = ["as_u8", "bucket_width", "dispatch_count"]
 
 
 def as_u8(data) -> np.ndarray:
@@ -26,3 +26,11 @@ def bucket_width(size: int, block: int) -> int:
     """Block-multiple width bucket: next power-of-two block count."""
     nblocks = max((size + block - 1) // block, 1)
     return block * (1 << (nblocks - 1).bit_length())
+
+
+def dispatch_count(sizes, block: int) -> int:
+    """Kernel dispatches a batch of these payload sizes costs: one per
+    distinct width bucket (what the batched wrappers actually issue).
+    Consumers that account dispatches (query engine, serve gateway)
+    share this so their books match the wrappers."""
+    return len({bucket_width(int(s), block) for s in sizes})

@@ -15,10 +15,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
-from .pattern_scan import DEFAULT_BLOCK, MAX_PATTERN, pattern_scan_batch
+from .pattern_scan import (
+    DEFAULT_BLOCK,
+    MAX_PATTERN,
+    pattern_scan_batch,
+    pattern_scan_batch_multi,
+)
 
 __all__ = ["find_pattern_mask", "find_pattern_mask_batch",
-           "find_pattern_positions", "count_matches"]
+           "find_pattern_masks_multi", "find_pattern_positions",
+           "count_matches"]
 
 
 def _check_pattern(pattern) -> tuple[np.ndarray, int]:
@@ -49,6 +55,13 @@ def _pack(bufs: list[np.ndarray], block: int, width: int
     return ext[:, :width], halos
 
 
+def _pad_rows(n: int) -> int:
+    """Row-count bucket: next power of two, so repeated ragged batches
+    reuse a bounded set of compiled ``(B, W)`` shapes along B as well as
+    W (pad rows are all-zero buffers; their masks are discarded)."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
 def _trim(mask_row: np.ndarray, n: int, plen: int) -> np.ndarray:
     out = np.array(mask_row[:n])  # own the buffer: device arrays are read-only
     # matches that would read past the true end are padding artifacts
@@ -77,14 +90,65 @@ def find_pattern_mask_batch(bufs, pattern, *, block: int = DEFAULT_BLOCK,
     buckets: dict[int, list[int]] = {}
     for i, arr in enumerate(arrs):
         buckets.setdefault(bucket_width(arr.size, block), []).append(i)
+    empty = np.empty(0, np.uint8)
     for width, idxs in buckets.items():
-        padded, halos = _pack([arrs[i] for i in idxs], block, width)
+        rows = [arrs[i] for i in idxs]
+        rows += [empty] * (_pad_rows(len(rows)) - len(rows))
+        padded, halos = _pack(rows, block, width)
         masks = pattern_scan_batch(jnp.asarray(padded), jnp.asarray(halos),
                                    jnp.asarray(pat_vec), pat_len=plen,
                                    block=block, interpret=interpret)
         masks = np.asarray(masks)
         for row, i in enumerate(idxs):
             out[i] = _trim(masks[row], arrs[i].size, plen)
+    return out
+
+
+def find_pattern_masks_multi(bufs, patterns, *, block: int = DEFAULT_BLOCK,
+                             interpret: bool = True) -> list[np.ndarray]:
+    """Match masks for a ragged batch where **each row has its own
+    pattern** — the cross-request batching entry point.
+
+    ``patterns[i]`` scans ``bufs[i]``; rows from different queries that
+    land in the same power-of-two width bucket share one
+    ``pattern_scan_batch_multi`` dispatch (the unroll bound is the
+    bucket's longest pattern). Same bucketing/trim semantics as
+    :func:`find_pattern_mask_batch`, so for equal patterns the two are
+    interchangeable.
+    """
+    if len(bufs) != len(patterns):
+        raise ValueError("bufs and patterns must pair up")
+    arrs = [_as_u8(b) for b in bufs]
+    pats: list[np.ndarray] = []
+    plens: list[int] = []
+    for p in patterns:
+        vec, n = _check_pattern(p)
+        pats.append(vec)
+        plens.append(n)
+    if not arrs:
+        return []
+    out: list = [None] * len(arrs)
+    buckets: dict[int, list[int]] = {}
+    for i, arr in enumerate(arrs):
+        buckets.setdefault(bucket_width(arr.size, block), []).append(i)
+    empty = np.empty(0, np.uint8)
+    pad_pat = np.zeros(MAX_PATTERN, np.uint8)
+    pad_pat[0] = 1  # inert: never matches an all-zero pad row
+    for width, idxs in buckets.items():
+        rows = [arrs[i] for i in idxs]
+        n_pad = _pad_rows(len(rows)) - len(rows)
+        rows += [empty] * n_pad
+        padded, halos = _pack(rows, block, width)
+        pat_mat = np.stack([pats[i] for i in idxs] + [pad_pat] * n_pad)
+        lens = np.asarray([[plens[i]] for i in idxs] + [[1]] * n_pad,
+                          np.int32)
+        masks = pattern_scan_batch_multi(
+            jnp.asarray(padded), jnp.asarray(halos), jnp.asarray(pat_mat),
+            jnp.asarray(lens), max_len=max(plens[i] for i in idxs),
+            block=block, interpret=interpret)
+        masks = np.asarray(masks)
+        for row, i in enumerate(idxs):
+            out[i] = _trim(masks[row], arrs[i].size, plens[i])
     return out
 
 

@@ -48,6 +48,61 @@ def _scan_kernel(buf_ref, halo_ref, pat_ref, mask_ref, *,
     mask_ref[0, :] = acc.astype(jnp.uint8)
 
 
+def _scan_kernel_multi(buf_ref, halo_ref, pat_ref, len_ref, mask_ref, *,
+                       block: int, max_len: int):
+    """One grid step with a *per-row* pattern (cross-request batching).
+
+    ``pat_ref`` holds this row's padded pattern and ``len_ref`` its true
+    length; compare positions past the length are forced to match, so
+    rows carrying different-length patterns coexist in one dispatch.
+    """
+    ext = jnp.concatenate([buf_ref[0, :], halo_ref[0, :]])
+    plen = len_ref[0, 0]
+    acc = ext[0:block] == pat_ref[0, 0]
+    for j in range(1, max_len):  # unrolled: max_len is static per dispatch
+        hit = ext[j:j + block] == pat_ref[0, j]
+        acc = jnp.logical_and(acc, jnp.logical_or(hit, j >= plen))
+    mask_ref[0, :] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "block", "interpret"))
+def pattern_scan_batch_multi(padded_bufs: jax.Array, halos: jax.Array,
+                             pattern_mat: jax.Array, pat_lens: jax.Array, *,
+                             max_len: int, block: int = DEFAULT_BLOCK,
+                             interpret: bool = True) -> jax.Array:
+    """Per-row-pattern match masks — **one** dispatch for a mixed batch.
+
+    The cross-request primitive behind ``repro.serve.archive``: rows
+    belonging to *different* queries (different patterns, same width
+    bucket) share a single ``pallas_call``. ``pattern_mat`` is
+    ``(B, MAX_PATTERN)`` uint8 (zero-padded), ``pat_lens`` is ``(B, 1)``
+    int32; ``max_len`` bounds the static compare unroll (the longest
+    true pattern in the batch). Everything else matches
+    :func:`pattern_scan_batch`.
+    """
+    nrows, width = padded_bufs.shape
+    assert width % block == 0, "wrapper must pad to a block multiple"
+    nblocks = width // block
+    assert halos.shape == (nrows, nblocks * MAX_PATTERN)
+    assert pattern_mat.shape == (nrows, MAX_PATTERN)
+    assert pat_lens.shape == (nrows, 1)
+    kernel = functools.partial(_scan_kernel_multi, block=block,
+                               max_len=max_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrows, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda b, j: (b, j)),
+            pl.BlockSpec((1, MAX_PATTERN), lambda b, j: (b, j)),
+            pl.BlockSpec((1, MAX_PATTERN), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((nrows, width), jnp.uint8),
+        interpret=interpret,
+    )(padded_bufs, halos, pattern_mat, pat_lens)
+
+
 @functools.partial(jax.jit, static_argnames=("pat_len", "block", "interpret"))
 def pattern_scan_batch(padded_bufs: jax.Array, halos: jax.Array,
                        pattern_vec: jax.Array, *, pat_len: int,

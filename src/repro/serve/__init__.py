@@ -1,1 +1,24 @@
-"""Serving substrate: KV-cache decode loop with batched request handling."""
+"""Serving substrate: the "heavy traffic" layers of the reproduction.
+
+* :mod:`.engine` — batched LM serving (KV-cache prefill + decode loop);
+* :mod:`.archive` — the async archive query gateway: admission queue
+  with backpressure, request coalescing, cross-request kernel batching
+  and a byte-budgeted record cache over :mod:`repro.index`;
+* :mod:`.cache` / :mod:`.metrics` — the gateway's payload LRU and its
+  measurement surface.
+
+``.engine`` pulls in jax + the model stack, so it is imported lazily by
+its users rather than here; the archive gateway imports light.
+"""
+from .archive import ArchiveGateway, GatewayClosed, GatewayOverloaded
+from .cache import RecordCache
+from .metrics import GatewayMetrics, percentile
+
+__all__ = [
+    "ArchiveGateway",
+    "GatewayClosed",
+    "GatewayOverloaded",
+    "GatewayMetrics",
+    "RecordCache",
+    "percentile",
+]

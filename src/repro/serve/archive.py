@@ -1,0 +1,407 @@
+"""``repro.serve.archive`` — async archive query gateway (DESIGN.md §8).
+
+PR 2's :class:`~repro.index.service.IndexQueryService` is synchronous:
+every request pays for its own scan, so concurrent clients asking
+overlapping questions redundantly decompress the same records and issue
+near-identical kernel dispatches. This module is the multi-tenant layer
+that aggregates that work *before* touching the archive:
+
+* **admission queue with backpressure** — a bounded queue; ``submit``
+  blocks (or raises :class:`GatewayOverloaded`) when serving cannot keep
+  up, so memory stays bounded under heavy traffic;
+* **request coalescing** — identical in-flight scans (same pattern +
+  predicates + prefilter, see ``QueryRequest.scan_key``) are executed
+  **once**; every waiter gets the same hit list, shaped per-request
+  (``top_k``). Late arrivals attach to an executing scan without ever
+  entering the queue;
+* **cross-request kernel batching** — candidate records from
+  *different* concurrent queries are packed into shared
+  :func:`~repro.kernels.pattern_scan.find_pattern_masks_multi`
+  dispatches (the per-row-pattern kernel): one Pallas call serves many
+  requests, with padding bounded by the usual power-of-two width
+  buckets;
+* **record cache** — a byte-budgeted LRU of decompressed payloads
+  (:mod:`repro.serve.cache`) keyed by ``(shard, offset)``, so repeat
+  candidates across requests skip the decompress entirely;
+* **metrics** — :mod:`repro.serve.metrics` records p50/p99 latency,
+  coalesce rate, dispatches-per-request and cache hit rate, making the
+  aggregation wins checkable (``BENCH_serve.json``).
+
+Correctness bar: responses are **byte-identical** to what an independent
+synchronous :class:`~repro.index.query.QueryEngine` run would produce —
+coalescing, caching and shared dispatch change *when* work happens,
+never *what* is computed (the soak + property tests assert exactly
+this).
+
+One scheduler thread owns the engine, the cache fills, and the device;
+submission is thread-safe from any number of client threads.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.index.cdx import CdxIndex
+from repro.index.query import PatternHit, QueryEngine, QueryPlan
+from repro.index.service import QueryRequest, QueryResponse
+from .cache import RecordCache
+from .metrics import GatewayMetrics
+
+__all__ = ["ArchiveGateway", "GatewayClosed", "GatewayOverloaded"]
+
+
+class GatewayOverloaded(RuntimeError):
+    """Admission queue full: backpressure instead of unbounded growth."""
+
+
+class GatewayClosed(RuntimeError):
+    """Request submitted to (or still pending in) a closed gateway."""
+
+
+@dataclass
+class _Ticket:
+    """One submitted request and its completion future."""
+
+    request: QueryRequest
+    future: Future = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+class ArchiveGateway:
+    """Asynchronous, coalescing, cross-request-batching query front end.
+
+    >>> with ArchiveGateway(index) as gw:
+    ...     fut = gw.submit(QueryRequest(b"nginx"))
+    ...     response = fut.result()
+    ...     gw.metrics.snapshot(gw.cache)["dispatches_per_request"]
+
+    Parameters
+    ----------
+    index:
+        the corpus CDX index the gateway serves.
+    engine:
+        optional pre-built :class:`QueryEngine`; owned (and closed) by
+        the gateway either way. Only the scheduler thread touches it.
+    max_pending:
+        admission-queue bound — the backpressure knob.
+    max_batch_requests:
+        how many queued requests one scheduler drain may aggregate.
+    cache_bytes:
+        byte budget of the decompressed-payload LRU.
+    """
+
+    def __init__(self, index: CdxIndex, *, engine: QueryEngine | None = None,
+                 max_pending: int = 256, max_batch_requests: int = 16,
+                 cache_bytes: int = 64 << 20, use_kernel: bool = True,
+                 interpret: bool = True, poll_interval_s: float = 0.02
+                 ) -> None:
+        self.engine = engine if engine is not None else QueryEngine(
+            index, use_kernel=use_kernel, interpret=interpret)
+        self.index = self.engine.index
+        self.cache = RecordCache(cache_bytes)
+        self.metrics = GatewayMetrics()
+        self.max_batch_requests = max(1, max_batch_requests)
+        self._poll = poll_interval_s
+        self._queue: "queue.Queue[_Ticket]" = queue.Queue(max(1, max_pending))
+        self._inflight: dict[tuple, list[_Ticket]] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="archive-gateway")
+        self._thread.start()
+
+    # -- client side -----------------------------------------------------
+    def submit(self, request: QueryRequest, *, block: bool = True,
+               timeout: float | None = None) -> "Future[QueryResponse]":
+        """Queue one request; returns the future of its response.
+
+        An identical scan already **executing** is joined directly (the
+        in-flight coalescing fast path, no queue slot); identical
+        requests sitting in the queue merge when the scheduler drains
+        them into the same batch. With ``block=False`` (or on
+        ``timeout``) a full queue raises :class:`GatewayOverloaded` —
+        backpressure the caller can see.
+        """
+        if self._closed:
+            raise GatewayClosed("gateway is closed")
+        ticket = _Ticket(request)
+        with self._lock:
+            waiters = self._inflight.get(request.scan_key())
+            if waiters is not None:
+                waiters.append(ticket)
+                self.metrics.inc("requests")
+                self.metrics.inc("coalesced")
+                return ticket.future
+        try:
+            self._queue.put(ticket, block=block, timeout=timeout)
+        except queue.Full:
+            self.metrics.inc("rejected")
+            raise GatewayOverloaded(
+                f"admission queue full ({self._queue.maxsize} pending)")
+        if self._closed and not self._thread.is_alive():
+            # raced close(): we passed the closed check before close()
+            # flipped it, but enqueued after the scheduler exited — no
+            # one will drain the queue again, so fail it now
+            self._fail_queued()
+        self.metrics.inc("requests")
+        return ticket.future
+
+    def query(self, request: QueryRequest,
+              timeout: float | None = None) -> QueryResponse:
+        """Synchronous convenience: submit and wait."""
+        return self.submit(request).result(timeout)
+
+    def pending(self) -> int:
+        return self._queue.qsize()
+
+    # -- scheduler -------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            try:
+                first = self._queue.get(timeout=self._poll)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return  # drained: every accepted request was served
+                continue
+            batch = [first]
+            while len(batch) < self.max_batch_requests:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            try:
+                self._serve_batch(batch)
+            except BaseException:  # the scheduler must outlive any batch
+                self.metrics.inc("errors")
+
+    def _serve_batch(self, tickets: list[_Ticket]) -> None:
+        # group by scan identity; first occurrence keeps submission order
+        groups: dict[tuple, list[_Ticket]] = {}
+        for ticket in tickets:
+            key = ticket.request.scan_key()
+            if key in groups:
+                groups[key].append(ticket)
+                self.metrics.inc("coalesced")
+            else:
+                groups[key] = [ticket]
+        with self._lock:
+            # publish the in-flight registry: identical requests submitted
+            # while we scan attach to these lists and never enter the queue
+            self._inflight.update(groups)
+        self.metrics.inc("scan_batches")
+        self.metrics.inc("unique_scans", len(groups))
+        results: dict[tuple, list[PatternHit]] = {}
+        failures: dict[tuple, BaseException] = {}
+        try:
+            plans = {}
+            for key, waiters in groups.items():
+                try:
+                    plans[key] = self._plan(waiters[0].request)
+                except Exception as exc:  # malformed query: fail only its
+                    failures[key] = exc   # own waiters, not the batch
+                    self.metrics.inc("errors")
+            results = self._execute_plans(plans)
+        except BaseException as exc:  # scan failure: resolve all, keep serving
+            self.metrics.inc("errors")
+            failures = {key: failures.get(key, exc) for key in groups}
+        finally:
+            with self._lock:
+                waiters = {key: self._inflight.pop(key) for key in groups}
+        now = time.perf_counter()
+        for key, tickets_for_key in waiters.items():
+            hits = results.get(key, [])
+            error = failures.get(key)
+            # rank: most matches first, index order breaks ties (stable) —
+            # identical to IndexQueryService
+            ranked = sorted(hits, key=lambda h: -h.n_matches)
+            for ticket in tickets_for_key:
+                # a client may have cancel()ed while we scanned; claiming
+                # the future first makes the set_* below race-free (and a
+                # cancelled ticket must not kill the scheduler)
+                if not ticket.future.set_running_or_notify_cancel():
+                    continue
+                if error is not None:
+                    ticket.future.set_exception(error)
+                    continue
+                latency = now - ticket.t_submit
+                ticket.future.set_result(QueryResponse(
+                    request=ticket.request,
+                    hits=ranked[:ticket.request.top_k],
+                    total_matches=len(hits), latency_s=latency))
+                self.metrics.observe_latency(latency)
+                self.metrics.inc("responses")
+
+    def _plan(self, request: QueryRequest) -> QueryPlan:
+        if request.regex:
+            return self.engine.plan_regex(request.pattern, request.filters,
+                                          prefilter=request.prefilter)
+        return self.engine.plan(request.pattern, request.filters,
+                                prefilter=request.prefilter)
+
+    # -- cache-aware fetch ----------------------------------------------
+    def _fetch(self, row: int) -> bytes:
+        key = (int(self.index.shard_id[row]), int(self.index.offset[row]))
+        data = self.cache.get(key)
+        if data is None:
+            data = self.engine._fetch(row)
+            self.cache.put(key, data)
+            self.metrics.inc("records_fetched")
+        return data
+
+    # -- cross-request scan ----------------------------------------------
+    def _execute_plans(self, plans: dict[tuple, QueryPlan]
+                       ) -> dict[tuple, list[PatternHit]]:
+        """Scan all plans' candidates through *shared* kernel dispatches.
+
+        Every (plan, candidate row) pair becomes one scan item; items
+        from different plans are chunked together under the engine's
+        batch_records / batch_bytes limits (sized from the index's
+        ``uncomp_len`` column, so chunking decides before any payload is
+        decompressed) and each chunk goes through one multi-pattern
+        dispatch per width bucket — the request count no longer shows up
+        in the dispatch count. Payloads are fetched per chunk in
+        shard/offset order (deduped inside the chunk, the cache absorbs
+        repeats across chunks), scanned and verified, then released —
+        resident memory stays bounded by chunk size + cache budget, like
+        the sync engine's streaming execute.
+        """
+        results: dict[tuple, list[PatternHit]] = {key: [] for key in plans}
+        kernel_items: list[tuple[tuple, int]] = []  # (plan key, row)
+        host_items: list[tuple[tuple, int]] = []
+        for key, plan in plans.items():
+            target = (host_items if plan.needs_host_scan
+                      or not self.engine.use_kernel else kernel_items)
+            target.extend((key, int(r)) for r in plan.rows)
+
+        def fetch_order(item: tuple[tuple, int]) -> tuple[int, int]:
+            return (int(self.index.shard_id[item[1]]),
+                    int(self.index.offset[item[1]]))
+
+        kernel_items.sort(key=fetch_order)
+        host_items.sort(key=fetch_order)
+
+        n_scanned = bytes_scanned = 0
+        for chunk in self._chunks(kernel_items):
+            bufs: dict[int, bytes] = {}
+            for _, row in chunk:  # dedupe: shared rows fetched once
+                if row not in bufs:
+                    bufs[row] = self._fetch(row)
+            self._scan_chunk(chunk, plans, bufs, results)
+            n_scanned += len(chunk)
+            bytes_scanned += sum(len(bufs[row]) for _, row in chunk)
+
+        # host path (literal sweep / regex gate, no device work): same
+        # chunked fetch-dedup-release structure as the kernel path
+        for chunk in self._chunks(host_items):
+            bufs = {}
+            for _, row in chunk:
+                if row not in bufs:
+                    bufs[row] = self._fetch(row)
+            for key, row in chunk:
+                plan = plans[key]
+                buf = bufs[row]
+                self._finish_row(plan, key, row, buf, plan.host_scan(buf),
+                                 results)
+                n_scanned += 1
+                bytes_scanned += len(buf)
+
+        self.metrics.inc("host_scans", len(host_items))
+        self.metrics.inc("records_scanned", n_scanned)
+        self.metrics.inc("bytes_scanned", bytes_scanned)
+        for hits in results.values():
+            hits.sort(key=lambda h: h.index_row)
+        return results
+
+    def _chunks(self, items: list[tuple[tuple, int]]
+                ) -> "list[list[tuple[tuple, int]]]":
+        """Split scan items under the engine's batch record/byte limits,
+        sized from the index (``uncomp_len`` == payload length)."""
+        chunks: list[list[tuple[tuple, int]]] = []
+        current: list[tuple[tuple, int]] = []
+        pending = 0
+        for item in items:
+            current.append(item)
+            pending += int(self.index.uncomp_len[item[1]])
+            if (len(current) >= self.engine.batch_records
+                    or pending >= self.engine.batch_bytes):
+                chunks.append(current)
+                current, pending = [], 0
+        if current:
+            chunks.append(current)
+        return chunks
+
+    def _finish_row(self, plan: QueryPlan, key: tuple, row: int, buf: bytes,
+                    lit_positions: np.ndarray,
+                    results: dict[tuple, list[PatternHit]]) -> None:
+        final, first_len = plan.verify(buf, lit_positions)
+        if final.size:
+            results[key].append(self.engine.make_hit(row, buf, final,
+                                                     first_len))
+
+    def _scan_chunk(self, chunk: list[tuple[tuple, int]],
+                    plans: dict[tuple, QueryPlan], bufs: dict[int, bytes],
+                    results: dict[tuple, list[PatternHit]]) -> None:
+        from repro.kernels.bucketing import dispatch_count
+        from repro.kernels.pattern_scan import find_pattern_masks_multi
+
+        chunk_bufs = [bufs[row] for _, row in chunk]
+        chunk_pats = [plans[key].kernel_pattern for key, _ in chunk]
+        masks = find_pattern_masks_multi(chunk_bufs, chunk_pats,
+                                         block=self.engine.scan_block,
+                                         interpret=self.engine.interpret)
+        self.metrics.inc("kernel_dispatches", dispatch_count(
+            [len(b) for b in chunk_bufs], self.engine.scan_block))
+        for (key, row), mask, buf in zip(chunk, masks, chunk_bufs):
+            self._finish_row(plans[key], key, row, buf,
+                             np.flatnonzero(mask), results)
+
+    # -- lifecycle -------------------------------------------------------
+    def _fail_queued(self) -> None:
+        """Fail every currently queued ticket with :class:`GatewayClosed`
+        (queue gets hand tickets to exactly one caller each, so this can
+        race a live scheduler without double-resolving any future)."""
+        while True:
+            try:
+                ticket = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if ticket.future.set_running_or_notify_cancel():
+                ticket.future.set_exception(GatewayClosed("gateway closed"))
+
+    def close(self, *, drain: bool = True, timeout: float = 30.0) -> None:
+        """Stop the scheduler; by default serve everything already queued.
+
+        ``drain=False`` fails queued-but-unserved requests with
+        :class:`GatewayClosed` instead of serving them. Raises
+        ``TimeoutError`` if the scheduler is still mid-scan after
+        ``timeout`` — the engine is left open for it; call ``close``
+        again to retry teardown.
+        """
+        if self._closed and not self._thread.is_alive():
+            return
+        self._closed = True  # reject new submissions immediately
+        if not drain:
+            self._fail_queued()
+        self._stop.set()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"gateway scheduler still serving after {timeout}s; "
+                f"engine left open — retry close() to finish teardown")
+        # a submit that passed the closed check concurrently with close()
+        # may have enqueued after the scheduler exited — fail it rather
+        # than leave its future forever pending
+        self._fail_queued()
+        self.engine.close()
+
+    def __enter__(self) -> "ArchiveGateway":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

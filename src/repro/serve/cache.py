@@ -1,0 +1,95 @@
+"""Byte-budgeted LRU cache of decompressed record payloads.
+
+The gateway-level counterpart of the paper's decompression bottleneck:
+under concurrent query traffic the same few hot records are fetched (and
+therefore decompressed) over and over — exactly the repeated work the
+archive-scale analytics discipline says to aggregate away. Entries are
+keyed by ``(shard_id, offset)`` (the CDX-addressable identity of a
+record) and the budget is in *bytes*, not entries, because archive
+payloads are wildly ragged: a handful of megabyte pages must not be
+allowed to masquerade as a "small" cache.
+
+Thread-safe; eviction is strict LRU. Payloads larger than the whole
+budget are not admitted (one oversize record must not flush everything).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+__all__ = ["RecordCache"]
+
+
+class RecordCache:
+    """LRU over ``(shard_id, offset) -> bytes`` with a byte budget."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        if budget_bytes < 0:
+            raise ValueError("budget_bytes must be >= 0")
+        self.budget_bytes = budget_bytes
+        self._entries: "OrderedDict[tuple[int, int], bytes]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.rejected_oversize = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def bytes_cached(self) -> int:
+        return self._bytes
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def get(self, key: tuple[int, int]) -> bytes | None:
+        with self._lock:
+            data = self._entries.get(key)
+            if data is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return data
+
+    def put(self, key: tuple[int, int], data: bytes) -> bool:
+        """Admit ``data``; returns False when it exceeds the budget."""
+        size = len(data)
+        with self._lock:
+            if size > self.budget_bytes:
+                self.rejected_oversize += 1
+                return False
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._entries[key] = data
+            self._bytes += size
+            while self._bytes > self.budget_bytes:
+                _, evicted = self._entries.popitem(last=False)
+                self._bytes -= len(evicted)
+                self.evictions += 1
+            return True
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+    def snapshot(self) -> dict:
+        """Counters for the metrics surface."""
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "bytes_cached": self._bytes,
+                "budget_bytes": self.budget_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "rejected_oversize": self.rejected_oversize,
+                "hit_rate": self.hit_rate,
+            }

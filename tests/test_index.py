@@ -6,6 +6,7 @@ Tier-2 selection: ``pytest -m index`` (marker registered in pytest.ini);
 the whole module also runs under the tier-1 suite.
 """
 import os
+import re
 import zlib
 
 import numpy as np
@@ -23,6 +24,7 @@ from repro.index import (
     QueryRequest,
     RandomAccessReader,
     build_index,
+    full_scan_regex,
     full_scan_search,
     verify_index,
 )
@@ -376,3 +378,205 @@ def test_service_ranks_and_truncates(corpus):
         assert service.stats["requests"] == 3
         assert service.stats["batches"] == 2  # batch_size=2 → 2 batches
         assert all(r.latency_s > 0 for r in responses)
+
+
+# --------------------------------------------------------------------------
+# Regex queries (literal extraction + kernel pre-scan + host verify)
+# --------------------------------------------------------------------------
+
+def test_required_literals_extraction():
+    from repro.index import required_literals
+
+    assert required_literals(rb"nginx/1\.1[67]") == [b"nginx/1.1"]
+    assert required_literals(rb"(GET|POST) /index") == [b" /index"]
+    assert required_literals(rb"https?://[a-z]+\.edu") == [
+        b"http", b"://", b".edu"]
+    assert required_literals(rb"(abc)+xyz") == [b"abc", b"xyz"]
+    # no usable literal → empty (host fallback, still correct)
+    assert required_literals(rb"[a-z]{4,}") == []
+    # case-insensitive bytes are not required as written — unsound to use
+    assert required_literals(rb"(?i)hello") == []
+    assert required_literals(rb"hello", re.IGNORECASE) == []
+    # scoped inline flags: only the group's bytes become non-required
+    assert required_literals(rb"(?i:NGINX)") == []
+    assert required_literals(rb"foo(?i:BAR)baz") == [b"foo", b"baz"]
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_regex_query_equals_full_scan(corpus, use_kernel):
+    paths, idx = corpus
+    with QueryEngine(idx, use_kernel=use_kernel, batch_records=16) as engine:
+        for rx in (rb"nginx/1\.1[0-9]", rb"[Aa]rchive", rb"</(html|body)>",
+                   rb"xyzzy-missing", rb"crawl-[0-9]+",
+                   rb"(?i)NGINX", rb"serv(?i:ER: NGINX)/",
+                   rb"[a-z]+@[a-z]+",
+                   rb"this-literal-is-longer-than-sixteen-bytes.*x?"):
+            hits = engine.search_regex(rx)
+            naive = full_scan_regex(paths, rx)
+            assert {(h.shard, h.offset): h.n_matches
+                    for h in hits} == naive, rx
+
+
+def test_regex_literal_prefilter_skips_fetches(corpus):
+    _, idx = corpus
+    with QueryEngine(idx) as engine:
+        engine.search_regex(rb"absent-needle-[0-9]{4}!")
+        # the required literal drove the signature pre-filter: almost
+        # nothing was fetched for a miss pattern
+        assert engine.stats["records_scanned"] < len(idx)
+
+
+def test_regex_requires_bytes_pattern(corpus):
+    _, idx = corpus
+    with QueryEngine(idx) as engine:
+        with pytest.raises(TypeError, match="bytes regex"):
+            engine.search_regex("str-regex-[0-9]+")
+
+
+def test_service_serves_regex_requests(corpus):
+    paths, idx = corpus
+    rx = rb"nginx/1\.1[0-9]"
+    with IndexQueryService(idx) as service:
+        resp = service.serve([QueryRequest(rx, regex=True, top_k=100)])[0]
+    assert {(h.shard, h.offset): h.n_matches
+            for h in resp.hits} == full_scan_regex(paths, rx)
+
+
+# --------------------------------------------------------------------------
+# Per-index signature geometry (build parameter, persisted + validated)
+# --------------------------------------------------------------------------
+
+def test_signature_width_is_a_build_parameter(corpus, tmp_path):
+    paths, _ = corpus
+    idx = build_index(paths, sig_bits=512, sig_ngram=3, sig_hashes=1)
+    assert (idx.sig_bits, idx.sig_ngram, idx.sig_hashes) == (512, 3, 1)
+    assert idx.signatures.shape == (len(idx), 512 // 64)
+    p = str(tmp_path / "narrow.cdx")
+    idx.save(p)
+    loaded = CdxIndex.load(p)
+    assert (loaded.sig_bits, loaded.sig_ngram, loaded.sig_hashes) == (
+        512, 3, 1)
+    # queries adapt to the stored geometry and stay exact
+    with QueryEngine(loaded) as engine:
+        for pattern in (b"archive", b"absent-from-corpus"):
+            hits = engine.search(pattern)
+            assert {(h.shard, h.offset): h.n_matches
+                    for h in hits} == full_scan_search(paths, pattern)
+
+
+def test_build_index_rejects_bad_signature_geometry(corpus):
+    paths, _ = corpus
+    with pytest.raises(ValueError, match="multiple of 64"):
+        build_index(paths, sig_bits=100)
+    with pytest.raises(ValueError, match=">= 1"):
+        build_index(paths, sig_hashes=0)
+
+
+def test_load_rejects_corrupt_signature_header(corpus, tmp_path):
+    _, idx = corpus
+    p = str(tmp_path / "c.cdx")
+    idx.save(p)
+    blob = bytearray(open(p, "rb").read())
+    import struct as _struct
+    _struct.pack_into("<I", blob, 12, 100)  # sig_bits: not a multiple of 64
+    bad = str(tmp_path / "bad_bits.cdx")
+    open(bad, "wb").write(bytes(blob))
+    with pytest.raises(ValueError, match="signature width"):
+        CdxIndex.load(bad)
+
+
+# --------------------------------------------------------------------------
+# zstd frame table (compressed-domain random access)
+# --------------------------------------------------------------------------
+
+def _raw_zstd_frame(payload: bytes, checksum: bool = False) -> bytes:
+    """Hand-built store-only zstd frame (raw blocks): lets the walker be
+    tested without the zstandard module."""
+    import struct as _struct
+    out = bytearray(b"\x28\xb5\x2f\xfd")
+    out.append(0x20 | (0x04 if checksum else 0))  # single-segment, FCS=1B
+    out.append(len(payload))
+    half = len(payload) // 2
+    for part, last in ((payload[:half], 0), (payload[half:], 1)):
+        out += _struct.pack("<I", (len(part) << 3) | last)[:3]
+        out += part
+    if checksum:
+        out += b"\x00" * 4
+    return bytes(out)
+
+
+def test_zstd_frame_walker_pure():
+    import struct as _struct
+
+    from repro.core.warc.zstd_frames import frame_table, walk_frames
+
+    blob = (_raw_zstd_frame(b"A" * 40)
+            + b"\x52\x2a\x4d\x18" + _struct.pack("<I", 5) + b"skip!"
+            + _raw_zstd_frame(b"B" * 30, checksum=True))
+    frames = walk_frames(blob)
+    assert [f.skippable for f in frames] == [False, True, False]
+    assert [f.content_size for f in frames] == [40, 0, 30]
+    assert sum(f.comp_len for f in frames) == len(blob)
+    offs, bases = frame_table(blob)  # data frames only
+    assert bases.tolist() == [0, 40]
+    assert offs.tolist() == [0, frames[2].comp_off]
+
+
+def test_zstd_frame_walker_rejects_garbage():
+    from repro.core.warc.zstd_frames import walk_frames
+
+    with pytest.raises(ValueError, match="magic"):
+        walk_frames(b"NOTZSTD!")
+    with pytest.raises(ValueError, match="truncated"):
+        walk_frames(_raw_zstd_frame(b"A" * 40)[:-3])
+
+
+@pytest.mark.skipif(not _HAVE_ZSTD, reason="zstandard not installed")
+def test_zstd_frame_hints_seek_without_full_decompress(tmp_path):
+    """v2 CDX stores the containing frame per zstd record; a hinted read
+    must parse the record without inflating the whole shard."""
+    p = str(tmp_path / "z.warc.zstd")
+    write_corpus(p, CorpusSpec(n_pages=6, seed=9), "zstd")
+    idx = build_index([p])
+    from repro.index.cdx import NO_FRAME
+    assert not np.any(idx.frame_off == NO_FRAME)
+    sequential = list(FastWARCIterator(p, parse_http=False))
+    with RandomAccessReader(p, parse_http=False) as reader:
+        for i, want in enumerate(sequential):
+            got = reader.read(int(idx.offset[i]), frame=idx.frame_hint(i))
+            assert got is not None and got.content == want.content
+            assert got.stream_offset == int(idx.offset[i])
+            # the whole-shard decompress fallback never ran
+            assert reader._zbuf is None
+
+
+@pytest.mark.skipif(not _HAVE_ZSTD, reason="zstandard not installed")
+def test_zstd_v1_index_compat_falls_back(tmp_path):
+    """A CDX saved before the frame columns existed (v1) must load and
+    serve zstd shards through the legacy full-decompress path."""
+    import struct as _struct
+
+    p = str(tmp_path / "z.warc.zstd")
+    write_corpus(p, CorpusSpec(n_pages=4, seed=10), "zstd")
+    idx = build_index([p])
+    v2 = str(tmp_path / "v2.cdx")
+    idx.save(v2)
+    blob = bytearray(open(v2, "rb").read())
+    _struct.pack_into("<I", blob, 8, 1)  # version = 1
+    # splice out the two 8-byte-per-row frame columns
+    pos = 8 + _struct.calcsize("<IIIIIQ")
+    for _ in range(len(idx.shard_paths)):
+        (plen,) = _struct.unpack_from("<I", blob, pos)
+        pos += _struct.calcsize("<IB") + plen
+    n = len(idx)
+    fixed = (4 + 8 + 8 + 8 + 2 + 2 + 4 + 8 * (idx.sig_bits // 64)) * n
+    frame_start = pos + fixed
+    del blob[frame_start:frame_start + 16 * n]
+    v1 = str(tmp_path / "v1.cdx")
+    open(v1, "wb").write(bytes(blob))
+    legacy = CdxIndex.load(v1)
+    assert all(legacy.frame_hint(i) is None for i in range(len(legacy)))
+    with RandomAccessReader(p, parse_http=False) as reader:
+        rec = reader.read(int(legacy.offset[1]), frame=legacy.frame_hint(1))
+        assert rec is not None
+        assert reader._zbuf is not None  # fallback decompressed the shard

@@ -14,6 +14,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.pattern_scan import (
     count_matches,
     find_pattern_mask,
+    find_pattern_mask_batch,
+    find_pattern_masks_multi,
     find_pattern_positions,
 )
 from repro.kernels.pattern_scan.ref import pattern_mask_ref
@@ -62,6 +64,43 @@ def test_pattern_scan_property(buf, pattern):
 def test_pattern_scan_count():
     buf = b"ab" * 1000
     assert count_matches(buf, b"ab", block=512) == 1000
+
+
+def test_multi_pattern_batch_equals_per_pattern():
+    """Per-row-pattern dispatch == N single-pattern dispatches (the
+    cross-request batching primitive must not change any mask)."""
+    rng = np.random.default_rng(11)
+    bufs = [rng.integers(0, 256, n, np.uint8).tobytes()
+            for n in (0, 1, 77, 1500, 4096, 9000)]
+    bufs[2] = b"needle" + bufs[2] + b"needle"
+    pats = [b"X", b"\r\n\r\n", b"needle", b"ab", b"0123456789abcdef", b"q"]
+    multi = find_pattern_masks_multi(bufs, pats, block=1024)
+    for buf, pat, got in zip(bufs, pats, multi):
+        single = find_pattern_mask_batch([buf], pat, block=1024)[0]
+        np.testing.assert_array_equal(got, single)
+
+
+def test_multi_pattern_mixed_lengths_share_bucket():
+    """Different-length patterns in one width bucket stay independent:
+    the padded compare positions of a short pattern must not leak into
+    its neighbours' rows."""
+    base = b"abcabcabc--zzzz"
+    bufs = [base * 20, base * 20, base * 20]
+    pats = [b"abc", b"abcabcabc--zzz", b"zz"]
+    multi = find_pattern_masks_multi(bufs, pats, block=256)
+    for buf, pat, got in zip(bufs, pats, multi):
+        expect, i = [], buf.find(pat)
+        while i >= 0:
+            expect.append(i)
+            i = buf.find(pat, i + 1)
+        assert list(np.flatnonzero(got)) == expect, pat
+
+
+def test_multi_pattern_rejects_mismatched_inputs():
+    with pytest.raises(ValueError, match="pair up"):
+        find_pattern_masks_multi([b"abc"], [b"a", b"b"])
+    with pytest.raises(ValueError, match="all-zero"):
+        find_pattern_masks_multi([b"abc"], [b"\x00\x00"])
 
 
 # --------------------------------------------------------------------------

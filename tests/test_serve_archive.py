@@ -1,0 +1,385 @@
+"""Archive gateway tests (repro.serve.archive): correctness under
+concurrency (responses byte-identical to independent synchronous
+QueryEngine runs), deterministic coalescing via a blockable engine,
+admission backpressure, the record cache, and the metrics surface.
+
+Tier-2 selection: ``pytest -m serve_archive`` (marker registered in
+pytest.ini); the whole module also runs under the tier-1 suite.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.warc.record import WarcRecordType
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import (
+    HeaderFilter,
+    IndexQueryService,
+    QueryEngine,
+    QueryRequest,
+    build_index,
+)
+from repro.serve import (
+    ArchiveGateway,
+    GatewayClosed,
+    GatewayOverloaded,
+    RecordCache,
+    percentile,
+)
+
+pytestmark = pytest.mark.serve_archive
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    d = tmp_path_factory.mktemp("serve_corpus")
+    paths = []
+    for i, comp in enumerate(["gzip", "none", "lz4"]):
+        p = str(d / f"s{i}.warc.{comp}")
+        write_corpus(p, CorpusSpec(n_pages=6, seed=70 + i), comp)
+        paths.append(p)
+    return paths, build_index(paths)
+
+
+def _response_key(hits):
+    return [(h.index_row, h.offset, h.n_matches, tuple(h.positions),
+             h.excerpt) for h in hits]
+
+
+def _sync_answer(index, request):
+    """Independent synchronous QueryEngine run, service-ranked."""
+    with QueryEngine(index) as engine:
+        if request.regex:
+            hits = engine.search_regex(request.pattern, request.filters,
+                                       prefilter=request.prefilter)
+        else:
+            hits = engine.search(request.pattern, request.filters,
+                                 prefilter=request.prefilter)
+    ranked = sorted(hits, key=lambda h: -h.n_matches)
+    return _response_key(ranked[:request.top_k]), len(hits)
+
+
+_MIXED_REQUESTS = [
+    QueryRequest(b"nginx", top_k=5),
+    QueryRequest(b"archive", top_k=3),
+    QueryRequest(b"absent-from-corpus"),
+    QueryRequest(rb"nginx/1\.1[0-9]", regex=True),
+    QueryRequest(b"crawl", filters=HeaderFilter(
+        record_type=WarcRecordType.response)),
+    QueryRequest(b"</html>", top_k=2),
+    QueryRequest(rb"[Cc]rawl", regex=True),
+    QueryRequest(b"q"),
+]
+
+
+# --------------------------------------------------------------------------
+# Correctness: gateway == independent synchronous engine
+# --------------------------------------------------------------------------
+
+def test_gateway_matches_sync_engine(corpus):
+    _, idx = corpus
+    want = [_sync_answer(idx, r) for r in _MIXED_REQUESTS]
+    with ArchiveGateway(idx) as gw:
+        futures = [gw.submit(r) for r in _MIXED_REQUESTS]
+        got = [f.result(120) for f in futures]
+    for (want_hits, want_total), resp in zip(want, got):
+        assert _response_key(resp.hits) == want_hits
+        assert resp.total_matches == want_total
+        assert resp.latency_s > 0
+
+
+def test_concurrent_soak_identical_to_sync(corpus):
+    """N client threads × mixed hit/miss/regex patterns, heavy overlap:
+    every response equals an independent synchronous engine run."""
+    _, idx = corpus
+    want = {r.scan_key(): _sync_answer(idx, r) for r in _MIXED_REQUESTS}
+    n_threads, per_thread = 8, 12
+    results: dict[tuple[int, int], object] = {}
+    errors: list[BaseException] = []
+    with ArchiveGateway(idx, max_pending=1024) as gw:
+        def client(tid: int) -> None:
+            try:
+                futures = []
+                for i in range(per_thread):
+                    req = _MIXED_REQUESTS[(tid + i) % len(_MIXED_REQUESTS)]
+                    futures.append((req, gw.submit(req)))
+                for i, (req, fut) in enumerate(futures):
+                    results[(tid, i)] = (req, fut.result(300))
+            except BaseException as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(600)
+        snap = gw.metrics.snapshot(gw.cache)
+    assert not errors
+    assert len(results) == n_threads * per_thread
+    for req, resp in results.values():
+        want_hits, want_total = want[req.scan_key()]
+        assert _response_key(resp.hits) == want_hits
+        assert resp.total_matches == want_total
+    assert snap["responses"] == n_threads * per_thread
+    assert snap["errors"] == 0
+    # overlapping identical queries must aggregate: far fewer scans than
+    # requests (coalescing) — the whole point of the gateway
+    assert snap["unique_scans"] < snap["requests"]
+    assert snap["coalesced"] == snap["requests"] - snap["unique_scans"]
+
+
+_PROPERTY_STATE: tuple | None = None
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _property_state(corpus):
+    # module-global rather than a requested fixture: @given-wrapped tests
+    # cannot take function arguments when the hypothesis stub is active
+    global _PROPERTY_STATE
+    _, idx = corpus
+    with ArchiveGateway(idx) as gw:
+        _PROPERTY_STATE = (idx, gw)
+        yield
+    _PROPERTY_STATE = None
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(
+    st.sampled_from([b"archive", b"crawl", b"nginx", b"</body>",
+                     b"xyzzy-missing", b"HTTP/1.1", b"research"])
+    | st.binary(min_size=1, max_size=10),
+    min_size=1, max_size=6))
+def test_property_coalescing_and_caching_never_change_results(patterns):
+    """Any submission mix (duplicates included, so coalescing and cache
+    hits fire) produces exactly the synchronous engine's hit lists."""
+    idx, gw = _PROPERTY_STATE
+    patterns = [p if any(p) else b"\x01" + p[1:] for p in patterns]
+    requests = [QueryRequest(p, top_k=50) for p in patterns]
+    futures = [gw.submit(r) for r in requests]
+    responses = [f.result(300) for f in futures]
+    for req, resp in zip(requests, responses):
+        want_hits, want_total = _sync_answer(idx, req)
+        assert _response_key(resp.hits) == want_hits
+        assert resp.total_matches == want_total
+
+
+# --------------------------------------------------------------------------
+# Coalescing + backpressure (deterministic via a blockable engine)
+# --------------------------------------------------------------------------
+
+class _BlockableEngine(QueryEngine):
+    """Engine whose plan() parks until released — pins a scan in-flight."""
+
+    def __init__(self, index, **kw):
+        super().__init__(index, **kw)
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def plan(self, *a, **kw):
+        self.entered.set()
+        assert self.release.wait(60), "test never released the engine"
+        return super().plan(*a, **kw)
+
+
+def test_inflight_coalescing_is_deterministic(corpus):
+    _, idx = corpus
+    engine = _BlockableEngine(idx)
+    with ArchiveGateway(idx, engine=engine) as gw:
+        first = gw.submit(QueryRequest(b"nginx", top_k=4))
+        assert engine.entered.wait(60)  # scan now executing (and parked)
+        joined = gw.submit(QueryRequest(b"nginx", top_k=4))  # attaches
+        other = gw.submit(QueryRequest(b"archive"))          # new key: queued
+        assert gw.metrics.count("coalesced") == 1
+        engine.release.set()
+        a, b = first.result(120), joined.result(120)
+        other.result(120)
+        snap = gw.metrics.snapshot()
+    assert _response_key(a.hits) == _response_key(b.hits)
+    assert a.total_matches == b.total_matches
+    assert snap["requests"] == 3
+    assert snap["unique_scans"] == 2  # nginx once (shared), archive once
+
+
+def test_backpressure_rejects_when_queue_full(corpus):
+    _, idx = corpus
+    engine = _BlockableEngine(idx)
+    with ArchiveGateway(idx, engine=engine, max_pending=1) as gw:
+        gw.submit(QueryRequest(b"nginx"))
+        assert engine.entered.wait(60)  # scheduler busy; queue now empty
+        gw.submit(QueryRequest(b"archive"))  # fills the only slot
+        with pytest.raises(GatewayOverloaded):
+            gw.submit(QueryRequest(b"crawl"), block=False)
+        assert gw.metrics.count("rejected") == 1
+        engine.release.set()
+
+
+def test_submit_after_close_raises(corpus):
+    _, idx = corpus
+    gw = ArchiveGateway(idx)
+    response = gw.query(QueryRequest(b"nginx"))
+    gw.close()
+    assert response.total_matches >= 0
+    with pytest.raises(GatewayClosed):
+        gw.submit(QueryRequest(b"nginx"))
+
+
+def test_close_drains_pending_requests(corpus):
+    _, idx = corpus
+    gw = ArchiveGateway(idx)
+    futures = [gw.submit(r) for r in _MIXED_REQUESTS]
+    gw.close(drain=True)
+    for fut in futures:
+        assert fut.result(0).total_matches >= 0  # already resolved
+
+
+# --------------------------------------------------------------------------
+# Record cache
+# --------------------------------------------------------------------------
+
+def test_record_cache_lru_eviction_order():
+    cache = RecordCache(budget_bytes=10)
+    cache.put((0, 1), b"aaaa")
+    cache.put((0, 2), b"bbbb")
+    assert cache.get((0, 1)) == b"aaaa"  # refresh: (0,2) is now LRU
+    cache.put((0, 3), b"cc")             # 10 bytes: fits, no eviction
+    assert cache.bytes_cached == 10
+    cache.put((0, 4), b"dd")             # evicts (0,2), the LRU
+    assert cache.get((0, 2)) is None
+    assert cache.get((0, 1)) == b"aaaa"
+    assert cache.evictions == 1
+
+
+def test_record_cache_rejects_oversize():
+    cache = RecordCache(budget_bytes=4)
+    assert not cache.put((0, 0), b"too-big-for-budget")
+    assert cache.rejected_oversize == 1
+    assert len(cache) == 0
+    assert cache.put((0, 1), b"ok")
+
+
+def test_gateway_cache_hits_across_sequential_queries(corpus):
+    _, idx = corpus
+    with ArchiveGateway(idx) as gw:
+        first = gw.query(QueryRequest(b"nginx"))
+        fetched_once = gw.metrics.count("records_fetched")
+        second = gw.query(QueryRequest(b"nginx"))  # sequential: no coalesce
+        snap = gw.metrics.snapshot(gw.cache)
+    assert snap["unique_scans"] == 2
+    assert snap["cache_hits"] > 0
+    # the repeat scan decompressed nothing new
+    assert snap["records_fetched"] == fetched_once
+    assert _response_key(first.hits) == _response_key(second.hits)
+
+
+def test_gateway_zero_cache_budget_still_correct(corpus):
+    _, idx = corpus
+    with ArchiveGateway(idx, cache_bytes=0) as gw:
+        resp = gw.query(QueryRequest(b"archive", top_k=4))
+    want_hits, want_total = _sync_answer(idx, QueryRequest(b"archive",
+                                                           top_k=4))
+    assert _response_key(resp.hits) == want_hits
+    assert resp.total_matches == want_total
+
+
+# --------------------------------------------------------------------------
+# Metrics
+# --------------------------------------------------------------------------
+
+def test_percentile_interpolation():
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+
+
+def test_metrics_surface_complete(corpus):
+    _, idx = corpus
+    with ArchiveGateway(idx) as gw:
+        for req in (_MIXED_REQUESTS[0], _MIXED_REQUESTS[0],
+                    _MIXED_REQUESTS[1]):
+            gw.query(req)
+        snap = gw.metrics.snapshot(gw.cache)
+    for key in ("requests", "responses", "unique_scans", "coalesced",
+                "kernel_dispatches", "records_scanned",
+                "dispatches_per_request", "coalesce_rate",
+                "latency_p50_ms", "latency_p99_ms", "cache_hit_rate",
+                "cache_bytes_cached"):
+        assert key in snap, key
+    assert snap["responses"] == 3
+    assert snap["kernel_dispatches"] > 0
+    assert snap["latency_p99_ms"] >= snap["latency_p50_ms"] > 0
+
+
+def test_shared_dispatch_across_distinct_queries(corpus):
+    """Two *different* patterns whose candidates share width buckets ride
+    one multi-pattern dispatch: total dispatches stay below the sum of
+    the two independent runs (in-batch aggregation observable)."""
+    _, idx = corpus
+    solo = 0
+    for pattern in (b"nginx", b"archive"):
+        with QueryEngine(idx) as engine:
+            engine.search(pattern)
+            solo += engine.stats["kernel_dispatches"]
+    # batch_records high enough that each run is a single chunk, so the
+    # dispatch arithmetic is exact: solo pays per query, shared pays per
+    # width bucket of the union
+    req1, req2 = QueryRequest(b"nginx", top_k=50), QueryRequest(b"archive",
+                                                                top_k=50)
+    engine = QueryEngine(idx, batch_records=512)
+    with ArchiveGateway(idx, engine=engine) as gw:
+        plans = {req1.scan_key(): engine.plan(req1.pattern),
+                 req2.scan_key(): engine.plan(req2.pattern)}
+        results = gw._execute_plans(plans)  # scheduler idle: direct call
+        shared = gw.metrics.count("kernel_dispatches")
+    assert 0 < shared < solo
+    # and the shared scan found exactly what the solo runs found
+    for req in (req1, req2):
+        with QueryEngine(idx) as solo_engine:
+            want = solo_engine.search(req.pattern)
+        got = results[req.scan_key()]
+        assert [(h.index_row, h.n_matches) for h in got] == \
+            [(h.index_row, h.n_matches) for h in want]
+
+
+def test_malformed_request_fails_only_its_own_waiters(corpus):
+    """An empty pattern (ValueError at plan time) must not poison the
+    other requests drained in the same scheduler batch."""
+    _, idx = corpus
+    engine = _BlockableEngine(idx)
+    with ArchiveGateway(idx, engine=engine) as gw:
+        dummy = gw.submit(QueryRequest(b"absent-from-corpus"))
+        assert engine.entered.wait(60)  # pin: next submits batch together
+        bad = gw.submit(QueryRequest(b""))
+        good = gw.submit(QueryRequest(b"nginx", top_k=4))
+        engine.release.set()
+        dummy.result(120)
+        with pytest.raises(ValueError, match="empty pattern"):
+            bad.result(120)
+        resp = good.result(120)
+    want_hits, want_total = _sync_answer(idx, QueryRequest(b"nginx", top_k=4))
+    assert _response_key(resp.hits) == want_hits
+    assert resp.total_matches == want_total
+
+
+def test_cancelled_future_does_not_kill_scheduler(corpus):
+    """A client cancelling its pending future must not crash the batch
+    resolution or hang the other waiters (regression: InvalidStateError
+    used to kill the scheduler thread)."""
+    _, idx = corpus
+    engine = _BlockableEngine(idx)
+    with ArchiveGateway(idx, engine=engine) as gw:
+        victim = gw.submit(QueryRequest(b"nginx"))
+        assert engine.entered.wait(60)  # scan executing (and parked)
+        survivor = gw.submit(QueryRequest(b"archive"))  # queued behind it
+        assert victim.cancel()  # never claimed by the scheduler yet
+        engine.release.set()
+        resp = survivor.result(120)  # scheduler alive: batch 2 served
+        assert resp.total_matches >= 0
+        # and the gateway still serves fresh requests afterwards
+        assert gw.query(QueryRequest(b"crawl"), timeout=120).total_matches >= 0
+    assert victim.cancelled()

@@ -366,3 +366,52 @@ def test_iterator_does_not_close_caller_file(tmp_path):
     with open(p, "rb") as f:
         list(FastWARCIterator(f))
         assert not f.closed  # caller-owned handles are left alone
+
+
+# --------------------------------------------------------------------------
+# ForwardWindow (zstd frame-seek support: stream facade for read_record_at)
+# --------------------------------------------------------------------------
+
+class _ForwardOnly:
+    """Reader exposing only .read — models a mid-file ZstdStream."""
+
+    def __init__(self, data: bytes) -> None:
+        self._b = io.BytesIO(data)
+
+    def read(self, n: int = -1) -> bytes:
+        return self._b.read(n)
+
+
+def test_forward_window_reads_records_at_absolute_offsets():
+    from repro.core.warc import read_record_at
+    from repro.core.warc.streams import ForwardWindow
+
+    records = [serialize_record("resource", f"payload-{i}".encode() * 50)
+               for i in range(3)]
+    blob = b"".join(records)
+    base = len(records[0])  # window starts at the second record ("frame")
+    for target in (1, 2):  # in-window targets, absolute offsets
+        offset = sum(len(r) for r in records[:target])
+        window = ForwardWindow(_ForwardOnly(blob[base:]), base=base)
+        rec = read_record_at(window, offset, parse_http=False)
+        assert rec is not None
+        assert rec.content == f"payload-{target}".encode() * 50
+        assert rec.stream_offset == offset
+
+
+def test_forward_window_seek_semantics():
+    from repro.core.warc.streams import ForwardWindow
+
+    window = ForwardWindow(_ForwardOnly(b"0123456789abcdef"), base=100)
+    assert window.tell() == 100
+    assert window.read(4) == b"0123"
+    window.seek(-2, io.SEEK_CUR)          # short rewind: pushback tail
+    assert window.read(4) == b"2345"
+    window.seek(110)                      # forward: discard
+    assert window.read(3) == b"abc"
+    with pytest.raises(ValueError, match="origin"):
+        window.seek(99)
+    big = ForwardWindow(_ForwardOnly(bytes(1024)), base=0)
+    big.read(512)
+    with pytest.raises(ValueError, match="pushback"):
+        big.seek(0)
