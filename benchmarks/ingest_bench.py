@@ -1,0 +1,195 @@
+"""Ingest-hot-path benchmarks: the ISSUE 4 zero-copy / fused / shm claims.
+
+Three claims measured, not asserted:
+
+* **zero-copy parse** — records/s *and bytes-copied-per-record* of the
+  pooled-arena parser (``FastWARCIterator`` default) vs the PR 1-era
+  bytes-slicing loop (``zero_copy=False``), both instrumented through
+  the shared :class:`~repro.core.warc.streams.CopyStats` ledger. The
+  claim is not just "faster" but "the copies are *gone*": the arena
+  path's per-record copy budget is a few hundred header bytes, the
+  legacy path re-copies payloads multiple times.
+* **fused index build** — ``build_index(fused=True)`` (one
+  ``digest_signature_batch`` kernel sweep per payload batch) vs the
+  two-pass host build (``zlib.adler32`` pass + n-gram signature pass
+  per record). Columns are bit-identical; the fused build touches each
+  payload byte once. Measured end-to-end (the production call), in
+  interpret mode: the win comes from batching away per-record host
+  overhead — the per-byte sweep itself is emulated on CPU here and
+  only gets its vector-unit payoff on real TPU hardware.
+* **pool transport** — the shared-memory ring mechanism vs the PR 1
+  pickle queue mechanism, measured single-process and *paired* (each
+  rep runs both back-to-back and the reported speedup is the median of
+  per-pair ratios): a chunk of synthetic-corpus-sized documents is
+  serialized once and then either pushed through a real ``os.pipe`` in
+  64 KiB writes and reassembled (what ``mp.Queue`` does) or memcpy'd
+  into a ring slot and decoded from a zero-copy view (what the shm
+  transport does). Racing actual worker processes on a 2-core shared
+  container is scheduler roulette — ratios swing 0.4×–5× run to run —
+  so the deterministic mechanism cost is the instrument;
+  tests/test_parallel.py pins multi-process correctness of both paths.
+
+Scale with REPRO_BENCH_PAGES (default 400).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import statistics
+import tempfile
+import time
+
+from repro.core.pipeline import Document
+from repro.core.warc import FastWARCIterator
+from repro.data.synth import CorpusSpec, write_corpus
+
+_PAGES = int(os.environ.get("REPRO_BENCH_PAGES", "400"))
+_N_SHARDS = 8
+_DOC_BYTES = 2048        # synthetic-corpus-sized extracted documents
+_CHUNK_DOCS = 128        # documents per transported chunk
+_PIPE_CHUNK = 64 * 1024  # Linux pipe buffer: mp.Queue's write granularity
+
+_BLOB = bytes(range(256)) * 64  # 16 KiB template for transport payloads
+
+
+def _best_s(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# -- parse path ----------------------------------------------------------
+
+def _parse_stats(data: bytes, zero_copy: bool) -> tuple[float, float, int]:
+    """(records/s, bytes_copied_per_record, records) for one parse mode."""
+    n = 0
+    it = None
+
+    def sweep():
+        nonlocal n, it
+        it = FastWARCIterator(data, parse_http=True, zero_copy=zero_copy)
+        n = sum(1 for _ in it)
+
+    best = _best_s(sweep)
+    stats = it.copy_stats
+    return n / best, stats.bytes_copied / max(n, 1), n
+
+
+# -- transport mechanism bench -------------------------------------------
+
+def _bench_docs() -> list:
+    return [Document("https://bench.example/doc",
+                     _BLOB[(i * 37) % 4096 + 1:(i * 37) % 4096 + 1
+                           + _DOC_BYTES], i)
+            for i in range(_CHUNK_DOCS)]
+
+
+def _pickle_pipe_rate(docs: list, reps: int) -> float:
+    """docs/s of the queue mechanism: dumps → pipe syscalls → loads."""
+    r, w = os.pipe()
+    try:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            blob = pickle.dumps(docs, protocol=pickle.HIGHEST_PROTOCOL)
+            mv = memoryview(blob)
+            parts = []
+            sent = 0
+            while sent < len(blob):
+                n = os.write(w, mv[sent:sent + _PIPE_CHUNK])
+                sent += n
+                parts.append(os.read(r, _PIPE_CHUNK))
+            pickle.loads(b"".join(parts))
+        return reps * len(docs) / (time.perf_counter() - t0)
+    finally:
+        os.close(r)
+        os.close(w)
+
+
+def _shm_ring_rate(docs: list, reps: int) -> float:
+    """docs/s of the ring mechanism: dumps → slot memcpy → loads(view)."""
+    slot = bytearray(4 << 20)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        blob = pickle.dumps(docs, protocol=pickle.HIGHEST_PROTOCOL)
+        slot[:len(blob)] = blob
+        pickle.loads(memoryview(slot)[:len(blob)])
+    return reps * len(docs) / (time.perf_counter() - t0)
+
+
+def _transport_rows() -> list[str]:
+    docs = _bench_docs()
+    _pickle_pipe_rate(docs, 20)
+    _shm_ring_rate(docs, 20)  # warm both
+    pipe_rates, ring_rates, ratios = [], [], []
+    for _ in range(9):  # paired reps: machine drift cancels in the ratio
+        p = _pickle_pipe_rate(docs, 40)
+        s = _shm_ring_rate(docs, 40)
+        pipe_rates.append(p)
+        ring_rates.append(s)
+        ratios.append(s / p)
+    return [
+        f"ingest,transport,pickle_pipe,docs_per_s,"
+        f"{statistics.median(pipe_rates):.0f}",
+        f"ingest,transport,shm_ring,docs_per_s,"
+        f"{statistics.median(ring_rates):.0f}",
+        f"ingest,transport,shm_ring,speedup,"
+        f"{statistics.median(ratios):.2f}",
+    ]
+
+
+def run(quiet: bool = False) -> list[str]:
+    rows = [f"ingest,env,host,cpu_count,{os.cpu_count()}"]
+
+    from repro.data.synth import generate_warc
+
+    spec = CorpusSpec(n_pages=_PAGES, seed=11)
+    data = generate_warc(spec, "none")
+
+    # 1) zero-copy parse vs legacy bytes-slicing loop
+    for label, zero_copy in (("legacy", False), ("zero_copy", True)):
+        rps, bpr, n = _parse_stats(data, zero_copy)
+        rows.append(f"ingest,parse,{label},records_per_s,{rps:.1f}")
+        rows.append(f"ingest,parse,{label},bytes_copied_per_record,{bpr:.1f}")
+    legacy_bpr = float(rows[-3].rsplit(",", 1)[1])
+    zc_bpr = float(rows[-1].rsplit(",", 1)[1])
+    rows.append(f"ingest,parse,zero_copy,copy_reduction,"
+                f"{legacy_bpr / max(zc_bpr, 1e-9):.1f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        shard_paths = []
+        for i in range(_N_SHARDS):
+            p = os.path.join(d, f"s{i}.warc")
+            write_corpus(p, CorpusSpec(n_pages=_PAGES // _N_SHARDS, seed=i),
+                         "none")
+            shard_paths.append(p)
+
+        # 2) pool transport mechanism: pickle+pipe vs shm ring
+        rows.extend(_transport_rows())
+
+        # 3) fused vs two-pass index build (bit-identical columns)
+        from repro.index import build_index
+
+        index = build_index(shard_paths, fused=True)  # warm compile
+        n_rec = len(index)
+        t_fused = _best_s(lambda: build_index(shard_paths, fused=True),
+                          reps=2)
+        t_host = _best_s(lambda: build_index(shard_paths, fused=False),
+                         reps=2)
+        rows.append(f"ingest,index_build,two_pass,records_per_s,"
+                    f"{n_rec / t_host:.1f}")
+        rows.append(f"ingest,index_build,fused,records_per_s,"
+                    f"{n_rec / t_fused:.1f}")
+        rows.append(f"ingest,index_build,fused,speedup,"
+                    f"{t_host / t_fused:.2f}")
+
+    if not quiet:  # pragma: no cover - CLI convenience
+        for row in rows:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":  # pragma: no cover
+    run()

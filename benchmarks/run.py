@@ -13,13 +13,16 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                (benchmarks/index_bench.py);
   * serve    — archive-gateway vs synchronous query service under
                1/8/64 concurrent clients: throughput, dispatches per
-               request, coalesce/cache rates (benchmarks/serve_bench.py).
+               request, coalesce/cache rates (benchmarks/serve_bench.py);
+  * ingest   — zero-copy parse vs legacy (records/s + bytes copied per
+               record), fused vs two-pass index build, shared-memory vs
+               pickle pool transport (benchmarks/ingest_bench.py).
 
 ``--json`` additionally writes ``BENCH_pipeline.json`` (all non-index
 rows as records plus a throughput summary) and — per section that ran —
-``BENCH_index.json`` / ``BENCH_serve.json``, so each perf trajectory is
-tracked machine-readably across PRs. ``--sections a,b`` restricts the
-run.
+``BENCH_index.json`` / ``BENCH_serve.json`` / ``BENCH_ingest.json``, so
+each perf trajectory is tracked machine-readably across PRs.
+``--sections a,b`` restricts the run.
 
 Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 elsewhere).
 """
@@ -33,6 +36,7 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_pipeline.json")
 _INDEX_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_index.json")
 _SERVE_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_serve.json")
+_INGEST_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_ingest.json")
 
 
 def _parse_row(line: str) -> dict:
@@ -55,7 +59,8 @@ def _summary(records: list[dict]) -> dict:
         if r["metric"] in ("records_per_s", "docs_per_s", "tokens_per_s",
                            "speedup", "requests_per_s",
                            "dispatches_per_request",
-                           "dispatch_reduction_vs_sync"):
+                           "dispatch_reduction_vs_sync",
+                           "bytes_copied_per_record", "copy_reduction"):
             out[".".join([r["section"], *r["keys"], r["metric"]])] = r["value"]
     return out
 
@@ -68,11 +73,13 @@ def main(argv: list[str] | None = None) -> None:
     # forks, and forking before JAX spins up its thread pools is both
     # safer and fairer on small hosts
     ap.add_argument("--sections",
-                    default="table1,pipeline,parallel,index,serve,kernels",
+                    default="table1,pipeline,parallel,ingest,index,serve,"
+                            "kernels",
                     help="comma-separated subset of sections to run")
     args = ap.parse_args(argv)
     sections = [s.strip() for s in args.sections.split(",") if s.strip()]
-    known = {"table1", "pipeline", "kernels", "parallel", "index", "serve"}
+    known = {"table1", "pipeline", "kernels", "parallel", "index", "serve",
+             "ingest"}
     unknown = [s for s in sections if s not in known]
     if unknown:
         ap.error(f"unknown sections {unknown}; choose from {sorted(known)}")
@@ -101,9 +108,10 @@ def main(argv: list[str] | None = None) -> None:
 
     section_mods = {"pipeline": "pipeline", "kernels": "kernel",
                     "parallel": "parallel", "index": "index",
-                    "serve": "serve"}
+                    "serve": "serve", "ingest": "ingest"}
     index_lines: list[str] = []
     serve_lines: list[str] = []
+    ingest_lines: list[str] = []
     for name in sections:
         if name not in section_mods:
             continue
@@ -111,14 +119,16 @@ def main(argv: list[str] | None = None) -> None:
         for line in rows:
             print(line)
         print()
-        # index/serve rows track their own trajectory files
-        # (BENCH_index.json / BENCH_serve.json); mixing them into
-        # BENCH_pipeline.json would let a section-only run clobber the
-        # pipeline history
+        # index/serve/ingest rows track their own trajectory files
+        # (BENCH_index.json / BENCH_serve.json / BENCH_ingest.json);
+        # mixing them into BENCH_pipeline.json would let a section-only
+        # run clobber the pipeline history
         if name == "index":
             index_lines.extend(rows)
         elif name == "serve":
             serve_lines.extend(rows)
+        elif name == "ingest":
+            ingest_lines.extend(rows)
         else:
             lines.extend(rows)
 
@@ -134,13 +144,16 @@ def main(argv: list[str] | None = None) -> None:
                 f.write("\n")
             print(f"wrote {path}")
 
-        non_index = [s for s in sections if s not in ("index", "serve")]
+        non_index = [s for s in sections
+                     if s not in ("index", "serve", "ingest")]
         if non_index:
             _write(_JSON_PATH, "pipeline", lines, non_index)
         if index_lines:
             _write(_INDEX_JSON_PATH, "index", index_lines, ["index"])
         if serve_lines:
             _write(_SERVE_JSON_PATH, "serve", serve_lines, ["serve"])
+        if ingest_lines:
+            _write(_INGEST_JSON_PATH, "ingest", ingest_lines, ["ingest"])
 
 
 if __name__ == "__main__":

@@ -27,8 +27,13 @@ _ENTITIES = {b"&amp;": b"&", b"&lt;": b"<", b"&gt;": b">",
 
 
 def html_to_text(html: bytes | memoryview) -> bytes:
-    """Cheap, allocation-light HTML→text (analytics-grade, not a browser)."""
-    text = _SCRIPT_RE.sub(b" ", bytes(html))
+    """Cheap, allocation-light HTML→text (analytics-grade, not a browser).
+
+    Accepts a borrowed ``memoryview`` directly (``re`` scans any
+    bytes-like buffer) — the zero-copy parse path feeds
+    ``record.payload_view()`` straight in, no ``bytes`` materialization.
+    """
+    text = _SCRIPT_RE.sub(b" ", html)
     text = _TAG_RE.sub(b" ", text)
     for ent, rep in _ENTITIES.items():
         if ent in text:
@@ -57,7 +62,9 @@ def iter_documents(source, *, min_length: int = 64,
         ctype = http.get_bytes(b"Content-Type", b"")
         if not ctype.startswith(b"text/html"):
             continue
-        text = html_to_text(record.http_payload)
+        # borrow-only: the payload never leaves the parse arena; only the
+        # (much smaller) extracted text is materialized
+        text = html_to_text(record.payload_view())
         if len(text) < min_length:
             continue
         yield Document(record.target_uri, text, record.stream_offset)
@@ -68,7 +75,7 @@ _HREF_RE = re.compile(rb"""href\s*=\s*["']?(https?://[^"'\s>]+)""", re.I)
 
 def extract_links(html: bytes | memoryview) -> list[bytes]:
     """Outgoing absolute links of a page (web-graph edge extraction)."""
-    return [m.group(1) for m in _HREF_RE.finditer(bytes(html))]
+    return [m.group(1) for m in _HREF_RE.finditer(html)]
 
 
 def host_of(uri: bytes | str) -> str:
@@ -102,7 +109,7 @@ def web_graph_from_warc(source, *, min_length: int = 0) -> dict:
         if record.http_headers is None or record.target_uri is None:
             continue
         page_host = hid(host_of(record.target_uri))
-        for link in extract_links(record.http_payload):
+        for link in extract_links(record.payload_view()):
             src_list.append(page_host)
             dst_list.append(hid(host_of(link)))
     return {"hosts": list(host_ids),

@@ -39,8 +39,10 @@ from .record import (
     WarcRecordType,
 )
 from .streams import (
+    CopyStats,
     GZipStream,
     LZ4Stream,
+    RecordBuffer,
     ZstdStream,
     detect_compression,
 )
@@ -96,6 +98,20 @@ class FastWARCIterator:
         verify ``WARC-Block-Digest`` / ``WARC-Payload-Digest``.
     func_filter:
         optional predicate applied after header parse, before HTTP parse.
+    zero_copy:
+        parse uncompressed/zstd streams through the pooled
+        :class:`~repro.core.warc.streams.RecordBuffer` arena (default) —
+        record content is a borrowed ``memoryview``, see
+        :meth:`WarcRecord.detach`. ``False`` selects the PR 1-era
+        bytes-slicing loop (kept as the instrumented "old path" the
+        ingest benchmark measures against).
+    arena_bytes:
+        initial arena size for the zero-copy path (default 1 MiB; grows
+        geometrically past oversized records). Exposed for memory
+        tuning and for tests that force arena recycling.
+
+    Every Python-level byte copy either path makes is tallied in
+    ``self.copy_stats`` (:class:`~repro.core.warc.streams.CopyStats`).
     """
 
     def __init__(
@@ -106,6 +122,8 @@ class FastWARCIterator:
         parse_http: bool = True,
         verify_digests: bool = False,
         func_filter: Callable[[WarcRecord], bool] | None = None,
+        zero_copy: bool = True,
+        arena_bytes: int | None = None,
     ) -> None:
         self._owned_file: BinaryIO | None = None
         if isinstance(source, str):
@@ -120,6 +138,9 @@ class FastWARCIterator:
         self.parse_http = parse_http
         self.verify_digests = verify_digests
         self.func_filter = func_filter
+        self.zero_copy = zero_copy
+        self.arena_bytes = arena_bytes  # None: streams._ARENA_BYTES default
+        self.copy_stats = CopyStats()
         self.records_skipped = 0
 
         head = source.read(8)
@@ -131,7 +152,8 @@ class FastWARCIterator:
         elif self._kind == "lz4":
             self._stream = LZ4Stream(source)
         elif self._kind == "zstd":
-            # bulk C decode + in-buffer splitting (see ZstdStream docstring)
+            # bulk C decode + in-buffer splitting (see ZstdStream docstring);
+            # the arena path readintos straight out of the decompressor
             self._raw = ZstdStream(source)
 
     # ------------------------------------------------------------------
@@ -140,7 +162,10 @@ class FastWARCIterator:
             return  # exhausted path-owned source: empty, like re-reading EOF
         try:
             if self._stream is None:
-                yield from self._iter_uncompressed()
+                if self.zero_copy:
+                    yield from self._iter_uncompressed_arena()
+                else:
+                    yield from self._iter_uncompressed_legacy()
             elif isinstance(self._stream, LZ4Stream):
                 yield from self._iter_lz4()
             else:
@@ -180,7 +205,8 @@ class FastWARCIterator:
                   content, offset: int) -> WarcRecord | None:
         """Assemble a record from its raw header block (headers stay lazy)."""
         rtype = RECORD_TYPE_FROM_VALUE[type_value]
-        record = WarcRecord(header_block, rtype, content, offset)
+        record = WarcRecord(header_block, rtype, content, offset,
+                            stats=self.copy_stats)
         if self.func_filter is not None and not self.func_filter(record):
             self.records_skipped += 1
             return None
@@ -188,24 +214,89 @@ class FastWARCIterator:
             bd = _scan_header_field(header_block, b"WARC-Block-Digest:")
             if bd is not None:
                 record.verified_block_digest = verify_digest(
-                    record.content, bd.decode("latin-1"))
+                    record.content_view(), bd.decode("latin-1"))
         if self.parse_http and (type_value & HTTP_TYPE_MASK) and record.is_http:
-            http, body_off = parse_http_fast(record.content_view)
+            http, body_off = parse_http_fast(record.content_view())
             record.http_headers = http
             record.http_content_offset = body_off if http is not None else -1
             if self.verify_digests and record.http_headers is not None:
                 pd = _scan_header_field(header_block, b"WARC-Payload-Digest:")
                 if pd is not None:
                     record.verified_payload_digest = verify_digest(
-                        record.http_payload, pd.decode("latin-1"))
+                        record.payload_view(), pd.decode("latin-1"))
         return record
 
-    # -- uncompressed / zstd: in-buffer splitting + Content-Length seek --
-    def _iter_uncompressed(self) -> Iterator[WarcRecord]:
+    # -- uncompressed / zstd: pooled-arena zero-copy splitting (default) --
+    def _iter_uncompressed_arena(self) -> Iterator[WarcRecord]:
+        # Absolute-offset parse over a RecordBuffer: fills land in a
+        # reusable bytearray arena via readinto, record content is a
+        # borrowed memoryview into it, and the only copies left are the
+        # yielded records' (small) header blocks plus the arena-roll
+        # tail — all tallied in self.copy_stats (DESIGN.md §9).
+        if self.arena_bytes is not None:
+            rb = RecordBuffer(self._raw, stats=self.copy_stats,
+                              arena_bytes=self.arena_bytes)
+        else:
+            rb = RecordBuffer(self._raw, stats=self.copy_stats)
+        types_mask = self._types_mask
+        filter_active = self._filter_active
+        magic_len = len(WARC_MAGIC)
+        pos = 0  # absolute stream offset of the next unconsumed byte
+        while True:
+            rb.discard(pos)
+            if not rb.ensure(pos, magic_len):
+                return
+            if not rb.startswith(WARC_MAGIC, pos):
+                nxt = rb.find(WARC_MAGIC, pos)
+                if nxt < 0:
+                    if rb.eof:
+                        return
+                    # garbage: keep only a magic-straddle tail, read on
+                    pos = max(pos, rb.end_abs - magic_len + 1)
+                    rb.discard(pos)
+                    rb.ensure(pos, rb.end_abs - pos + 1)
+                    continue
+                pos = nxt
+                rb.discard(pos)
+            hdr_end = rb.find(HEADER_TERMINATOR, pos)
+            while hdr_end < 0:
+                if rb.eof:
+                    return
+                rb.ensure(pos, rb.end_abs - pos + _READ_BLOCK)
+                hdr_end = rb.find(HEADER_TERMINATOR, pos)
+            clen_raw = rb.scan_field(_CLEN_NEEDLE, pos, hdr_end)
+            clen = int(clen_raw) if clen_raw and clen_raw.isdigit() else 0
+            body_start = hdr_end + 4
+            record_end = body_start + clen + 4
+
+            type_raw = rb.scan_field(_TYPE_NEEDLE, pos, hdr_end)
+            type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
+                          RECORD_TYPE_VALUES.get(type_raw.lower(),
+                                                 UNKNOWN_TYPE_VALUE))
+            if filter_active and not (type_value & types_mask):
+                # bottleneck (3): skipped records never leave the arena —
+                # not even their header block is sliced out
+                self.records_skipped += 1
+                pos = record_end if rb.ensure(pos, record_end - pos) \
+                    else rb.end_abs
+                continue
+            if not rb.ensure(pos, record_end - pos):
+                return  # truncated final record
+            header_block = rb.take_bytes(pos, hdr_end)
+            content = rb.view(body_start, body_start + clen)
+            record = self._finalize(header_block, type_value, content, pos)
+            pos = record_end
+            if record is not None:
+                yield record
+
+    # -- uncompressed / zstd: PR 1-era bytes-slicing loop (measured "old
+    # path"; selected with zero_copy=False) ------------------------------
+    def _iter_uncompressed_legacy(self) -> Iterator[WarcRecord]:
         # `buf` is immutable bytes: appends REBIND (never resize), so
         # zero-copy memoryviews handed to callers stay valid on the old
         # object; rebasing happens only at record boundaries.
         raw_read = self._raw.read
+        stats = self.copy_stats
         types_mask = self._types_mask
         filter_active = self._filter_active
         buf = b""
@@ -229,11 +320,13 @@ class FastWARCIterator:
                 have += len(chunk)
             if len(parts) > 1:
                 buf = b"".join(parts)
+                stats.count_copy(len(buf))  # the join re-copies everything
             return len(buf) - pos >= need
 
         while True:
             if pos > _COMPACT_THRESHOLD:  # record boundary: safe to rebase
                 buf = buf[pos:]
+                stats.count_copy(len(buf))
                 base += pos  # keep reported offsets absolute past the rebase
                 pos = 0
             if not fill(len(WARC_MAGIC)):
@@ -253,6 +346,7 @@ class FastWARCIterator:
                 fill(len(buf) - pos + _READ_BLOCK)
                 hdr_end = buf.find(HEADER_TERMINATOR, pos)
             header_block = buf[pos:hdr_end]  # one small copy, reused thrice
+            stats.count_copy(len(header_block))
             clen_raw = _scan_header_field(header_block, _CLEN_NEEDLE)
             clen = int(clen_raw) if clen_raw and clen_raw.isdigit() else 0
             body_start = hdr_end + 4
@@ -325,10 +419,12 @@ class FastWARCIterator:
             if start < 0:
                 return None
             data = data[start:]
+            self.copy_stats.count_copy(len(data))
         hdr_end = data.find(HEADER_TERMINATOR)
         if hdr_end < 0:
             return None
         header_block = data[:hdr_end]
+        self.copy_stats.count_copy(len(header_block))
         type_value = self._type_value(header_block)
         if self._filter_active and not (type_value & self._types_mask):
             self.records_skipped += 1
@@ -359,8 +455,8 @@ def read_record_at(source: BinaryIO, offset: int, *,
                           verify_digests=verify_digests)
     record = it.read_one()
     if record is not None:
-        # content may be a zero-copy view into the iterator's buffer;
-        # materialize so the record outlives the abandoned iterator
-        record.content  # noqa: B018 - property materializes the memoryview
+        # content may be a zero-copy borrow of the iterator's arena;
+        # detach so the record outlives the abandoned iterator
+        record.detach()
         record.stream_offset = offset
     return record

@@ -188,9 +188,13 @@ class WarcRecord:
     parsing, pushed one level up (profiled: header-map construction was the
     single hottest phase of the Python hot loop).
 
-    ``content`` may be a zero-copy ``memoryview`` into the parse buffer;
-    ``http_headers`` is populated only when HTTP parsing is enabled —
-    lazy HTTP parsing is bottleneck (2) of the paper.
+    ``content`` may be a zero-copy ``memoryview`` into the parser's
+    pooled arena (``http_headers`` is populated only when HTTP parsing is
+    enabled — lazy HTTP parsing is bottleneck (2) of the paper). Borrowed
+    views pin their arena: holding many un-detached records costs arena
+    memory, never correctness. :meth:`detach` copies the record out and
+    releases the pin; :meth:`content_view` / :meth:`payload_view` are the
+    **borrow-only** zero-copy accessors.
     """
 
     __slots__ = (
@@ -199,6 +203,7 @@ class WarcRecord:
         "record_type",
         "content_length",
         "_content",
+        "_stats",
         "http_headers",
         "http_content_offset",
         "stream_offset",
@@ -212,6 +217,7 @@ class WarcRecord:
         record_type: WarcRecordType,
         content: bytes | memoryview = b"",
         stream_offset: int = -1,
+        stats=None,
     ) -> None:
         if isinstance(headers, WarcHeaderMap):
             self._headers: WarcHeaderMap | None = headers
@@ -222,6 +228,7 @@ class WarcRecord:
         self.record_type = record_type
         self._content = content
         self.content_length = len(content)
+        self._stats = stats  # CopyStats ledger shared with the iterator
         self.http_headers: HttpHeaderMap | None = None
         self.http_content_offset = -1
         self.stream_offset = stream_offset
@@ -250,23 +257,62 @@ class WarcRecord:
 
     @property
     def content(self) -> bytes:
+        """Owning ``bytes`` of the content block (copies a borrowed view
+        on first access — counted against the parse ledger)."""
         if isinstance(self._content, memoryview):
+            if self._stats is not None:
+                self._stats.count_copy(len(self._content))
             self._content = self._content.tobytes()
         return self._content
 
-    @property
     def content_view(self) -> memoryview:
-        """Zero-copy view of the record block (FastWARC-style access)."""
+        """**Borrow-only** zero-copy view of the record block.
+
+        The view aliases the parser's arena; it pins that arena while
+        referenced but must not be stored past the record's own lifetime
+        — call :meth:`detach` (or read :attr:`content`) for an owning
+        copy that outlives the iterator.
+        """
         if isinstance(self._content, memoryview):
             return self._content
         return memoryview(self._content)
 
+    def detach(self) -> "WarcRecord":
+        """Copy this record out of the parse arena (returns ``self``).
+
+        After ``detach()`` the record owns its content and raw header
+        block outright: it survives arena recycling, pickling, and the
+        iterator's teardown. The one copy it costs is counted in the
+        iterator's :class:`~repro.core.warc.streams.CopyStats`.
+        """
+        self.content  # noqa: B018 - property materializes the borrow
+        if isinstance(self._header_block, memoryview):
+            if self._stats is not None:
+                self._stats.count_copy(len(self._header_block))
+            self._header_block = bytes(self._header_block)
+        return self
+
+    @property
+    def is_detached(self) -> bool:
+        return not (isinstance(self._content, memoryview)
+                    or isinstance(self._header_block, memoryview))
+
     @property
     def http_payload(self) -> bytes:
-        """Body after the HTTP header block (requires HTTP parsing)."""
+        """Owning body after the HTTP header block (requires HTTP parsing)."""
         if self.http_content_offset < 0:
             return self.content
         return self.content[self.http_content_offset:]
+
+    def payload_view(self) -> memoryview:
+        """Borrow-only zero-copy view of the HTTP body (or whole block).
+
+        Same lifetime contract as :meth:`content_view`.
+        """
+        view = self.content_view()
+        if self.http_content_offset < 0:
+            return view
+        return view[self.http_content_offset:]
 
     def header_bytes(self, needle: bytes) -> bytes | None:
         """Single-field access without building the header map (when lazy).

@@ -331,25 +331,68 @@ def _record_span(record: WarcRecord) -> int:
     return hdr_len + 4 + record.content_length + 4
 
 
+_FUSED_BATCH = 512           # records per fused-kernel flush
+_FUSED_BATCH_BYTES = 32 << 20  # …or payload bytes, whichever trips first:
+                               # pending borrowed views pin their arenas and
+                               # the kernel pads a matching batch matrix, so
+                               # MB-scale records must flush early
+
+
+def _fused_supported(sig_bits: int, sig_ngram: int) -> bool:
+    """Geometry the fused kernel path covers (else: host two-pass)."""
+    from repro.kernels.digest_sig.digest_sig import HPAD
+
+    return (sig_bits & (sig_bits - 1) == 0
+            and 2 <= sig_ngram <= HPAD + 1)
+
+
 def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
                  sig_ngram: int = SIG_NGRAM,
-                 sig_hashes: int = SIG_HASHES) -> CdxIndex:
-    """One-pass sweep of one shard into a single-shard partial index."""
+                 sig_hashes: int = SIG_HASHES,
+                 fused: bool = False,
+                 batch_records: int = _FUSED_BATCH) -> CdxIndex:
+    """One-pass sweep of one shard into a single-shard partial index.
+
+    ``fused=True`` computes digest + signature through the batched
+    :func:`repro.kernels.digest_sig.digest_signature_batch` sweep:
+    record payloads are borrowed zero-copy out of the parse arena
+    (``content_view()`` — the pending batch pins its arenas, bounded by
+    ``batch_records`` records *and* ``_FUSED_BATCH_BYTES`` payload
+    bytes) and each payload byte is touched by exactly one
+    kernel pass instead of the two host passes (adler, then n-gram).
+    Falls back to the host path when the geometry is outside the
+    kernel's support (non-power-of-two ``sig_bits``).
+    """
     with open(path, "rb") as f:
         kind = detect_compression(f.read(8))
+    use_fused = fused and _fused_supported(sig_bits, sig_ngram)
     offsets: list[int] = []
     uncomp: list[int] = []
     rtypes: list[int] = []
     statuses: list[int] = []
-    digests: list[int] = []
-    sigs: list[np.ndarray] = []
+    digests: list = []           # ints (host path) / uint32 arrays (fused)
+    sigs: list[np.ndarray] = []  # (words,) rows (host) / (B, words) (fused)
+    pending: list[np.ndarray] = []  # borrowed payload views awaiting a flush
+    pending_bytes = 0
     uri_parts: list[bytes] = []
     mime_parts: list[bytes] = []
     uri_off = [0]
     mime_off = [0]
     last_span = 0
+
+    def flush() -> None:
+        nonlocal pending_bytes
+        from repro.kernels.digest_sig import digest_signature_batch
+
+        d, s = digest_signature_batch(pending, bits=sig_bits, n=sig_ngram,
+                                      k=sig_hashes)
+        digests.append(d)
+        sigs.append(s)
+        pending.clear()  # releases the arena pins
+        pending_bytes = 0
+
     for record in FastWARCIterator(path, parse_http=True):
-        content = record.content_view
+        content = record.content_view()
         offsets.append(record.stream_offset)
         uncomp.append(record.content_length)
         rtypes.append(int(record.record_type))
@@ -360,9 +403,16 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         # kill the shard sweep: anything outside the int16 column is as
         # good as no status
         statuses.append(status if 0 <= status <= 0x7FFF else -1)
-        digests.append(zlib.adler32(content) & 0xFFFFFFFF)
-        sigs.append(signature_of(content, bits=sig_bits, n=sig_ngram,
-                                 k=sig_hashes))
+        if use_fused:
+            pending.append(np.frombuffer(content, np.uint8))
+            pending_bytes += record.content_length
+            if len(pending) >= batch_records or \
+                    pending_bytes >= _FUSED_BATCH_BYTES:
+                flush()
+        else:
+            digests.append(zlib.adler32(content) & 0xFFFFFFFF)
+            sigs.append(signature_of(content, bits=sig_bits, n=sig_ngram,
+                                     k=sig_hashes))
         uri = record.header_bytes(b"WARC-Target-URI:") or b""
         mime = (http.get_bytes(b"Content-Type", b"") if http is not None
                 else record.header_bytes(b"Content-Type:") or b"")
@@ -371,6 +421,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         uri_off.append(uri_off[-1] + len(uri))
         mime_off.append(mime_off[-1] + len(mime))
         last_span = _record_span(record)
+    if use_fused and pending:
+        flush()
     n = len(offsets)
     off = np.asarray(offsets, np.uint64)
     # comp_len = distance to the next record in the addressable stream;
@@ -407,6 +459,15 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
             # the decompress-whole-shard path
             frame_off = np.full(n, NO_FRAME, np.uint64)
             frame_base = np.full(n, NO_FRAME, np.uint64)
+    if use_fused:
+        digest_col = (np.concatenate(digests) if digests
+                      else np.empty(0, np.uint32))
+        sig_col = (np.concatenate(sigs, axis=0) if sigs
+                   else np.empty((0, sig_bits // 64), np.uint64))
+    else:
+        digest_col = np.asarray(digests, np.uint32)
+        sig_col = (np.stack(sigs) if sigs
+                   else np.empty((0, sig_bits // 64), np.uint64))
     columns = {
         "shard_id": np.zeros(n, np.uint32),
         "offset": off,
@@ -414,9 +475,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         "uncomp_len": np.asarray(uncomp, np.uint64),
         "rtype": np.asarray(rtypes, np.uint16),
         "status": np.asarray(statuses, np.int16),
-        "digest": np.asarray(digests, np.uint32),
-        "signatures": (np.stack(sigs) if sigs
-                       else np.empty((0, sig_bits // 64), np.uint64)),
+        "digest": digest_col,
+        "signatures": sig_col,
         "frame_off": frame_off,
         "frame_base": frame_base,
         "uri_off": np.asarray(uri_off, np.uint64),
@@ -429,13 +489,22 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
 
 def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
                 sig_ngram: int = SIG_NGRAM,
-                sig_hashes: int = SIG_HASHES) -> CdxIndex:
+                sig_hashes: int = SIG_HASHES,
+                fused: bool | None = None) -> CdxIndex:
     """Index a sharded corpus: one parser sweep per shard, merged.
 
     ``workers > 0`` fans the per-shard sweeps out through
     :func:`repro.core.parallel.map_shards` (each partial is a picklable
     single-shard :class:`CdxIndex`); ``workers=0`` sweeps serially.
     Either way the merge is deterministic in shard order.
+
+    ``fused`` selects the single-sweep digest+signature path (the
+    batched :mod:`repro.kernels.digest_sig` kernel) over the two-pass
+    host path; the two produce bit-identical columns. Default (None):
+    fused for serial builds, host in worker processes — pool workers
+    may fork before/without JAX and must not drag a fresh runtime up
+    per shard. Geometries the kernel does not cover (non-power-of-two
+    ``sig_bits``) silently use the host path.
 
     The signature geometry (``sig_bits``/``sig_ngram``/``sig_hashes``)
     is a **per-index build parameter**: it is persisted in the CDX
@@ -452,8 +521,11 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
                          f"got {sig_bits}")
     if sig_ngram < 1 or sig_hashes < 1:
         raise ValueError("sig_ngram and sig_hashes must be >= 1")
+    if fused is None:
+        fused = workers == 0
     sweep = functools.partial(_index_shard, sig_bits=sig_bits,
-                              sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+                              sig_ngram=sig_ngram, sig_hashes=sig_hashes,
+                              fused=fused)
     partials = map_shards(sweep, [str(p) for p in paths], workers=workers)
     return CdxIndex.merge(partials)
 
@@ -531,20 +603,29 @@ class RandomAccessReader:
 
 
 def verify_index(index: CdxIndex, *, limit: int | None = None,
-                 use_kernel: bool = True, interpret: bool = True) -> list[bool]:
+                 use_kernel: bool = True, interpret: bool = True,
+                 check_signatures: bool = False) -> list[bool]:
     """Bulk-verify indexed adler32 digests against re-read record content.
 
     Every checked record is fetched through :class:`RandomAccessReader`
-    and the whole batch is verified in one
-    :func:`repro.core.warc.verify_digests_bulk` call — the adler32
-    entries all go through the single batched ``(B, nblocks)``-gridded
-    Pallas dispatch rather than one device call per record.
+    and the whole batch is verified in batched kernel dispatches — one
+    per width bucket, never one device call per record. Digest-only
+    verification (the default) goes through ``verify_digests_bulk``;
+    ``check_signatures=True`` routes the batch through the **fused**
+    :func:`repro.kernels.digest_sig.digest_signature_batch` sweep — the
+    same single-pass path the fused build uses — and additionally
+    requires each re-computed n-gram signature to equal the stored
+    signature row (both come out of the one sweep for free; computing
+    the signature matrix just to discard it would make the digest-only
+    case pay the full n-gram sweep). ``use_kernel=False`` runs
+    everything on the host; a geometry the fused kernel does not cover
+    keeps digest verification on the batched adler32 kernel and only
+    the signature re-check falls back to the host.
     """
     from repro.core.warc.checksum import verify_digests_bulk
 
     n = len(index) if limit is None else min(limit, len(index))
     datas: list[bytes] = []
-    headers: list[str] = []
     readers: dict[int, RandomAccessReader] = {}
     try:
         for i in range(n):
@@ -556,9 +637,41 @@ def verify_index(index: CdxIndex, *, limit: int | None = None,
             record = reader.read(int(index.offset[i]),
                                  frame=index.frame_hint(i))
             datas.append(record.content if record is not None else b"")
-            headers.append(f"adler32:{int(index.digest[i]):08x}")
     finally:
         for reader in readers.values():
             reader.close()
-    return verify_digests_bulk(datas, headers, use_kernel=use_kernel,
-                               interpret=interpret)
+    expected = index.digest[:n].astype(np.uint32)
+    if use_kernel and check_signatures and \
+            _fused_supported(index.sig_bits, index.sig_ngram):
+        from repro.kernels.digest_sig import digest_signature_batch
+
+        # chunked exactly like the build's pending/flush loop: one
+        # unbounded sweep would pad the whole corpus into int32 hash
+        # matrices (~5-10x payload bytes resident) and OOM on big indexes
+        ok = np.empty(n, bool)
+        start = 0
+        while start < n:
+            end = start + 1
+            nbytes = len(datas[start])
+            while end < n and end - start < _FUSED_BATCH and \
+                    nbytes < _FUSED_BATCH_BYTES:
+                nbytes += len(datas[end])
+                end += 1
+            digests, sigs = digest_signature_batch(
+                datas[start:end], bits=index.sig_bits, n=index.sig_ngram,
+                k=index.sig_hashes, interpret=interpret)
+            ok[start:end] = ((digests == expected[start:end])
+                             & (sigs == index.signatures[start:end])
+                             .all(axis=1))
+            start = end
+        return [bool(b) for b in ok]
+    headers = [f"adler32:{int(d):08x}" for d in expected]
+    results = verify_digests_bulk(datas, headers, use_kernel=use_kernel,
+                                  interpret=interpret)
+    if check_signatures:
+        for i, data in enumerate(datas):
+            sig = signature_of(data, bits=index.sig_bits,
+                               n=index.sig_ngram, k=index.sig_hashes)
+            results[i] = results[i] and bool(
+                (sig == index.signatures[i]).all())
+    return results

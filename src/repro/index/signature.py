@@ -26,7 +26,9 @@ __all__ = [
     "SIG_NGRAM",
     "SIG_WORDS",
     "candidate_mask",
+    "fold_positions_rows",
     "pattern_bits",
+    "positions_from_hashes",
     "signature_of",
 ]
 
@@ -54,10 +56,10 @@ def _ngram_hashes(buf: np.ndarray, n: int) -> np.ndarray:
 
 
 def _bit_positions(h: np.ndarray, bits: int, k: int) -> np.ndarray:
-    """k derived bit indices per hash, flattened (double hashing)."""
-    h2 = (h ^ (h >> np.uint32(15))) * _MIX
-    idx = (h[None, :] + np.arange(k, dtype=np.uint32)[:, None] * h2[None, :])
-    return (idx % np.uint32(bits)).ravel()
+    """k derived bit indices per hash, flattened (double hashing) — the
+    single-record face of :func:`positions_from_hashes`, delegated so the
+    derivation cannot silently diverge between host and fused paths."""
+    return positions_from_hashes(h, bits, k).ravel()
 
 
 def _fold(positions: np.ndarray, bits: int) -> np.ndarray:
@@ -66,6 +68,51 @@ def _fold(positions: np.ndarray, bits: int) -> np.ndarray:
     shifts = (positions & np.uint32(63)).astype(np.uint64)
     np.bitwise_or.at(sig, words, np.uint64(1) << shifts)
     return sig
+
+
+def positions_from_hashes(h: np.ndarray, bits: int, k: int) -> np.ndarray:
+    """``(k, …)`` bit positions from uint32 n-gram hashes (double hashing).
+
+    Vectorized over any hash-array shape — the batch half of
+    :func:`_bit_positions`, shared with the fused
+    ``digest_signature_batch`` kernel wrapper so the device sweep and the
+    host reference derive bit positions from identical arithmetic.
+    """
+    h = h.astype(np.uint32, copy=False)
+    h2 = (h ^ (h >> np.uint32(15))) * _MIX
+    pow2 = bits & (bits - 1) == 0  # power-of-two: mask beats modulo
+    out = np.empty((k,) + h.shape, np.uint32)
+    acc = h
+    for j in range(k):  # incremental: k+1 passes, no (k, m) temporaries
+        if j == 1:
+            acc = h + h2
+        elif j > 1:
+            acc += h2
+        out[j] = acc & np.uint32(bits - 1) if pow2 else acc % np.uint32(bits)
+    return out
+
+
+def fold_positions_rows(n_rows: int, row_ids: np.ndarray,
+                        positions: np.ndarray, bits: int) -> np.ndarray:
+    """Fold flat ``(row, bit-position)`` pairs into ``(n_rows, bits//64)``
+    uint64 signatures — layout-identical to :func:`_fold`, but built via
+    one flat boolean scatter + ``packbits`` so folding a whole record
+    batch is a handful of vector ops instead of a per-position
+    ``bitwise_or.at`` loop (the profiling whale of the two-pass index
+    build).
+
+    ``positions`` may be ``(m,)`` or ``(k, m)`` (one plane per hash —
+    scattered plane-by-plane so no ``(k, m)`` int64 temporary is ever
+    materialized); ``row_ids`` is the matching ``(m,)`` row index."""
+    bitmap = np.zeros(n_rows * bits, np.uint8)
+    if positions.size:
+        base = row_ids.astype(np.int64, copy=False) * bits
+        planes = positions if positions.ndim == 2 else positions[None, :]
+        for plane in planes:
+            bitmap[base + plane] = 1
+    packed = np.packbits(bitmap.reshape(n_rows, bits), axis=1,
+                         bitorder="little")
+    return packed.view(np.uint64)
 
 
 def signature_of(data, *, bits: int = SIG_BITS, n: int = SIG_NGRAM,

@@ -7,6 +7,8 @@ checksumming) plus the downstream model compute this framework feeds:
   TPU-VPU adaptation of FastWARC's SIMD ``memchr``/``strstr`` bulk scans.
 * ``adler32``     — the rolling checksum as blocked reductions (CRC-32's
   bit-feedback loop does not transfer to the VPU; see DESIGN.md §4).
+* ``digest_sig``  — fused Adler-32 + n-gram-signature sweep: both CDX
+  byte columns from one batched pass (DESIGN.md §9).
 * ``flash_attention`` — blocked GQA attention with online softmax: the
   training/serving hot-spot of the LM architectures this pipeline feeds.
 

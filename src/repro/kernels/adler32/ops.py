@@ -12,15 +12,17 @@ import jax.numpy as jnp
 from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
 from .adler32 import BLOCK, MOD, adler32_partials_batch
 
-__all__ = ["adler32", "adler32_batch"]
+__all__ = ["adler32", "adler32_batch", "combine_partials"]
 
 
-def _combine(s: np.ndarray, t: np.ndarray, lengths: np.ndarray,
-             block: int) -> np.ndarray:
+def combine_partials(s: np.ndarray, t: np.ndarray, lengths: np.ndarray,
+                     block: int) -> np.ndarray:
     """Host-side reduction of per-block partials to final checksums.
 
     Zero padding contributes nothing to S or T, so full-row sums with each
-    row's *true* length are exact for every ragged entry.
+    row's *true* length are exact for every ragged entry. Shared with the
+    fused ``digest_signature_batch`` wrapper, whose kernel emits the same
+    ``(S, T)`` partial layout.
     """
     s = s.astype(np.int64)
     t = t.astype(np.int64)
@@ -58,7 +60,8 @@ def adler32_batch(payloads, *, block: int = BLOCK,
         lengths = np.asarray([bufs[i].size for i in idxs], np.int64)
         s, t = adler32_partials_batch(jnp.asarray(padded), block=block,
                                       interpret=interpret)
-        out[idxs] = _combine(np.asarray(s), np.asarray(t), lengths, block)
+        out[idxs] = combine_partials(np.asarray(s), np.asarray(t), lengths,
+                                     block)
     return out
 
 

@@ -1,0 +1,107 @@
+"""Pallas kernel: fused Adler-32 + n-gram-signature sweep (DESIGN.md §9).
+
+CDX index construction needs two per-record byte reductions: the Adler-32
+content digest and the Bloom-style n-gram signature
+(:mod:`repro.index.signature`). Shipping them as separate passes walks
+every payload byte twice; this kernel fuses both into **one** batched
+sweep over a padded ``(B, W)`` byte matrix:
+
+* per 2048-byte sub-block it emits the Adler partials
+  ``S_j = Σ b, T_j = Σ t·b`` (same partial layout as
+  :mod:`repro.kernels.adler32` — the host combiner is shared), and
+* the rolling polynomial hash of every overlapping byte n-gram,
+  ``h_i = Σ_{j<n} b_{i+j}·P^{n-1-j}`` (uint32 wraparound, the exact
+  formula of :func:`repro.index.signature._ngram_hashes`), one lane per
+  position.
+
+Tiling: one grid step processes a **group of rows** ``(G, W + HPAD)``
+rather than one ``(1, block)`` tile — the fused sweep is a long chain of
+cheap vector ops, so per-step dispatch overhead (pronounced in interpret
+mode, real on TPU too) dominates a fine grid. The sub-block Adler
+partials come from a static unroll of strided slices (no reshape — tile
+layouts stay 2-D), and the ``HPAD`` right padding (zeros, ≥ n−1 wide)
+replaces an explicit halo input: every n-gram window starting in the row
+is in-bounds inside the tile. Int32 with wraparound multiplies matches
+uint32 mod-2³² semantics on both TPU and in interpret mode.
+
+The (cheap, O(#n-grams)) double-hash fold of hash values into signature
+bit positions stays on the host (:mod:`.ops`): it touches hashes, not
+payload bytes, so the "each payload byte is touched once" property of
+the fused build is preserved.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048          # Adler overflow bound: T_j < 2048·2047/2·255 < 2³¹
+HPAD = 128            # zero right-padding (lane-aligned); bounds n − 1
+FNV_PRIME = 0x01000193  # matches repro.index.signature._FNV_PRIME
+GROUP_BYTES = 1 << 21   # target payload bytes per grid step (VMEM budget:
+                        # ~2 MiB u8 tile + int32 hash/temp arrays ≈ 12 MiB)
+MAX_GROUP = 128
+
+
+def group_rows(width: int) -> int:
+    """Rows per grid step for a bucket of this padded width."""
+    return max(1, min(MAX_GROUP, GROUP_BYTES // max(width, 1)))
+
+
+def _digest_sig_kernel(buf_ref, s_ref, t_ref, h_ref, *,
+                       width: int, block: int, n: int):
+    """One grid step: Adler partials + n-gram hashes of (G, width) rows."""
+    ext = buf_ref[:, :].astype(jnp.int32)      # (G, width + HPAD)
+    data = ext[:, :width]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    for j in range(width // block):            # static unroll: sub-blocks
+        seg = data[:, j * block:(j + 1) * block]
+        s_ref[:, j] = jnp.sum(seg, axis=1)
+        t_ref[:, j] = jnp.sum(seg * iota, axis=1)
+    h = data
+    for j in range(1, n):                      # static unroll: n-gram poly
+        h = h * FNV_PRIME + ext[:, j:j + width]  # int32 wrap == mod 2^32
+    h_ref[:, :] = h
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block", "interpret"))
+def digest_sig_partials_batch(padded_bufs: jax.Array, *, n: int,
+                              block: int = BLOCK, interpret: bool = True
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused per-(row, block) partials over a padded byte matrix.
+
+    ``padded_bufs`` is ``(B, W + HPAD)`` uint8 — payload bytes in the
+    first ``W`` columns (``W % block == 0``), zeros after — with ``B`` a
+    multiple of :func:`group_rows`\\ ``(W)``. Returns ``(S, T, H)``: two
+    ``(B, W // block)`` int32 Adler partial arrays plus the ``(B, W)``
+    int32 n-gram hash matrix (uint32 bit patterns). One call sweeps the
+    whole batch once.
+    """
+    nrows, padded_width = padded_bufs.shape
+    width = padded_width - HPAD
+    assert width > 0 and width % block == 0, \
+        "wrapper must pad to HPAD plus a block multiple"
+    assert 1 < n <= HPAD + 1
+    group = group_rows(width)
+    assert nrows % group == 0, "wrapper must pad rows to the group size"
+    nblocks = width // block
+    kernel = functools.partial(_digest_sig_kernel, width=width, block=block,
+                               n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrows // group,),
+        in_specs=[pl.BlockSpec((group, padded_width), lambda g: (g, 0))],
+        out_specs=[
+            pl.BlockSpec((group, nblocks), lambda g: (g, 0)),
+            pl.BlockSpec((group, nblocks), lambda g: (g, 0)),
+            pl.BlockSpec((group, width), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nrows, nblocks), jnp.int32),
+            jax.ShapeDtypeStruct((nrows, nblocks), jnp.int32),
+            jax.ShapeDtypeStruct((nrows, width), jnp.int32),
+        ],
+        interpret=interpret,
+    )(padded_bufs)

@@ -1,0 +1,104 @@
+"""Public wrapper: fused digests + signatures for ragged payload batches.
+
+``digest_signature_batch`` stacks a ragged batch of record payloads into
+power-of-two width buckets (the shared :mod:`repro.kernels.bucketing`
+rule, so dispatch accounting matches the other byte kernels), sweeps
+each bucket **once** through the fused Pallas kernel, and finishes on
+the host:
+
+* Adler-32: the kernel's ``(S, T)`` partials reduce through the same
+  :func:`repro.kernels.adler32.ops.combine_partials` the plain digest
+  path uses — entry-wise equal to ``zlib.adler32``.
+* signatures: the kernel's n-gram hash matrix feeds the shared
+  double-hash position derivation
+  (:func:`repro.index.signature.positions_from_hashes`) and the batch
+  ``packbits`` fold — bit-identical to
+  :func:`repro.index.signature.signature_of` per row.
+
+This is the index build's single-sweep hot path: each payload byte is
+read once by the kernel; all host work after it is O(#n-grams) on hash
+values, never on payload bytes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.adler32.ops import combine_partials
+from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
+from .digest_sig import BLOCK, HPAD, digest_sig_partials_batch, group_rows
+
+__all__ = ["digest_signature_batch"]
+
+
+def _pad_rows(n: int, group: int) -> int:
+    """Row-count bucket: next power-of-two multiple of the group size, so
+    repeated ragged batches reuse a bounded set of compiled shapes (pad
+    rows are all-zero; their outputs are discarded)."""
+    return group * (1 << max(-(-n // group) - 1, 0).bit_length())
+
+
+def digest_signature_batch(payloads, *, bits: int | None = None,
+                           n: int | None = None, k: int | None = None,
+                           block: int = BLOCK, interpret: bool = True
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Adler-32 digests **and** n-gram signatures of a ragged batch,
+    one fused kernel sweep per width bucket.
+
+    Returns ``(digests, signatures)``: uint32 ``(B,)`` matching
+    ``zlib.adler32`` and uint64 ``(B, bits // 64)`` matching
+    ``signature_of`` row-wise. ``bits`` must be a power of two (the
+    position masking and packbits fold rely on it); the signature
+    geometry defaults to the :mod:`repro.index.signature` constants.
+    """
+    from repro.index.signature import (
+        SIG_BITS, SIG_HASHES, SIG_NGRAM, fold_positions_rows,
+        positions_from_hashes,
+    )
+
+    bits = SIG_BITS if bits is None else bits
+    n = SIG_NGRAM if n is None else n
+    k = SIG_HASHES if k is None else k
+    if bits <= 0 or bits & (bits - 1) or bits % 64:
+        raise ValueError(f"bits must be a power of two multiple of 64, "
+                         f"got {bits}")
+    if not 1 < n <= HPAD + 1 or k < 1:
+        raise ValueError(f"need 2 <= n <= {HPAD + 1} and k >= 1")
+    bufs = [_as_u8(p) for p in payloads]
+    nrows = len(bufs)
+    digests = np.empty(nrows, np.uint32)
+    sigs = np.zeros((nrows, bits // 64), np.uint64)
+    if nrows == 0:
+        return digests, sigs
+    buckets: dict[int, list[int]] = {}
+    for i, buf in enumerate(bufs):
+        buckets.setdefault(bucket_width(buf.size, block), []).append(i)
+    for width, idxs in buckets.items():
+        group = group_rows(width)
+        padded = np.zeros((_pad_rows(len(idxs), group), width + HPAD),
+                          np.uint8)
+        for row, i in enumerate(idxs):
+            padded[row, :bufs[i].size] = bufs[i]
+        lengths = np.asarray([bufs[i].size for i in idxs], np.int64)
+        s, t, h = digest_sig_partials_batch(jnp.asarray(padded), n=n,
+                                            block=block, interpret=interpret)
+        live = len(idxs)
+        # full-array np.asarray is zero-copy on the CPU backend; slicing
+        # happens host-side (a device-side h[:live] would dispatch + copy)
+        s_np, t_np, h_np = np.asarray(s), np.asarray(t), np.asarray(h)
+        digests[idxs] = combine_partials(s_np[:live], t_np[:live], lengths,
+                                         block)
+        # hash → k bit positions → flat packbits fold; all O(#n-grams) on
+        # the hash matrix, payload bytes were consumed by the single
+        # sweep. Valid n-grams are a per-row prefix, so the flat gather
+        # indices come from repeat/cumsum — no boolean mask sweep.
+        hu = h_np.view(np.uint32)
+        m = np.maximum(lengths - (n - 1), 0)         # valid n-grams per row
+        rows = np.arange(live, dtype=np.int64)
+        offs = np.cumsum(m) - m                      # per-row prefix starts
+        gidx = np.arange(int(m.sum()), dtype=np.int64)
+        gidx += np.repeat(rows * width - offs, m)    # flat (row, col) index
+        hv = hu.ravel()[gidx]
+        pos = positions_from_hashes(hv, bits, k)     # (k, total) planes
+        sigs[idxs] = fold_positions_rows(live, np.repeat(rows, m), pos, bits)
+    return digests, sigs

@@ -93,17 +93,23 @@ class ArchiveGateway:
         how many queued requests one scheduler drain may aggregate.
     cache_bytes:
         byte budget of the decompressed-payload LRU.
+    cache_admission:
+        ``"tinylfu"`` (default) guards the record cache with a
+        scan-resistant frequency-sketch admission duel — one-shot query
+        sweeps can no longer flush the hot working set; ``"lru"`` is
+        the PR 3 admit-always cache.
     """
 
     def __init__(self, index: CdxIndex, *, engine: QueryEngine | None = None,
                  max_pending: int = 256, max_batch_requests: int = 16,
-                 cache_bytes: int = 64 << 20, use_kernel: bool = True,
+                 cache_bytes: int = 64 << 20, cache_admission: str = "tinylfu",
+                 use_kernel: bool = True,
                  interpret: bool = True, poll_interval_s: float = 0.02
                  ) -> None:
         self.engine = engine if engine is not None else QueryEngine(
             index, use_kernel=use_kernel, interpret=interpret)
         self.index = self.engine.index
-        self.cache = RecordCache(cache_bytes)
+        self.cache = RecordCache(cache_bytes, admission=cache_admission)
         self.metrics = GatewayMetrics()
         self.max_batch_requests = max(1, max_batch_requests)
         self._poll = poll_interval_s

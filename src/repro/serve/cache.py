@@ -9,24 +9,112 @@ record) and the budget is in *bytes*, not entries, because archive
 payloads are wildly ragged: a handful of megabyte pages must not be
 allowed to masquerade as a "small" cache.
 
-Thread-safe; eviction is strict LRU. Payloads larger than the whole
-budget are not admitted (one oversize record must not flush everything).
+Admission is guarded by a TinyLFU-style frequency sketch
+(:class:`FrequencySketch`): before an insert may evict, the candidate's
+estimated access frequency must beat the eviction victim's. Archive
+query traffic is scan-heavy — one indexed query can touch thousands of
+records exactly once — and under plain LRU a single such scan flushes
+the hot working set; the sketch makes one-shot keys lose the admission
+duel instead (``admission="lru"`` restores the PR 3 behaviour).
+
+Thread-safe; eviction among admitted entries is strict LRU. Payloads
+larger than the whole budget are not admitted (one oversize record must
+not flush everything).
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
 
-__all__ = ["RecordCache"]
+import numpy as np
+
+__all__ = ["FrequencySketch", "RecordCache"]
+
+
+class FrequencySketch:
+    """Count-min sketch with saturating 4-bit-style counters + aging.
+
+    The TinyLFU frequency oracle: ``record`` bumps ``depth`` hashed
+    counters (conservative increment — only the current minima move, so
+    one key cannot inflate another's estimate more than necessary) and
+    ``estimate`` reads their minimum. After ``sample_size`` recordings
+    every counter is halved — the classic reset that lets the sketch
+    track a *moving* working set instead of all of history.
+
+    Counters live in plain ``bytearray`` rows and the per-access path is
+    pure-int: it runs on every ``RecordCache.get``/``put`` *inside the
+    cache lock*, where numpy scalar dispatch (~µs per op) would tax the
+    gateway's record-fetch hot loop; only the amortized aging sweep
+    touches numpy.
+    """
+
+    _SEEDS = (0x9E3779B1, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+    _CAP = 15  # saturation: 4-bit counters, as in the TinyLFU paper
+    _M64 = 0xFFFFFFFFFFFFFFFF
+
+    def __init__(self, capacity_hint: int = 4096, *, depth: int = 4,
+                 sample_factor: int = 8) -> None:
+        if depth < 1 or depth > len(self._SEEDS):
+            raise ValueError(f"depth must be in [1, {len(self._SEEDS)}]")
+        width = 1
+        while width < max(capacity_hint, 16):
+            width <<= 1
+        self._width_mask = width - 1
+        self._counts = [bytearray(width) for _ in range(depth)]
+        self._depth = depth
+        self.sample_size = sample_factor * width
+        self._recorded = 0
+        self.ages = 0
+
+    def _slots(self, key) -> list[int]:
+        h = hash(key) & self._M64
+        h ^= h >> 33
+        slots = []
+        for seed in self._SEEDS[:self._depth]:
+            m = (h * seed) & self._M64
+            slots.append(((m >> 17) ^ m) & self._width_mask)
+        return slots
+
+    def record(self, key) -> None:
+        """Count one access attempt for ``key`` (hit or miss alike)."""
+        idx = self._slots(key)
+        counts = self._counts
+        lo = min(counts[r][i] for r, i in enumerate(idx))
+        if lo < self._CAP:  # conservative increment of the minima only
+            for r, i in enumerate(idx):
+                if counts[r][i] == lo:
+                    counts[r][i] = lo + 1
+        self._recorded += 1
+        if self._recorded >= self.sample_size:
+            for row in counts:  # aging: halve everything (amortized)
+                row[:] = (np.frombuffer(row, np.uint8) >> 1).tobytes()
+            self._recorded //= 2
+            self.ages += 1
+
+    def estimate(self, key) -> int:
+        return min(self._counts[r][i]
+                   for r, i in enumerate(self._slots(key)))
 
 
 class RecordCache:
-    """LRU over ``(shard_id, offset) -> bytes`` with a byte budget."""
+    """LRU over ``(shard_id, offset) -> bytes`` with a byte budget.
 
-    def __init__(self, budget_bytes: int) -> None:
+    ``admission="tinylfu"`` (the gateway default) gates evicting inserts
+    behind the frequency duel described in the module docstring;
+    ``admission="lru"`` admits unconditionally (PR 3 behaviour).
+    """
+
+    def __init__(self, budget_bytes: int, *, admission: str = "lru",
+                 sketch: FrequencySketch | None = None) -> None:
         if budget_bytes < 0:
             raise ValueError("budget_bytes must be >= 0")
+        if admission not in ("lru", "tinylfu"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.budget_bytes = budget_bytes
+        self.admission = admission
+        self._sketch = (sketch if sketch is not None
+                        else FrequencySketch() if admission == "tinylfu"
+                        else None)
         self._entries: "OrderedDict[tuple[int, int], bytes]" = OrderedDict()
         self._bytes = 0
         self._lock = threading.Lock()
@@ -34,6 +122,7 @@ class RecordCache:
         self.misses = 0
         self.evictions = 0
         self.rejected_oversize = 0
+        self.rejected_admission = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -49,6 +138,8 @@ class RecordCache:
 
     def get(self, key: tuple[int, int]) -> bytes | None:
         with self._lock:
+            if self._sketch is not None:
+                self._sketch.record(key)  # every access attempt counts
             data = self._entries.get(key)
             if data is None:
                 self.misses += 1
@@ -58,15 +149,47 @@ class RecordCache:
             return data
 
     def put(self, key: tuple[int, int], data: bytes) -> bool:
-        """Admit ``data``; returns False when it exceeds the budget."""
+        """Admit ``data``; returns False when it exceeds the budget or
+        (TinyLFU) loses the admission duel against the eviction victim."""
         size = len(data)
         with self._lock:
+            if self._sketch is not None:
+                # an insertion attempt is an access attempt too: without
+                # this, a put-without-prior-get workload leaves every
+                # candidate at estimate 0 and the duel (<=) freezes the
+                # cache on whatever was admitted first
+                self._sketch.record(key)
             if size > self.budget_bytes:
                 self.rejected_oversize += 1
                 return False
             old = self._entries.pop(key, None)
             if old is not None:
                 self._bytes -= len(old)
+            if self._sketch is not None and self._bytes + size > \
+                    self.budget_bytes:
+                # the insert must evict: the candidate duels *every* entry
+                # it would displace (LRU → MRU until enough bytes free) —
+                # dueling only the LRU head would let one large candidate
+                # beat a stale victim and then flush arbitrarily many hot
+                # entries the duel never consulted
+                cand_freq = self._sketch.estimate(key)
+                need = self._bytes + size - self.budget_bytes
+                freed = 0
+                admitted = True
+                for vkey, vdata in self._entries.items():
+                    if freed >= need:
+                        break
+                    if cand_freq <= self._sketch.estimate(vkey):
+                        admitted = False
+                        break
+                    freed += len(vdata)
+                if not admitted:
+                    self.rejected_admission += 1
+                    if old is not None:  # key was resident: keep old value
+                        self._entries[key] = old
+                        self._bytes += len(old)
+                        self._entries.move_to_end(key)
+                    return False
             self._entries[key] = data
             self._bytes += size
             while self._bytes > self.budget_bytes:
@@ -87,9 +210,11 @@ class RecordCache:
                 "entries": len(self._entries),
                 "bytes_cached": self._bytes,
                 "budget_bytes": self.budget_bytes,
+                "admission": self.admission,
                 "hits": self.hits,
                 "misses": self.misses,
                 "evictions": self.evictions,
                 "rejected_oversize": self.rejected_oversize,
+                "rejected_admission": self.rejected_admission,
                 "hit_rate": self.hit_rate,
             }

@@ -355,6 +355,66 @@ def test_verify_index_bulk(corpus):
     broken.digest[3] ^= np.uint32(0xDEAD)
     results = verify_index(broken, limit=6, use_kernel=False)
     assert results == [True, True, True, False, True, True]
+    results = verify_index(broken, limit=6)  # kernel digest path agrees
+    assert results == [True, True, True, False, True, True]
+    # fused path (signatures too): the corrupted digest still fails, the
+    # intact rows' stored signatures round-trip through the fused sweep
+    results = verify_index(broken, limit=6, check_signatures=True)
+    assert results == [True, True, True, False, True, True]
+
+
+def test_fused_build_bit_identical_to_two_pass(corpus, tmp_path):
+    """ISSUE 4 acceptance: the fused digest+signature build and the
+    two-pass host build must produce byte-identical indexes (and hence
+    byte-identical query results)."""
+    paths, _ = corpus
+    fused = build_index(paths, fused=True)
+    host = build_index(paths, fused=False)
+    a, b = str(tmp_path / "fused.cdx"), str(tmp_path / "host.cdx")
+    fused.save(a)
+    host.save(b)
+    with open(a, "rb") as fa, open(b, "rb") as fb:
+        assert fa.read() == fb.read()
+
+
+def test_fused_build_nondefault_geometry(corpus):
+    paths, _ = corpus
+    fused = build_index(paths, sig_bits=1024, sig_ngram=3, sig_hashes=3,
+                        fused=True)
+    host = build_index(paths, sig_bits=1024, sig_ngram=3, sig_hashes=3,
+                       fused=False)
+    np.testing.assert_array_equal(fused.digest, host.digest)
+    np.testing.assert_array_equal(fused.signatures, host.signatures)
+
+
+def test_non_power_of_two_bits_fall_back_to_host(corpus):
+    paths, _ = corpus
+    # 192 = 3·64: a legal CDX geometry the kernel cannot cover — the
+    # fused flag must silently take the host path, not crash
+    idx = build_index(paths, sig_bits=192, fused=True)
+    ref = build_index(paths, sig_bits=192, fused=False)
+    np.testing.assert_array_equal(idx.signatures, ref.signatures)
+
+
+def test_verify_index_checks_signatures(corpus):
+    _, idx = corpus
+    results = verify_index(idx, limit=8, check_signatures=True)
+    assert results == [True] * 8
+    broken = CdxIndex(idx.shard_paths, idx.shard_kinds, {
+        "shard_id": idx.shard_id, "offset": idx.offset,
+        "comp_len": idx.comp_len, "uncomp_len": idx.uncomp_len,
+        "rtype": idx.rtype, "status": idx.status,
+        "digest": idx.digest, "signatures": idx.signatures.copy(),
+        "uri_off": idx.uri_off, "mime_off": idx.mime_off},
+        idx.uri_heap, idx.mime_heap)
+    broken.signatures[2] ^= np.uint64(1)  # one flipped signature bit
+    for use_kernel in (True, False):
+        results = verify_index(broken, limit=4, check_signatures=True,
+                               use_kernel=use_kernel)
+        assert results == [True, True, False, True]
+        # digests alone still pass: the signature check caught it
+        assert verify_index(broken, limit=4,
+                            use_kernel=use_kernel) == [True] * 4
 
 
 def test_service_ranks_and_truncates(corpus):

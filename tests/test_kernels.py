@@ -18,6 +18,10 @@ from repro.kernels.pattern_scan import (
     find_pattern_masks_multi,
     find_pattern_positions,
 )
+from repro.kernels.digest_sig import (
+    digest_signature_batch,
+    digest_signature_reference,
+)
 from repro.kernels.pattern_scan.ref import pattern_mask_ref
 
 
@@ -229,6 +233,56 @@ def test_pattern_scan_batch_cross_tile_matches():
     masks = find_pattern_mask_batch([bytes(buf)], b"ABCD", block=block)
     assert sorted(np.flatnonzero(masks[0]).tolist()) == [
         block - 3, 2 * block - 2, 3 * block - 1]
+
+
+# --------------------------------------------------------------------------
+# digest_sig (fused adler32 + n-gram signature sweep)
+# --------------------------------------------------------------------------
+
+def test_digest_sig_matches_two_pass_reference():
+    rng = np.random.default_rng(7)
+    payloads = [rng.integers(0, 256, size=int(s), dtype=np.uint8).tobytes()
+                for s in rng.integers(0, 9000, 48)]
+    payloads += [b"", b"a", b"abc", b"abcd", b"x" * 70_000]
+    d, s = digest_signature_batch(payloads)
+    dr, sr = digest_signature_reference(payloads)
+    np.testing.assert_array_equal(d, dr)
+    np.testing.assert_array_equal(s, sr)
+    # digests really are zlib's
+    for i, p in enumerate(payloads):
+        assert int(d[i]) == (zlib.adler32(p) & 0xFFFFFFFF)
+
+
+@pytest.mark.parametrize("bits,n,k", [(1024, 4, 2), (4096, 3, 1),
+                                      (64, 5, 3), (8192, 2, 4)])
+def test_digest_sig_geometry_sweep(bits, n, k):
+    rng = np.random.default_rng(bits + n + k)
+    payloads = [rng.integers(0, 256, size=int(sz), dtype=np.uint8).tobytes()
+                for sz in rng.integers(0, 5000, 12)]
+    d, s = digest_signature_batch(payloads, bits=bits, n=n, k=k)
+    dr, sr = digest_signature_reference(payloads, bits=bits, n=n, k=k)
+    np.testing.assert_array_equal(d, dr)
+    np.testing.assert_array_equal(s, sr)
+
+
+def test_digest_sig_empty_batch_and_bad_geometry():
+    d, s = digest_signature_batch([])
+    assert d.shape == (0,) and s.shape == (0, 64)
+    with pytest.raises(ValueError):
+        digest_signature_batch([b"xy"], bits=1000)   # not a power of two
+    with pytest.raises(ValueError):
+        digest_signature_batch([b"xy"], n=1)          # halo needs n >= 2
+
+
+def test_digest_sig_signature_semantics():
+    """Fused signatures keep the Bloom property queries rely on: every
+    n-gram of a payload has all its bits set in the signature."""
+    from repro.index.signature import pattern_bits
+
+    payload = b"the quick brown fox jumps over the lazy dog" * 20
+    _, sigs = digest_signature_batch([payload])
+    required = pattern_bits(b"quick brown")
+    assert ((sigs[0] & required) == required).all()
 
 
 def test_verify_digests_bulk_mixed_algos():

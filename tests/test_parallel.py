@@ -16,6 +16,7 @@ from repro.core.parallel import (
     ParallelWarcPool,
     ParallelWorkerError,
     iter_documents_parallel,
+    iter_records_parallel,
     map_shards,
 )
 from repro.core.pipeline import (
@@ -179,6 +180,145 @@ def test_parallel_documents_filter_options(shards):
 
 def _plus_one(x):
     return x + 1
+
+
+# --------------------------------------------------------------------------
+# shared-memory transport (ISSUE 4)
+# --------------------------------------------------------------------------
+
+def _payload_stream(n):
+    for i in range(n):
+        yield bytes([i % 251]) * (i % 7 + 1) * 100
+
+
+@pytest.mark.parametrize("transport", ["pickle", "shm"])
+@pytest.mark.parametrize("ordered", [True, False])
+def test_documents_equal_across_transports(shards, transport, ordered):
+    serial = [_doc_key(d) for d in iter_documents_parallel(shards, workers=0)]
+    got = [_doc_key(d) for d in iter_documents_parallel(
+        shards, workers=2, ordered=ordered, transport=transport)]
+    if ordered:
+        assert got == serial
+    else:
+        assert sorted(got) == sorted(serial)
+
+
+@pytest.mark.parametrize("transport", ["pickle", "shm"])
+def test_record_export_equal_across_transports(shards, transport):
+    from repro.core.warc import WarcRecordType
+
+    serial = [(r.stream_offset, r.record_id, r.content)
+              for r in iter_records_parallel(
+                  shards, workers=0, record_types=WarcRecordType.response)]
+    got = [(r.stream_offset, r.record_id, r.content)
+           for r in iter_records_parallel(
+               shards, workers=2, ordered=True, transport=transport,
+               record_types=WarcRecordType.response)]
+    assert got == serial
+    assert all(r.is_detached for r in iter_records_parallel(
+        shards[:1], workers=2, transport=transport))
+
+
+@pytest.mark.parametrize("transport", ["pickle", "shm"])
+def test_record_export_preserves_http_state(shards, transport):
+    """Regression: the shm record frame codec must carry HTTP parse state
+    — without it, `parse_http=True` results depended on the transport
+    (and on whether a chunk overflowed to the pickle fallback)."""
+    serial = list(iter_records_parallel(shards, workers=0, parse_http=True))
+    got = list(iter_records_parallel(shards, workers=2, ordered=True,
+                                     parse_http=True, transport=transport))
+    assert len(got) == len(serial) > 0
+    assert any(r.http_headers is not None for r in serial)
+    for a, b in zip(serial, got):
+        assert (a.http_headers is None) == (b.http_headers is None)
+        assert a.http_content_offset == b.http_content_offset
+        if a.http_headers is not None:
+            assert a.http_headers.status_line == b.http_headers.status_line
+            assert a.http_headers.items_bytes() == b.http_headers.items_bytes()
+            assert a.http_payload == b.http_payload
+
+
+def test_shm_transport_uses_ring_and_counts(shards):
+    with ParallelWarcPool(_squares, workers=2, transport="shm") as pool:
+        results = sorted(pool.iter_results([4, 5], ordered=False))
+        assert results == sorted([(4, i * i) for i in range(4)]
+                                 + [(5, i * i) for i in range(5)])
+        stats = pool.transport_stats
+        assert stats["results"] == 9
+        assert stats["shm_chunks"] > 0
+        assert stats["queue_chunks"] == 0
+
+
+def test_shm_oversize_chunk_falls_back_to_queue_blob():
+    # slots far smaller than one chunk: every send overflows the ring and
+    # must travel as a single-pickled blob through the queue instead
+    with ParallelWarcPool(_payload_stream, workers=1, transport="shm",
+                          slot_bytes=512, chunk_size=16) as pool:
+        got = list(pool.iter_results([40], ordered=True))
+        assert got == list(_payload_stream(40))
+        assert pool.transport_stats["queue_chunks"] > 0
+        assert pool.transport_stats["results"] == 40
+
+
+def test_shm_segments_unlinked_on_close():
+    pool = ParallelWarcPool(_squares, workers=2, transport="shm")
+    names = [seg.name for seg in pool._segments]
+    assert names
+    list(pool.iter_results([3], ordered=True))
+    pool.close()
+    from multiprocessing import shared_memory
+
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+
+
+def test_shm_allocation_failure_degrades_to_pickle(monkeypatch):
+    """Regression: a constrained /dev/shm (docker's 64 MB default) must
+    degrade the *default* transport to the queue path — and leak no
+    segments — while an explicit transport="shm" still raises."""
+    from repro.core import parallel as par
+
+    created = []
+    real = par._shm_mod.SharedMemory
+
+    def flaky(*args, **kwargs):
+        if kwargs.get("create") and len(created) >= 1:
+            raise OSError(28, "No space left on device")
+        seg = real(*args, **kwargs)
+        if kwargs.get("create"):
+            created.append(seg.name)
+        return seg
+
+    monkeypatch.setattr(par._shm_mod, "SharedMemory", flaky)
+    pool = ParallelWarcPool(_squares, workers=2)  # default transport
+    try:
+        assert pool.transport == "pickle"
+        assert pool._segments == []
+        assert sorted(pool.iter_results([3], ordered=True)) == [
+            (3, 0), (3, 1), (3, 4)]
+    finally:
+        pool.close()
+    from multiprocessing import shared_memory
+    for name in created:  # the successfully created segment was unlinked
+        with pytest.raises(FileNotFoundError):
+            shared_memory.SharedMemory(name=name)
+    with pytest.raises(OSError):
+        ParallelWarcPool(_squares, workers=2, transport="shm")
+
+
+def test_map_shards_over_shm_transport():
+    # map_shards rides the pool defaults; force both transports explicitly
+    items = list(range(6))
+    for transport in ("pickle", "shm"):
+        with ParallelWarcPool(functools.partial(_call_one_sq), workers=2,
+                              chunk_size=1, transport=transport) as pool:
+            assert list(pool.iter_results(items, ordered=True)) == [
+                i * i for i in items]
+
+
+def _call_one_sq(item):
+    yield item * item
 
 
 def test_map_shards_preserves_order():

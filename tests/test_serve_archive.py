@@ -261,6 +261,98 @@ def test_record_cache_rejects_oversize():
     assert cache.put((0, 1), b"ok")
 
 
+# -- TinyLFU admission (ISSUE 4) -------------------------------------------
+
+def test_tinylfu_one_shot_scan_does_not_evict_hot_set():
+    """The headline scan-resistance property: a long one-shot sweep (every
+    key touched exactly once, the indexed-query access pattern) must not
+    flush a frequently-hit working set; under plain LRU it flushes all
+    of it."""
+    payload = b"x" * 100
+    hot = [(0, i) for i in range(10)]
+
+    def exercise(cache):
+        for _ in range(5):              # build frequency + fill the cache
+            for k in hot:
+                if cache.get(k) is None:
+                    cache.put(k, payload)
+        for j in range(1000):           # the scan: 1000 one-shot keys
+            k = (1, j)
+            if cache.get(k) is None:
+                cache.put(k, payload)
+        return sum(1 for k in hot if cache.get(k) is not None)
+
+    tiny = RecordCache(budget_bytes=1000, admission="tinylfu")
+    assert exercise(tiny) == len(hot)
+    assert tiny.rejected_admission > 0
+    lru = RecordCache(budget_bytes=1000, admission="lru")
+    assert exercise(lru) == 0           # the failure mode being fixed
+
+
+def test_tinylfu_admits_keys_that_earn_frequency():
+    cache = RecordCache(budget_bytes=300, admission="tinylfu")
+    for i in range(3):
+        cache.put((0, i), b"x" * 100)   # fills the budget exactly
+    for _ in range(6):                  # a new key keeps getting asked for
+        cache.get((9, 9))
+    assert cache.put((9, 9), b"y" * 100)    # now hotter than the LRU victim
+    assert cache.get((9, 9)) == b"y" * 100
+
+
+def test_tinylfu_cold_insert_rejected_deterministically():
+    cache = RecordCache(budget_bytes=200, admission="tinylfu")
+    cache.put((0, 0), b"a" * 100)
+    cache.put((0, 1), b"b" * 100)
+    for _ in range(4):
+        cache.get((0, 0))
+        cache.get((0, 1))
+    # never-accessed key (frequency 0) duels the hot LRU victim and loses;
+    # both resident entries must survive untouched
+    assert not cache.put((0, 9), b"c" * 150)
+    assert cache.rejected_admission == 1
+    assert cache.get((0, 0)) == b"a" * 100
+    assert cache.get((0, 1)) == b"b" * 100
+
+
+def test_tinylfu_put_only_workload_does_not_freeze():
+    """Regression: put() must record the candidate in the sketch — a
+    write-through workload (no prior get) would otherwise leave every
+    candidate at estimate 0 and the duel (<=) would freeze the cache on
+    whatever filled it first."""
+    cache = RecordCache(budget_bytes=500, admission="tinylfu")
+    for i in range(5):
+        cache.put((0, i), b"x" * 100)
+    admitted = sum(bool(cache.put((1, j), b"y" * 100))
+                   for _ in range(3) for j in range(3))
+    assert admitted > 0
+
+
+def test_frequency_sketch_estimates_and_ages():
+    from repro.serve.cache import FrequencySketch
+
+    sk = FrequencySketch(capacity_hint=64, sample_factor=2)
+    for _ in range(5):
+        sk.record(("hot", 1))
+    assert sk.estimate(("hot", 1)) >= 4      # count-min: overestimate only
+    assert sk.estimate(("cold", 2)) <= 1
+    for j in range(10_000):                  # force aging resets
+        sk.record(("stream", j))
+    assert sk.ages > 0
+    assert sk.estimate(("hot", 1)) <= 2      # halved away: moving window
+
+
+def test_gateway_cache_admission_default_and_override(corpus):
+    paths, idx = corpus
+    with ArchiveGateway(idx, cache_bytes=1 << 20) as gw:
+        assert gw.cache.admission == "tinylfu"
+    with ArchiveGateway(idx, cache_bytes=1 << 20,
+                        cache_admission="lru") as gw:
+        assert gw.cache.admission == "lru"
+    snap = RecordCache(10, admission="tinylfu").snapshot()
+    assert snap["admission"] == "tinylfu"
+    assert snap["rejected_admission"] == 0
+
+
 def test_gateway_cache_hits_across_sequential_queries(corpus):
     _, idx = corpus
     with ArchiveGateway(idx) as gw:
