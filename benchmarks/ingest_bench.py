@@ -28,6 +28,16 @@ Three claims measured, not asserted:
   container is scheduler roulette — ratios swing 0.4×–5× run to run —
   so the deterministic mechanism cost is the instrument;
   tests/test_parallel.py pins multi-process correctness of both paths.
+* **decode** (ISSUE 5) — per-codec member decompression: the legacy
+  member-``bytes`` path (``zero_copy=False``) vs decode-into-arena
+  members, with and without the readahead decoder thread. Reported per
+  codec: records/s and bytes-copied/record, where the copy metric is
+  ``bytes_copied + member_bytes_copied`` off the :class:`CopyStats`
+  ledger — the claim is that gzip/LZ4 copy budgets collapse from
+  ~full-member-size to the uncompressed path's header-copy budget, and
+  that gzip rec/s gains ≥1.3× from overlapping inflate with parsing.
+  Arena-decoded output is verified byte-identical to the legacy path
+  in-bench before any rate is reported.
 
 Scale with REPRO_BENCH_PAGES (default 400).
 """
@@ -41,7 +51,7 @@ import time
 
 from repro.core.pipeline import Document
 from repro.core.warc import FastWARCIterator
-from repro.data.synth import CorpusSpec, write_corpus
+from repro.data.synth import CorpusSpec, generate_warc, write_corpus
 
 _PAGES = int(os.environ.get("REPRO_BENCH_PAGES", "400"))
 _N_SHARDS = 8
@@ -76,6 +86,140 @@ def _parse_stats(data: bytes, zero_copy: bool) -> tuple[float, float, int]:
     best = _best_s(sweep)
     stats = it.copy_stats
     return n / best, stats.bytes_copied / max(n, 1), n
+
+
+# -- member decode paths (ISSUE 5) ---------------------------------------
+
+def _decode_sweep(data: bytes, reps: int = 3,
+                  **kw) -> tuple[float, float, int]:
+    """(records/s, copied_bytes/record, records) for one decode mode.
+
+    Timing uses the bare-iteration metric the parse section established;
+    byte-identity is checked separately (untimed) by :func:`_snapshot`.
+    """
+    n = 0
+    it = None
+
+    def sweep():
+        nonlocal n, it
+        it = FastWARCIterator(data, parse_http=True, **kw)
+        n = sum(1 for _ in it)
+
+    best = _best_s(sweep, reps=reps)
+    stats = it.copy_stats
+    copied = stats.bytes_copied + stats.member_bytes_copied
+    return n / best, copied / max(n, 1), n
+
+
+def _decode_race(data: bytes, modes: dict, reps: int = 9) -> dict:
+    """Best-of rec/s per mode, sampled round-robin.
+
+    Shared-container CPU availability swings ~1.7× minute to minute;
+    interleaving the modes inside each rep gives every mode the same
+    chance of a quiet window before the per-mode best is taken (the
+    transport bench's paired-measurement rationale).
+    """
+    times = {name: float("inf") for name in modes}
+    counts = {}
+    for _ in range(reps):
+        for name, kw in modes.items():
+            it = FastWARCIterator(data, parse_http=True, **kw)
+            t0 = time.perf_counter()
+            counts[name] = sum(1 for _ in it)
+            times[name] = min(times[name], time.perf_counter() - t0)
+    return {name: counts[name] / t for name, t in times.items()}
+
+
+def _snapshot(data: bytes, **kw) -> list[tuple]:
+    # bytes() immediately: arena views are read before slot recycling
+    return [(r.record_id, bytes(r.content_view()))
+            for r in FastWARCIterator(data, parse_http=True, **kw)]
+
+
+def _two_proc_scaling() -> float:
+    """Aggregate CPU capacity available to two busy processes vs one —
+    the hard ceiling on what pipelined (process) readahead can deliver
+    on this host. Shared/throttled CI containers sit well below 2.0."""
+    import multiprocessing as mp
+
+    def burn(q):
+        deadline = time.perf_counter() + 0.4
+        x = n = 0
+        while time.perf_counter() < deadline:
+            for i in range(10000):
+                x += i * i
+            n += 1
+        q.put(n)
+
+    ctx = mp.get_context()
+    q = ctx.Queue()
+    p = ctx.Process(target=burn, args=(q,))
+    p.start()
+    p.join()
+    single = q.get()
+    procs = [ctx.Process(target=burn, args=(q,)) for _ in range(2)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    return (q.get() + q.get()) / max(single, 1)
+
+
+def _decode_rows() -> list[str]:
+    rows = [f"ingest,decode,env,two_proc_scaling,"
+            f"{_two_proc_scaling():.2f}"]
+    spec = CorpusSpec(n_pages=_PAGES, seed=17)
+    plain_rps, plain_bpr, _ = _decode_sweep(generate_warc(spec, "none"))
+    rows.append(f"ingest,decode,none_arena,records_per_s,{plain_rps:.1f}")
+    rows.append(f"ingest,decode,none_arena,bytes_copied_per_record,"
+                f"{plain_bpr:.1f}")
+    codecs = ["gzip", "lz4"]
+    try:
+        import zstandard  # noqa: F401
+        codecs.append("zstd")
+    except ImportError:
+        pass
+    for codec in codecs:
+        # gzip gets a larger corpus: the process-readahead fork/ring
+        # setup (~5-8 ms) must amortize the way it does on real
+        # (100 MB+) shards, not dominate a 1 MB toy file. LZ4/zstd keep
+        # the base scale (the pure-Python LZ4 *compressor* would
+        # otherwise dominate bench runtime just generating the input).
+        pages = max(5 * _PAGES, 3000) if codec == "gzip" else _PAGES
+        data = generate_warc(CorpusSpec(n_pages=pages, seed=17), codec)
+        # acceptance gate first: arena decode (± readahead) must be
+        # byte-identical to the legacy member path, checked untimed
+        legacy_snap = _snapshot(data, zero_copy=False)
+        assert _snapshot(data, readahead=False) == legacy_snap, codec
+        modes = {"legacy": dict(zero_copy=False),
+                 "arena": dict(readahead=False)}
+        member_codec = codec != "zstd"  # zstd: no members, no decode stage
+        if member_codec:
+            assert _snapshot(data, readahead=True) == legacy_snap, codec
+            modes["readahead"] = dict(readahead=True)
+        rates = _decode_race(data, modes)
+        # copy ledgers from one untimed sweep per mode
+        _, legacy_bpr, _ = _decode_sweep(data, reps=1, zero_copy=False)
+        _, arena_bpr, _ = _decode_sweep(data, reps=1, readahead=False)
+        rows.append(f"ingest,decode,{codec}_legacy,records_per_s,"
+                    f"{rates['legacy']:.1f}")
+        rows.append(f"ingest,decode,{codec}_legacy,bytes_copied_per_record,"
+                    f"{legacy_bpr:.1f}")
+        rows.append(f"ingest,decode,{codec}_arena,records_per_s,"
+                    f"{rates['arena']:.1f}")
+        rows.append(f"ingest,decode,{codec}_arena,bytes_copied_per_record,"
+                    f"{arena_bpr:.1f}")
+        if member_codec:
+            rows.append(f"ingest,decode,{codec}_readahead,records_per_s,"
+                        f"{rates['readahead']:.1f}")
+            rows.append(f"ingest,decode,{codec}_readahead,"
+                        f"bytes_copied_per_record,{arena_bpr:.1f}")
+            rows.append(f"ingest,decode,{codec}_readahead,speedup_vs_legacy,"
+                        f"{rates['readahead'] / rates['legacy']:.2f}")
+        rows.append(f"ingest,decode,{codec},verified_identical,1")
+        rows.append(f"ingest,decode,{codec}_arena,copy_vs_none_ratio,"
+                    f"{arena_bpr / max(plain_bpr, 1e-9):.2f}")
+    return rows
 
 
 # -- transport mechanism bench -------------------------------------------
@@ -158,6 +302,9 @@ def run(quiet: bool = False) -> list[str]:
     rows.append(f"ingest,parse,zero_copy,copy_reduction,"
                 f"{legacy_bpr / max(zc_bpr, 1e-9):.1f}")
 
+    # 2) member decode paths: legacy bytes vs decode-into-arena ± readahead
+    rows.extend(_decode_rows())
+
     with tempfile.TemporaryDirectory() as d:
         shard_paths = []
         for i in range(_N_SHARDS):
@@ -166,10 +313,10 @@ def run(quiet: bool = False) -> list[str]:
                          "none")
             shard_paths.append(p)
 
-        # 2) pool transport mechanism: pickle+pipe vs shm ring
+        # 3) pool transport mechanism: pickle+pipe vs shm ring
         rows.extend(_transport_rows())
 
-        # 3) fused vs two-pass index build (bit-identical columns)
+        # 4) fused vs two-pass index build (bit-identical columns)
         from repro.index import build_index
 
         index = build_index(shard_paths, fused=True)  # warm compile

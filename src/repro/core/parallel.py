@@ -568,11 +568,13 @@ class ParallelWarcPool:
 # --------------------------------------------------------------------------
 
 def _extract_documents(path: str, *, min_length: int = 64,
-                       status_ok_only: bool = True):
+                       status_ok_only: bool = True,
+                       readahead: bool | None = None):
     from repro.core.pipeline import iter_documents
 
     yield from iter_documents(path, min_length=min_length,
-                              status_ok_only=status_ok_only)
+                              status_ok_only=status_ok_only,
+                              readahead=readahead)
 
 
 def _call_one(fn: Callable, item):
@@ -613,7 +615,8 @@ def iter_documents_parallel(paths: Iterable[str], *,
                             status_ok_only: bool = True,
                             chunk_size: int = _DEFAULT_CHUNK_SIZE,
                             mp_context: str | None = None,
-                            transport: str | None = None) -> Iterator:
+                            transport: str | None = None,
+                            readahead: bool | None = None) -> Iterator:
     """Parallel ``iter_documents`` over many WARC shards.
 
     Parse, HTTP decode, and HTML→text extraction all run in ``workers``
@@ -624,7 +627,9 @@ def iter_documents_parallel(paths: Iterable[str], *,
     keeps the PR 1 queue path). ``workers=0`` is the serial fallback
     (identical output, one process). ``ordered=True`` reproduces the
     exact serial document order; the default streams documents as
-    shards finish.
+    shards finish. ``readahead`` reaches each worker's parser: member
+    inflate runs on a decoder thread inside the worker process, so
+    decode overlaps extraction per shard on top of the process fan-out.
     """
     paths = [p for p in paths]
     if workers is not None and workers <= 0:
@@ -632,10 +637,12 @@ def iter_documents_parallel(paths: Iterable[str], *,
 
         for p in paths:
             yield from iter_documents(p, min_length=min_length,
-                                      status_ok_only=status_ok_only)
+                                      status_ok_only=status_ok_only,
+                                      readahead=readahead)
         return
     fn = functools.partial(_extract_documents, min_length=min_length,
-                           status_ok_only=status_ok_only)
+                           status_ok_only=status_ok_only,
+                           readahead=readahead)
     with ParallelWarcPool(fn, workers=workers, chunk_size=chunk_size,
                           mp_context=mp_context, transport=transport,
                           frame_codec=(_encode_document, _decode_document)
@@ -680,15 +687,21 @@ def _decode_record(view: memoryview):
     return rec
 
 
-def _extract_records(path: str, *, types_value: int, parse_http: bool):
+def _extract_records(path: str, *, types_value: int, parse_http: bool,
+                     readahead: bool | None = None):
     from repro.core.warc import FastWARCIterator, WarcRecordType
 
     it = FastWARCIterator(path, record_types=WarcRecordType(types_value),
-                          parse_http=parse_http)
-    for rec in it:
-        # detach: frames are encoded (and queue-fallback chunks pickled)
-        # after the parse arena has moved on
-        yield rec.detach()
+                          parse_http=parse_http, readahead=readahead)
+    try:
+        for rec in it:
+            # detach: frames are encoded (and queue-fallback chunks
+            # pickled) after the parse arena has moved on
+            yield rec.detach()
+    finally:
+        # a worker torn down mid-shard (pool close) must join the
+        # shard's decoder thread, not leak it
+        it.close()
 
 
 def iter_records_parallel(paths: Iterable[str], *,
@@ -698,7 +711,8 @@ def iter_records_parallel(paths: Iterable[str], *,
                           ordered: bool = False,
                           chunk_size: int = _DEFAULT_CHUNK_SIZE,
                           mp_context: str | None = None,
-                          transport: str | None = None) -> Iterator:
+                          transport: str | None = None,
+                          readahead: bool | None = None) -> Iterator:
     """Parallel bulk record export: full WARC records out of many shards.
 
     The payload-heavy sibling of :func:`iter_documents_parallel` (whole
@@ -715,10 +729,11 @@ def iter_records_parallel(paths: Iterable[str], *,
     if workers is not None and workers <= 0:
         for p in paths:
             yield from _extract_records(p, types_value=int(record_types),
-                                        parse_http=parse_http)
+                                        parse_http=parse_http,
+                                        readahead=readahead)
         return
     fn = functools.partial(_extract_records, types_value=int(record_types),
-                           parse_http=parse_http)
+                           parse_http=parse_http, readahead=readahead)
     with ParallelWarcPool(fn, workers=workers, chunk_size=chunk_size,
                           mp_context=mp_context, transport=transport,
                           frame_codec=(_encode_record, _decode_record)

@@ -49,25 +49,36 @@ class Document:
 
 
 def iter_documents(source, *, min_length: int = 64,
-                   status_ok_only: bool = True) -> Iterator[Document]:
-    """Yield text documents from one WARC file (path, bytes, or fileobj)."""
+                   status_ok_only: bool = True,
+                   readahead: bool | None = None) -> Iterator[Document]:
+    """Yield text documents from one WARC file (path, bytes, or fileobj).
+
+    ``readahead`` is forwarded to :class:`FastWARCIterator` (default
+    auto: gzip members inflate on a decoder thread ahead of extraction).
+    The iterator is closed on generator teardown, so an abandoned
+    consumer (e.g. the token loader stopping mid-shard) deterministically
+    joins the decoder thread and releases the shard's fd.
+    """
     it = FastWARCIterator(source, record_types=WarcRecordType.response,
-                          parse_http=True)
-    for record in it:
-        http = record.http_headers
-        if http is None:
-            continue
-        if status_ok_only and http.status_code != 200:
-            continue
-        ctype = http.get_bytes(b"Content-Type", b"")
-        if not ctype.startswith(b"text/html"):
-            continue
-        # borrow-only: the payload never leaves the parse arena; only the
-        # (much smaller) extracted text is materialized
-        text = html_to_text(record.payload_view())
-        if len(text) < min_length:
-            continue
-        yield Document(record.target_uri, text, record.stream_offset)
+                          parse_http=True, readahead=readahead)
+    try:
+        for record in it:
+            http = record.http_headers
+            if http is None:
+                continue
+            if status_ok_only and http.status_code != 200:
+                continue
+            ctype = http.get_bytes(b"Content-Type", b"")
+            if not ctype.startswith(b"text/html"):
+                continue
+            # borrow-only: the payload never leaves the parse arena; only
+            # the (much smaller) extracted text is materialized
+            text = html_to_text(record.payload_view())
+            if len(text) < min_length:
+                continue
+            yield Document(record.target_uri, text, record.stream_offset)
+    finally:
+        it.close()
 
 
 _HREF_RE = re.compile(rb"""href\s*=\s*["']?(https?://[^"'\s>]+)""", re.I)

@@ -38,10 +38,15 @@ from .record import (
     WarcRecord,
     WarcRecordType,
 )
+from .record import scan_header_field_in as _scan_field_in
 from .streams import (
+    _ARENA_BYTES,
     CopyStats,
     GZipStream,
     LZ4Stream,
+    MemberArena,
+    ProcessReadaheadDecoder,
+    ReadaheadDecoder,
     RecordBuffer,
     ZstdStream,
     detect_compression,
@@ -99,19 +104,42 @@ class FastWARCIterator:
     func_filter:
         optional predicate applied after header parse, before HTTP parse.
     zero_copy:
-        parse uncompressed/zstd streams through the pooled
-        :class:`~repro.core.warc.streams.RecordBuffer` arena (default) —
+        parse through the pooled arenas (default): uncompressed/zstd
+        streams go through :class:`~repro.core.warc.streams.RecordBuffer`,
+        gzip/LZ4 members are decoded **directly into**
+        :class:`~repro.core.warc.streams.MemberArena` slots
+        (``next_member_into`` — no per-record member ``bytes``) —
         record content is a borrowed ``memoryview``, see
         :meth:`WarcRecord.detach`. ``False`` selects the PR 1-era
-        bytes-slicing loop (kept as the instrumented "old path" the
-        ingest benchmark measures against).
+        bytes-slicing / member-``bytes`` loops (kept as the
+        instrumented "old path" the ingest benchmark measures against).
     arena_bytes:
         initial arena size for the zero-copy path (default 1 MiB; grows
-        geometrically past oversized records). Exposed for memory
-        tuning and for tests that force arena recycling.
+        geometrically past oversized records); also the readahead
+        decoder's slot-packing watermark. Exposed for memory tuning and
+        for tests that force arena recycling.
+    readahead:
+        overlap member decode with record parsing: a decoder thread
+        inflates gzip/LZ4 members into arena slots ahead of the parser
+        through a bounded slot ring
+        (:class:`~repro.core.warc.streams.ReadaheadDecoder`). Default
+        ``None`` enables it wherever it cannot lose work: gzip always
+        (members must be inflated to find their boundaries anyway), LZ4
+        only when no type filter is active (the filtered LZ4 path keeps
+        the lazy first-block sniff + frame-hop skip, which readahead's
+        decode-everything would defeat; pass ``readahead=True`` to
+        force it regardless). Only the zero-copy member paths ever
+        spawn the thread; ``close()`` joins it.
+    readahead_depth:
+        slot-batches the decoder may run ahead of the parser (ring
+        bound; default 3 — double buffering plus one slot of slack
+        against scheduler jitter on busy hosts).
 
     Every Python-level byte copy either path makes is tallied in
-    ``self.copy_stats`` (:class:`~repro.core.warc.streams.CopyStats`).
+    ``self.copy_stats`` (:class:`~repro.core.warc.streams.CopyStats`);
+    member decode is split between its ``member_bytes_copied`` (legacy
+    member materialization) and ``decode_into_arena`` (arena-path
+    decompressor output) counters.
     """
 
     def __init__(
@@ -124,13 +152,20 @@ class FastWARCIterator:
         func_filter: Callable[[WarcRecord], bool] | None = None,
         zero_copy: bool = True,
         arena_bytes: int | None = None,
+        readahead: bool | None = None,
+        readahead_depth: int = 3,
     ) -> None:
         self._owned_file: BinaryIO | None = None
+        # path / bytes sources can be re-opened by a readahead decoder
+        # *process* (fork ships bytes for free); file objects cannot
+        self._source_spec: str | bytes | None = None
         if isinstance(source, str):
+            self._source_spec = source
             source = open(source, "rb")
             self._owned_file = source
         elif isinstance(source, (bytes, bytearray, memoryview)):
-            source = io.BytesIO(bytes(source))
+            self._source_spec = bytes(source)
+            source = io.BytesIO(self._source_spec)
         self._raw = source
         self.record_types = record_types
         self._types_mask = int(record_types)
@@ -140,6 +175,9 @@ class FastWARCIterator:
         self.func_filter = func_filter
         self.zero_copy = zero_copy
         self.arena_bytes = arena_bytes  # None: streams._ARENA_BYTES default
+        self.readahead = readahead
+        self.readahead_depth = readahead_depth
+        self._decoder: ReadaheadDecoder | ProcessReadaheadDecoder | None = None
         self.copy_stats = CopyStats()
         self.records_skipped = 0
 
@@ -148,7 +186,12 @@ class FastWARCIterator:
         self._kind = detect_compression(head)
         self._stream = None
         if self._kind == "gzip":
-            self._stream = GZipStream(source)
+            # legacy path keeps PR 4 semantics bit-for-bit (zlib always
+            # verified member CRCs internally); the zero-copy decode path
+            # is FastWARC-style raw-deflate — redundant per-member CRC
+            # off by default, end-to-end integrity via verify_digests
+            self._stream = GZipStream(source,
+                                      verify_checksums=not zero_copy)
         elif self._kind == "lz4":
             self._stream = LZ4Stream(source)
         elif self._kind == "zstd":
@@ -166,6 +209,8 @@ class FastWARCIterator:
                     yield from self._iter_uncompressed_arena()
                 else:
                     yield from self._iter_uncompressed_legacy()
+            elif self.zero_copy:
+                yield from self._iter_members_arena()
             elif isinstance(self._stream, LZ4Stream):
                 yield from self._iter_lz4()
             else:
@@ -174,6 +219,7 @@ class FastWARCIterator:
             # files *we* opened (str paths) are released on exhaustion or
             # generator teardown — callers iterating many shards per epoch
             # must not accumulate fds (WarcTokenLoader does exactly that)
+            self._stop_decoder()
             if self._owned_file is not None:
                 self.close()
 
@@ -183,8 +229,17 @@ class FastWARCIterator:
         f = self._owned_file
         return f is not None and f.closed
 
+    def _stop_decoder(self) -> None:
+        decoder = self._decoder
+        if decoder is not None:
+            self._decoder = None
+            decoder.close()
+
     def close(self) -> None:
-        """Close the underlying file if this iterator opened it."""
+        """Release everything this iterator owns: join the readahead
+        decoder thread (and free its ring slots) if one is running, and
+        close the underlying file if this iterator opened it."""
+        self._stop_decoder()
         if self._owned_file is not None and not self._owned_file.closed:
             self._owned_file.close()
 
@@ -370,19 +425,21 @@ class FastWARCIterator:
             if record is not None:
                 yield record
 
-    # -- gzip: member == record -------------------------------------------
+    # -- gzip: member == record (legacy member-``bytes`` path) ------------
     def _iter_members(self) -> Iterator[WarcRecord]:
         stream = self._stream
+        count_member = self.copy_stats.count_member_copy
         while True:
             offset = stream.tell_compressed()
             data = stream.next_member()
             if data is None:
                 return
+            count_member(len(data))  # per-record member bytes materialized
             record = self._record_from_member(data, offset)
             if record is not None:
                 yield record
 
-    # -- lz4: lazy first-block sniff + frame hop skip ---------------------
+    # -- lz4: lazy first-block sniff + frame hop skip (legacy) ------------
     def _iter_lz4(self) -> Iterator[WarcRecord]:
         stream = self._stream
         filter_active = self._filter_active
@@ -399,9 +456,146 @@ class FastWARCIterator:
                     lazy.skip()
                     continue
             data = lazy.read_all()
+            self.copy_stats.count_member_copy(len(data))
             record = self._record_from_member(data, offset)
             if record is not None:
                 yield record
+
+    # -- gzip/lz4: decode-into-arena members (zero-copy default) ----------
+    def _resolve_readahead(self, is_lz4: bool) -> bool:
+        if self.readahead is not None:
+            return self.readahead
+        # auto: on wherever it cannot lose work — gzip members must be
+        # inflated to find their boundaries anyway; filtered LZ4 keeps
+        # the lazy sniff + frame-hop skip instead
+        return not (is_lz4 and self._filter_active)
+
+    def _iter_members_arena(self) -> Iterator[WarcRecord]:
+        stream = self._stream
+        arena = MemberArena(stats=self.copy_stats)
+        is_lz4 = isinstance(stream, LZ4Stream)
+        if self._resolve_readahead(is_lz4):
+            yield from self._iter_members_readahead(stream, arena)
+        elif is_lz4 and self._filter_active:
+            yield from self._iter_lz4_arena_lazy(stream, arena)
+        else:
+            stats = self.copy_stats
+            while True:
+                offset = stream.tell_compressed()
+                slot = arena.acquire()
+                n = stream.next_member_into(slot, stats)
+                if n is None:
+                    arena.release(slot)
+                    return
+                record = self._record_from_slot(slot, 0, n, offset)
+                arena.release(slot)
+                if record is not None:
+                    yield record
+
+    def _iter_members_readahead(self, stream,
+                                arena: MemberArena) -> Iterator[WarcRecord]:
+        # a decoder stage inflates members into slot batches ahead of this
+        # parse loop (bounded ring). Preferred implementation is a child
+        # *process* (true CPU overlap — the GIL serializes a decoder
+        # thread against a hot parse loop, see ProcessReadaheadDecoder);
+        # in-memory/file-object sources without a fork context use the
+        # decoder thread. Lifecycle contract either way: the stage dies
+        # with this generator (finally) and with close().
+        stats = self.copy_stats
+        watermark = self.arena_bytes if self.arena_bytes else _ARENA_BYTES
+        decoder = None
+        if self._source_spec is not None:
+            try:
+                decoder = ProcessReadaheadDecoder(
+                    self._source_spec, arena, depth=self.readahead_depth,
+                    watermark=watermark)
+            except (RuntimeError, OSError):
+                decoder = None  # no fork / constrained /dev/shm: thread
+        if decoder is None:
+            def decode_member(slot: bytearray):
+                offset = stream.tell_compressed()
+                n = stream.next_member_into(slot, stats)
+                return None if n is None else (n, offset)
+
+            decoder = ReadaheadDecoder(decode_member, arena,
+                                       depth=self.readahead_depth,
+                                       watermark=watermark)
+        self._decoder = decoder
+        get = decoder.get
+        release = decoder.release
+        record_from_slot = self._record_from_slot
+        try:
+            while True:
+                item = get()
+                if item is None:
+                    return
+                _, slot, members = item
+                for start, nbytes, offset in members:
+                    record = record_from_slot(slot, start, nbytes, offset)
+                    if record is not None:
+                        yield record
+                release(slot)
+        finally:
+            self._stop_decoder()
+
+    def _iter_lz4_arena_lazy(self, stream,
+                             arena: MemberArena) -> Iterator[WarcRecord]:
+        # filtered LZ4: first block decodes into the slot for the type
+        # sniff; skipped frames roll the prefix back off the slot and hop
+        # block headers only — cheap skipping *and* arena decode
+        types_mask = self._types_mask
+        stats = self.copy_stats
+        while True:
+            offset = stream.tell_compressed()
+            slot = arena.acquire()
+            member = stream.begin_member_into(slot)
+            if member is None:
+                arena.release(slot)
+                return
+            hdr_end = slot.find(HEADER_TERMINATOR, 0, member.prefix_len)
+            sniff_end = hdr_end if hdr_end >= 0 else member.prefix_len
+            type_raw = _scan_field_in(slot, _TYPE_NEEDLE, 0, sniff_end)
+            type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
+                          RECORD_TYPE_VALUES.get(type_raw.lower(),
+                                                 UNKNOWN_TYPE_VALUE))
+            if not (type_value & types_mask):
+                self.records_skipped += 1
+                member.skip()
+                arena.release(slot)
+                continue
+            n = member.finish(stats)
+            record = self._record_from_slot(slot, 0, n, offset)
+            arena.release(slot)
+            if record is not None:
+                yield record
+
+    def _record_from_slot(self, slot: bytearray, at: int, nbytes: int,
+                          offset: int) -> WarcRecord | None:
+        """Parse one decoded member in place: type/length sniffed off the
+        slot, header block copied out (small, counted), content borrowed
+        as a ``memoryview`` of the slot — the member-path twin of the
+        :class:`RecordBuffer` parse (DESIGN.md §9)."""
+        end = at + nbytes
+        start = slot.find(WARC_MAGIC, at, end)
+        if start < 0:
+            return None
+        hdr_end = slot.find(HEADER_TERMINATOR, start, end)
+        if hdr_end < 0:
+            return None
+        type_raw = _scan_field_in(slot, _TYPE_NEEDLE, start, hdr_end)
+        type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
+                      RECORD_TYPE_VALUES.get(type_raw.lower(),
+                                             UNKNOWN_TYPE_VALUE))
+        if self._filter_active and not (type_value & self._types_mask):
+            self.records_skipped += 1
+            return None
+        clen_raw = _scan_field_in(slot, _CLEN_NEEDLE, start, hdr_end)
+        clen = int(clen_raw) if clen_raw and clen_raw.isdigit() else 0
+        header_block = bytes(memoryview(slot)[start:hdr_end])
+        self.copy_stats.count_copy(len(header_block))
+        body_start = hdr_end + 4
+        content = memoryview(slot)[body_start:min(body_start + clen, end)]
+        return self._finalize(header_block, type_value, content, offset)
 
     def read_one(self) -> WarcRecord | None:
         """Parse and return the next record only (random-access support).
@@ -451,8 +645,10 @@ def read_record_at(source: BinaryIO, offset: int, *,
     absolute ``offset``.
     """
     source.seek(offset)
+    # readahead off: one member is parsed and the iterator abandoned —
+    # spinning a decoder thread per random-access read would be pure cost
     it = FastWARCIterator(source, parse_http=parse_http,
-                          verify_digests=verify_digests)
+                          verify_digests=verify_digests, readahead=False)
     record = it.read_one()
     if record is not None:
         # content may be a zero-copy borrow of the iterator's arena;

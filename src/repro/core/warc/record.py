@@ -81,6 +81,26 @@ def scan_header_field(block: bytes, needle: bytes) -> bytes | None:
     return block[i + len(needle):end].strip()
 
 
+def scan_header_field_in(buf, needle: bytes, start: int, end: int) -> bytes | None:
+    """:func:`scan_header_field` over a region ``[start, end)`` of a larger
+    buffer (``bytes`` or ``bytearray``), without slicing the region out.
+
+    The zero-copy twin used by the arena parse paths (the pooled record
+    buffer and the member-decode slots): skipped records get their
+    type/length sniffed straight off the arena — only the (tiny) field
+    value is ever materialized. ``needle`` must include the colon.
+    """
+    i = buf.find(needle, start, end)
+    while i > start and buf[i - 1] != 0x0A:  # must start a line
+        i = buf.find(needle, i + 1, end)
+    if i < 0:
+        return None
+    vend = buf.find(b"\r\n", i, end)
+    if vend < 0:
+        vend = end
+    return bytes(buf[i + len(needle):vend]).strip()
+
+
 class WarcHeaderMap:
     """Ordered, case-insensitive multi-map over raw header bytes.
 

@@ -32,10 +32,12 @@ from .packing import SequencePacker, pad_batch
 from .tokenizer import encode_document
 
 
-def _tokenized_docs(path: str, *, min_length: int):
+def _tokenized_docs(path: str, *, min_length: int,
+                    readahead: bool | None = None):
     """Worker-side shard stage: parse → extract → tokenize (module-level
     so the process pool can pickle it under spawn)."""
-    for doc in iter_documents(path, min_length=min_length):
+    for doc in iter_documents(path, min_length=min_length,
+                              readahead=readahead):
         yield encode_document(doc.text)
 
 
@@ -43,7 +45,7 @@ class WarcTokenLoader:
     def __init__(self, shard_paths: list[str], *, batch: int, seq_len: int,
                  host_id: int = 0, n_hosts: int = 1, min_doc_len: int = 64,
                  prefetch: int = 4, loop: bool = True,
-                 workers: int = 0) -> None:
+                 workers: int = 0, readahead: bool | None = None) -> None:
         self.all_shards = list(shard_paths)
         self.my_shards = [p for i, p in enumerate(self.all_shards)
                           if i % n_hosts == host_id]
@@ -55,6 +57,10 @@ class WarcTokenLoader:
         self.loop = loop
         self.prefetch = prefetch
         self.workers = workers
+        # member-decode readahead inside each shard parse (None = auto);
+        # close() joins those decoder threads via the iter_documents
+        # teardown chain, same contract as the prefetch thread itself
+        self.readahead = readahead
         self._pool = None
         self._packer = SequencePacker(seq_len)
         self._rows: list[np.ndarray] = []   # packed, not yet emitted
@@ -97,7 +103,8 @@ class WarcTokenLoader:
             shard = self.my_shards[self._shard_idx % len(self.my_shards)]
             skip = self._docs_consumed
             for n_doc, doc in enumerate(
-                    iter_documents(shard, min_length=self.min_doc_len)):
+                    iter_documents(shard, min_length=self.min_doc_len,
+                                   readahead=self.readahead)):
                 if self._stop.is_set():  # close() must not wait a shard out
                     return
                 if n_doc < skip:
@@ -136,7 +143,8 @@ class WarcTokenLoader:
         from repro.core.parallel import ParallelWarcPool
 
         n = len(self.my_shards)
-        fn = functools.partial(_tokenized_docs, min_length=self.min_doc_len)
+        fn = functools.partial(_tokenized_docs, min_length=self.min_doc_len,
+                               readahead=self.readahead)
         pool = ParallelWarcPool(fn, workers=self.workers)
         self._pool = pool
         try:

@@ -350,7 +350,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
                  sig_ngram: int = SIG_NGRAM,
                  sig_hashes: int = SIG_HASHES,
                  fused: bool = False,
-                 batch_records: int = _FUSED_BATCH) -> CdxIndex:
+                 batch_records: int = _FUSED_BATCH,
+                 readahead: bool | None = None) -> CdxIndex:
     """One-pass sweep of one shard into a single-shard partial index.
 
     ``fused=True`` computes digest + signature through the batched
@@ -391,38 +392,47 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         pending.clear()  # releases the arena pins
         pending_bytes = 0
 
-    for record in FastWARCIterator(path, parse_http=True):
-        content = record.content_view()
-        offsets.append(record.stream_offset)
-        uncomp.append(record.content_length)
-        rtypes.append(int(record.record_type))
-        http = record.http_headers
-        status = (http.status_code if http is not None
-                  and http.status_code is not None else -1)
-        # hostile/malformed status lines ("HTTP/1.1 99999 ...") must not
-        # kill the shard sweep: anything outside the int16 column is as
-        # good as no status
-        statuses.append(status if 0 <= status <= 0x7FFF else -1)
-        if use_fused:
-            pending.append(np.frombuffer(content, np.uint8))
-            pending_bytes += record.content_length
-            if len(pending) >= batch_records or \
-                    pending_bytes >= _FUSED_BATCH_BYTES:
-                flush()
-        else:
-            digests.append(zlib.adler32(content) & 0xFFFFFFFF)
-            sigs.append(signature_of(content, bits=sig_bits, n=sig_ngram,
-                                     k=sig_hashes))
-        uri = record.header_bytes(b"WARC-Target-URI:") or b""
-        mime = (http.get_bytes(b"Content-Type", b"") if http is not None
-                else record.header_bytes(b"Content-Type:") or b"")
-        uri_parts.append(uri)
-        mime_parts.append(mime)
-        uri_off.append(uri_off[-1] + len(uri))
-        mime_off.append(mime_off[-1] + len(mime))
-        last_span = _record_span(record)
-    if use_fused and pending:
-        flush()
+    # readahead (default auto): member inflate runs on a decoder thread
+    # while this loop builds columns and flushes fused kernel batches —
+    # the index build overlaps decompression with signature/digest work.
+    # Pending borrowed views pin their member-arena slots exactly like
+    # RecordBuffer arenas, so the batched flush stays aliasing-safe.
+    it = FastWARCIterator(path, parse_http=True, readahead=readahead)
+    try:
+        for record in it:
+            content = record.content_view()
+            offsets.append(record.stream_offset)
+            uncomp.append(record.content_length)
+            rtypes.append(int(record.record_type))
+            http = record.http_headers
+            status = (http.status_code if http is not None
+                      and http.status_code is not None else -1)
+            # hostile/malformed status lines ("HTTP/1.1 99999 ...") must
+            # not kill the shard sweep: anything outside the int16 column
+            # is as good as no status
+            statuses.append(status if 0 <= status <= 0x7FFF else -1)
+            if use_fused:
+                pending.append(np.frombuffer(content, np.uint8))
+                pending_bytes += record.content_length
+                if len(pending) >= batch_records or \
+                        pending_bytes >= _FUSED_BATCH_BYTES:
+                    flush()
+            else:
+                digests.append(zlib.adler32(content) & 0xFFFFFFFF)
+                sigs.append(signature_of(content, bits=sig_bits,
+                                         n=sig_ngram, k=sig_hashes))
+            uri = record.header_bytes(b"WARC-Target-URI:") or b""
+            mime = (http.get_bytes(b"Content-Type", b"") if http is not None
+                    else record.header_bytes(b"Content-Type:") or b"")
+            uri_parts.append(uri)
+            mime_parts.append(mime)
+            uri_off.append(uri_off[-1] + len(uri))
+            mime_off.append(mime_off[-1] + len(mime))
+            last_span = _record_span(record)
+        if use_fused and pending:
+            flush()
+    finally:
+        it.close()  # a failed sweep must still join the decoder thread
     n = len(offsets)
     off = np.asarray(offsets, np.uint64)
     # comp_len = distance to the next record in the addressable stream;
@@ -490,7 +500,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
 def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
                 sig_ngram: int = SIG_NGRAM,
                 sig_hashes: int = SIG_HASHES,
-                fused: bool | None = None) -> CdxIndex:
+                fused: bool | None = None,
+                readahead: bool | None = None) -> CdxIndex:
     """Index a sharded corpus: one parser sweep per shard, merged.
 
     ``workers > 0`` fans the per-shard sweeps out through
@@ -511,6 +522,11 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
     header, validated on load, and every query against the index adapts
     to it — the module constants are only defaults. ``sig_bits`` must be
     a positive multiple of 64.
+
+    ``readahead`` (default auto) runs member decompression on a decoder
+    thread inside each sweep — serial builds overlap inflate with column
+    assembly and fused kernel flushes; worker builds overlap it with the
+    per-process sweep on top of the shard fan-out.
     """
     import functools
 
@@ -525,7 +541,7 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
         fused = workers == 0
     sweep = functools.partial(_index_shard, sig_bits=sig_bits,
                               sig_ngram=sig_ngram, sig_hashes=sig_hashes,
-                              fused=fused)
+                              fused=fused, readahead=readahead)
     partials = map_shards(sweep, [str(p) for p in paths], workers=workers)
     return CdxIndex.merge(partials)
 
