@@ -38,6 +38,14 @@ Three claims measured, not asserted:
   that gzip rec/s gains ≥1.3× from overlapping inflate with parsing.
   Arena-decoded output is verified byte-identical to the legacy path
   in-bench before any rate is reported.
+* **robustness** (ISSUE 6) — the tolerant-mode tax and the recovery
+  payoff. ``tolerant=True`` on a *clean* gzip archive must ride the
+  exact same hot path as strict mode (the resync machinery only runs
+  after a failure), so its overhead ratio is measured paired with
+  strict sweeps and expected ≤ 1.05. The same archive with ~1% of
+  members deterministically corrupted is then swept tolerantly:
+  reported records/s plus the ledger's accounting (entries, bytes
+  quarantined) against the known damage.
 
 Scale with REPRO_BENCH_PAGES (default 400).
 """
@@ -222,6 +230,44 @@ def _decode_rows() -> list[str]:
     return rows
 
 
+# -- robustness: tolerant-mode tax + recovery under damage ---------------
+
+def _robustness_rows() -> list[str]:
+    from repro.testing.faults import corrupt_warc
+
+    data = generate_warc(CorpusSpec(n_pages=_PAGES, seed=23), "gzip")
+    # paired sweeps (the decode race): the clean-archive tolerant tax is
+    # a few percent at most, far below this container's minute-to-minute
+    # drift — only the interleaved ratio is meaningful
+    rates = _decode_race(data, {"strict": {}, "tolerant": dict(tolerant=True)})
+    rows = [
+        f"ingest,robustness,strict_clean,records_per_s,"
+        f"{rates['strict']:.1f}",
+        f"ingest,robustness,tolerant_clean,records_per_s,"
+        f"{rates['tolerant']:.1f}",
+        f"ingest,robustness,tolerant_clean,overhead_ratio,"
+        f"{rates['strict'] / rates['tolerant']:.3f}",
+    ]
+    bad, damage = corrupt_warc(data, fraction=0.01, seed=23)
+    it = FastWARCIterator(bad, parse_http=True, tolerant=True)
+    t0 = time.perf_counter()
+    n = sum(1 for _ in it)
+    elapsed = time.perf_counter() - t0
+    entries = it.error_ledger.entries()
+    rows += [
+        f"ingest,robustness,tolerant_corrupted_1pct,records_per_s,"
+        f"{n / elapsed:.1f}",
+        f"ingest,robustness,tolerant_corrupted_1pct,records_recovered,{n}",
+        f"ingest,robustness,tolerant_corrupted_1pct,damaged_members,"
+        f"{len(damage)}",
+        f"ingest,robustness,tolerant_corrupted_1pct,ledger_entries,"
+        f"{len(entries)}",
+        f"ingest,robustness,tolerant_corrupted_1pct,bytes_quarantined,"
+        f"{sum(e.bytes_skipped for e in entries)}",
+    ]
+    return rows
+
+
 # -- transport mechanism bench -------------------------------------------
 
 def _bench_docs() -> list:
@@ -304,6 +350,9 @@ def run(quiet: bool = False) -> list[str]:
 
     # 2) member decode paths: legacy bytes vs decode-into-arena ± readahead
     rows.extend(_decode_rows())
+
+    # 2b) tolerant-mode tax on clean archives + recovery under damage
+    rows.extend(_robustness_rows())
 
     with tempfile.TemporaryDirectory() as d:
         shard_paths = []

@@ -35,6 +35,7 @@ queue path — the ingest benchmark measures one against the other.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import os
 import pickle
@@ -47,6 +48,8 @@ import traceback
 from typing import Any, Callable, Iterable, Iterator
 
 import multiprocessing as mp
+
+from . import reaper as _reaper
 
 try:
     from multiprocessing import shared_memory as _shm_mod
@@ -66,6 +69,7 @@ _DONE = 1        # payload: number of results produced for the task
 _ERROR = 2       # payload: (repr(exc), formatted traceback)
 _CHUNK_SHM = 3   # payload: (worker_id, slot, nbytes, count) ring descriptor
 _CHUNK_BLOB = 4  # payload: pickled chunk bytes (ring-overflow fallback)
+_QUAR = 5        # synthetic, parent-side only: shard quarantined as poison
 
 _DEFAULT_CHUNK_SIZE = 64
 _SHM_SLOT_BYTES = 4 << 20   # per-slot capacity; larger chunks fall back
@@ -115,7 +119,7 @@ class _ShmSlotWriter:
         self._next = 0
         self.worker_id = worker_id
 
-    def try_send(self, result_q, idx: int, frames, blob) -> bool:
+    def try_send(self, put, idx: int, frames, blob) -> bool:
         """Write one serialized chunk into the next free slot; False if it
         cannot fit (caller falls back to the queue path)."""
         if frames is not None:
@@ -139,8 +143,7 @@ class _ShmSlotWriter:
                 off += len(f)
         else:
             buf[off:off + nbytes] = blob
-        result_q.put((idx, _CHUNK_SHM,
-                      (self.worker_id, slot, nbytes, count)))
+        put((idx, _CHUNK_SHM, (self.worker_id, slot, nbytes, count)))
         return True
 
     def close(self) -> None:
@@ -150,9 +153,62 @@ class _ShmSlotWriter:
             pass
 
 
+def _maybe_worker_kill(counter: int, spec: str | None) -> None:
+    """Fault-injection hook: die hard before sending result ``N``.
+
+    Armed through ``REPRO_FAULT_WORKER_KILL="<latch-path>:<N>"``; the
+    latch file is claimed with ``O_CREAT|O_EXCL`` so exactly one worker
+    across the whole (fork or spawn) pool dies, exactly once — the
+    supervision tests depend on deterministic single-kill behavior.
+
+    ``spec`` is captured from the *parent's* environment at worker-spawn
+    time and passed down explicitly rather than read from the worker's
+    own ``os.environ``: under the forkserver start method every worker
+    forks from a daemon that snapshotted the environment when it first
+    started, so a worker's environment can be armed long after the test
+    that armed it disarmed and deleted its latch (replaying the kill
+    into an innocent pool) — or never armed at all.
+    """
+    if not spec:
+        return
+    latch, _, at = spec.rpartition(":")
+    if counter != int(at):
+        return
+    try:
+        fd = os.open(latch, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except OSError:  # another worker already took the kill
+        return
+    os.close(fd)
+    os._exit(42)
+
+
 def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
-                 shm_args=None, encode=None) -> None:
-    """Child-process main: stream worker_fn(item) results back in chunks."""
+                 shm_args=None, encode=None, wid: int = 0,
+                 hb=None, stop_ev=None, claims=None, hist=None,
+                 hist_len: int = 0, credit=None,
+                 fault_kill: str | None = None) -> None:
+    """Child-process main: stream worker_fn(item) results back in chunks.
+
+    With ``stop_ev`` set (supervised pools) the loop polls the task
+    queue instead of blocking on a sentinel, stamps a heartbeat (``hb``,
+    a shared double) whenever it makes progress, records each claimed
+    task in ``claims[wid]`` (a shared array — written *synchronously*,
+    because a queue message can die unflushed with the process and the
+    parent must still know which shard to re-drive), and honors per-task
+    resume cursors: a ``(idx, item, skip)`` task re-drives the shard but
+    suppresses the first ``skip`` results — exactly the slice the parent
+    already holds.
+
+    ``credit`` (supervised pools) is this worker's result-credit
+    semaphore: acquired before every queue put, released by the parent
+    per message received. The result queue itself must stay unbounded in
+    that mode — ``mp.Queue.put`` on a bounded queue takes a permit from
+    a pool-wide semaphore that dies with the process when the message is
+    still in the feeder buffer, and enough leaked permits wedge the
+    queue "full" forever for every respawned worker. Per-worker credits
+    give the same backpressure but let the supervisor drain-and-refill a
+    dead worker's semaphore back to exactly its cap.
+    """
     writer = None
     if shm_args is not None and _shm_mod is not None:
         try:
@@ -160,9 +216,26 @@ def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
         except Exception:  # segment vanished: stay on the queue path
             writer = None
 
+    def beat() -> None:
+        if hb is not None:
+            hb.value = time.monotonic()
+
+    sent_total = 0
+    nclaims = 0
+
+    def put(msg) -> None:
+        if credit is not None:
+            while not credit.acquire(timeout=0.2):
+                beat()  # backpressure stall, not a hang
+                if stop_ev is not None and stop_ev.is_set():
+                    return  # parent is tearing down; message is moot
+            result_q.put(msg + (wid,))
+            return
+        result_q.put(msg)
+
     def send(idx: int, buf: list) -> None:
         if writer is None:
-            result_q.put((idx, _CHUNK, buf))
+            put((idx, _CHUNK, buf))
             return
         # serialize exactly once; an over-slot chunk reuses the blob via
         # the queue (no re-pickling), frames fall back to a plain chunk
@@ -171,35 +244,61 @@ def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
             frames = [encode(item) for item in buf]
         else:
             blob = pickle.dumps(buf, protocol=pickle.HIGHEST_PROTOCOL)
-        if writer.try_send(result_q, idx, frames, blob):
+        if writer.try_send(put, idx, frames, blob):
             return
         if blob is not None:
-            result_q.put((idx, _CHUNK_BLOB, blob))
+            put((idx, _CHUNK_BLOB, blob))
         else:
-            result_q.put((idx, _CHUNK, buf))
+            put((idx, _CHUNK, buf))
 
     try:
         while True:
-            task = task_q.get()
-            if task is None:
-                return
-            idx, item = task
+            if stop_ev is not None:
+                try:
+                    task = task_q.get(timeout=0.25)
+                except _queue_mod.Empty:
+                    beat()
+                    if stop_ev.is_set():
+                        return
+                    continue
+                if task is None:  # stray sentinel: stop_ev is authoritative
+                    continue
+            else:
+                task = task_q.get()
+                if task is None:
+                    return
+            idx, item, *rest = task
+            skip = rest[0] if rest else 0
+            if claims is not None:
+                # history first, then the live claim: a death between the
+                # two writes still leaves the shard re-drivable
+                hist[wid * hist_len + (nclaims % hist_len)] = idx
+                nclaims += 1
+                claims[wid] = idx
+            beat()
             try:
                 buf: list = []
                 produced = 0
+                seen = 0
                 for out in worker_fn(item):
+                    seen += 1
+                    if seen <= skip:
+                        continue
+                    sent_total += 1
+                    _maybe_worker_kill(sent_total, fault_kill)
                     buf.append(out)
                     if len(buf) >= chunk_size:
                         send(idx, buf)
                         produced += len(buf)
                         buf = []
+                        beat()
                 if buf:
                     send(idx, buf)
                     produced += len(buf)
-                result_q.put((idx, _DONE, produced))
+                put((idx, _DONE, skip + produced))
+                beat()
             except Exception as exc:  # surfaced as ParallelWorkerError
-                result_q.put((idx, _ERROR,
-                              (repr(exc), traceback.format_exc())))
+                put((idx, _ERROR, (repr(exc), traceback.format_exc())))
     finally:
         if writer is not None:
             writer.close()
@@ -240,7 +339,10 @@ class ParallelWarcPool:
     queue_chunks:
         result-queue bound in messages (default ``4 × workers``) — the
         backpressure knob: workers stall rather than buffering a whole
-        crawl in the parent.
+        crawl in the parent. Supervised pools enforce the same bound
+        per worker through credit semaphores instead of the queue's own
+        maxsize (a bounded ``mp.Queue`` leaks its put-permits when a
+        worker dies with messages unflushed, eventually wedging "full").
     mp_context:
         multiprocessing start method ("fork"/"spawn"/"forkserver");
         default from ``REPRO_MP_CONTEXT``, else fork-when-available —
@@ -259,6 +361,22 @@ class ParallelWarcPool:
         straight from the shared-memory view — no pickling at all.
         Without one, shm slots carry a single pickle blob (still
         skipping the pipe).
+    supervise:
+        enable the fault-tolerance supervisor: workers poll for tasks
+        under a shared stop event (no sentinels) and stamp heartbeats;
+        the parent detects dead children (exitcode) and — with
+        ``hang_timeout_s`` — hung ones (stale heartbeat while holding a
+        task), reaps/reset their ring semaphore, respawns with capped
+        exponential backoff, and **re-drives only the unfinished slice**
+        of the interrupted shard (the worker skips exactly the results
+        the parent already decoded). A shard that kills
+        ``poison_kills`` workers is quarantined: the event stream emits
+        ``("quarantined", idx, reason)`` instead of hanging or raising.
+        Worker *exceptions* still raise :class:`ParallelWorkerError` —
+        supervision retries process deaths, not bugs.
+    max_respawns:
+        total respawn budget for non-quarantine deaths; exceeding it
+        raises (a crash-looping environment must not retry forever).
     """
 
     def __init__(self, worker_fn: Callable[[Any], Iterable],
@@ -269,12 +387,29 @@ class ParallelWarcPool:
                  transport: str | None = None,
                  frame_codec: tuple[Callable, Callable] | None = None,
                  slot_bytes: int = _SHM_SLOT_BYTES,
-                 slots_per_worker: int = _SHM_SLOTS) -> None:
+                 slots_per_worker: int = _SHM_SLOTS,
+                 supervise: bool = False,
+                 max_respawns: int = 3,
+                 hang_timeout_s: float | None = None,
+                 poison_kills: int = 2) -> None:
         self.workers = max(1, workers if workers else (os.cpu_count() or 1))
         self._ctx = mp.get_context(mp_context or _default_context())
         self._tasks = self._ctx.Queue(maxsize=2 * self.workers)
+        self._queue_chunks = queue_chunks if queue_chunks else 4 * self.workers
+        # Supervised pools must NOT bound the result queue itself: a
+        # bounded mp.Queue takes its backpressure permit inside put(),
+        # but the message sits in the dying process's feeder-thread
+        # buffer — kill the worker and the permit leaks forever. After a
+        # few deaths the queue reads as permanently full and every
+        # respawned worker blocks in put() while the parent sees an
+        # empty pipe (deadlock). Backpressure moves to per-worker credit
+        # semaphores the supervisor can drain-and-refill exactly,
+        # mirroring the shm slot rings.
+        self._credits = ([self._ctx.Semaphore(self._queue_chunks)
+                          for _ in range(self.workers)]
+                         if supervise else None)
         self._results = self._ctx.Queue(
-            maxsize=queue_chunks if queue_chunks else 4 * self.workers)
+            maxsize=0 if supervise else self._queue_chunks)
         self._stop = threading.Event()
         self._feed_done = threading.Event()
         self._total: int | None = None
@@ -282,6 +417,28 @@ class ParallelWarcPool:
         self._feeder: threading.Thread | None = None
         self._progress = 0          # consumer's cur (ordered mode)
         self._window: int | None = None  # max shards fed ahead of progress
+        self.supervise = bool(supervise)
+        self.max_respawns = max_respawns
+        self.hang_timeout_s = hang_timeout_s
+        self.poison_kills = poison_kills
+        self._stop_ev = self._ctx.Event() if supervise else None
+        self._claims = (self._ctx.Array("q", [-1] * self.workers, lock=False)
+                        if supervise else None)
+        # per-worker claim-history ring: a worker's queue messages die
+        # unflushed with its feeder thread, so the parent must be able to
+        # re-drive every shard whose results might still have been
+        # buffered — the credit semaphore admits at most `queue_chunks`
+        # unflushed messages per worker and every finished task emits at
+        # least one (_DONE), so `queue_chunks + 2` claim slots cannot
+        # wrap past a task that still owes the parent data
+        self._hist_len = self._queue_chunks + 2
+        self._hist = (self._ctx.Array(
+            "q", [-1] * (self.workers * self._hist_len), lock=False)
+            if supervise else None)
+        self._respawns = 0
+        self._task_items: dict[int, Any] = {}   # supervise: idx -> item
+        self._synthetic: collections.deque = collections.deque()
+        self.supervisor_stats = {"respawns": 0, "quarantined": 0, "hangs": 0}
         requested = transport
         if transport is None:
             transport = "shm" if _shm_mod is not None else "pickle"
@@ -304,14 +461,15 @@ class ParallelWarcPool:
             # crash ingestion; an explicit transport="shm" still raises
             try:
                 for _ in range(self.workers):
-                    self._segments.append(_shm_mod.SharedMemory(
-                        create=True, size=slot_bytes * slots_per_worker))
+                    self._segments.append(
+                        _reaper.create_segment(slot_bytes * slots_per_worker))
                     self._sems.append(self._ctx.Semaphore(slots_per_worker))
             except OSError:
                 for seg in self._segments:
                     try:
                         seg.close()
                         seg.unlink()
+                        _reaper.unregister(seg)
                     except OSError:  # pragma: no cover - teardown race
                         pass
                 self._segments = []
@@ -320,18 +478,35 @@ class ParallelWarcPool:
                     raise
                 transport = "pickle"
         self.transport = transport
+        self._slots_per_worker = slots_per_worker
+        self._worker_fn = worker_fn
+        self._chunk_size = chunk_size
+        self._encode = frame_codec[0] if frame_codec else None
+        self._hb = ([self._ctx.Value("d", 0.0, lock=False)
+                     for _ in range(self.workers)] if supervise else [])
         for wid in range(self.workers):
-            shm_args = None
-            if transport == "shm":
-                shm_args = (self._segments[wid].name, slot_bytes,
-                            slots_per_worker, self._sems[wid], wid)
-            self._procs.append(self._ctx.Process(
-                target=_worker_loop,
-                args=(self._tasks, self._results, worker_fn, chunk_size,
-                      shm_args, frame_codec[0] if frame_codec else None),
-                daemon=True))
-        for p in self._procs:
-            p.start()
+            self._procs.append(self._make_worker(wid))
+
+    def _make_worker(self, wid: int):
+        """Spawn (or respawn) worker ``wid``; reuses its ring segment."""
+        shm_args = None
+        if self.transport == "shm":
+            shm_args = (self._segments[wid].name, self._slot_bytes,
+                        self._slots_per_worker, self._sems[wid], wid)
+        hb = None
+        if self.supervise:
+            hb = self._hb[wid]
+            hb.value = time.monotonic()
+        p = self._ctx.Process(
+            target=_worker_loop,
+            args=(self._tasks, self._results, self._worker_fn,
+                  self._chunk_size, shm_args, self._encode, wid, hb,
+                  self._stop_ev, self._claims, self._hist, self._hist_len,
+                  self._credits[wid] if self._credits else None,
+                  os.environ.get("REPRO_FAULT_WORKER_KILL")),
+            daemon=True)
+        p.start()
+        return p
 
     # -- shm decode ------------------------------------------------------
     def _decode_slot(self, desc: tuple) -> list:
@@ -374,6 +549,10 @@ class ParallelWarcPool:
                        and idx - self._progress > self._window
                        and not self._stop.is_set()):
                     time.sleep(0.01)
+                if self.supervise:
+                    # the supervisor re-drives interrupted shards: it
+                    # needs the item long after the feeder moved on
+                    self._task_items[idx] = item
                 while not self._stop.is_set():
                     try:
                         self._tasks.put((idx, item), timeout=0.1)
@@ -388,14 +567,121 @@ class ParallelWarcPool:
         finally:
             self._total = count
             self._feed_done.set()
-            # release the workers; bounded put so close() can always win
-            sentinels = self.workers
+            # release the workers; bounded put so close() can always win.
+            # Supervised workers stop via the shared event instead — a
+            # sentinel could race ahead of a requeued shard and kill the
+            # worker meant to re-drive it.
+            sentinels = 0 if self.supervise else self.workers
             while sentinels and not self._stop.is_set():
                 try:
                     self._tasks.put(None, timeout=0.1)
                     sentinels -= 1
                 except _queue_mod.Full:
                     continue
+
+    # -- supervision -----------------------------------------------------
+    def _supervise_tick(self, received: dict, kills: dict, terminal: set,
+                        backoff: float) -> float:
+        """Detect dead/hung workers; reap, respawn, re-drive, quarantine.
+
+        Runs only from the event loop's idle branch *and* only when the
+        result queue is empty: every descriptor a dead worker managed to
+        deliver has been decoded (and its ring slot released) before we
+        compute the resume cursor, so ``received[idx]`` is exact. The
+        in-flight shard comes from the shared claims array, not a queue
+        message — a worker that dies the instant it claims still leaves
+        the claim behind.
+        """
+        now = time.monotonic()
+        for wid, p in enumerate(self._procs):
+            claim = self._claims[wid]
+            holds_task = claim >= 0 and claim not in terminal
+            if (p.exitcode is None and self.hang_timeout_s is not None
+                    and holds_task
+                    and now - self._hb[wid].value > self.hang_timeout_s):
+                # holds a task but hasn't made progress: stuck inside
+                # worker_fn (idle workers heartbeat every poll timeout)
+                self.supervisor_stats["hangs"] += 1
+                p.terminate()
+                p.join(timeout=1.0)
+                if p.exitcode is None:  # pragma: no cover - SIGTERM masked
+                    p.kill()
+                    p.join(timeout=1.0)
+            if p.exitcode is None:
+                continue
+            # any exit while the stream runs is abnormal: supervised
+            # workers only return after close() sets the stop event
+            idx = claim if holds_task else None
+            # a death can also take *already-completed* shards with it:
+            # results (even the _DONE) sit in the dead worker's queue
+            # feeder buffer until flushed. The claim-history ring lists
+            # every shard whose messages may have died there; any entry
+            # that never reached terminal must be re-driven — blameless
+            # (no kill attribution: the current claim did the killing).
+            base = wid * self._hist_len
+            lost: list[int] = []
+            for j in range(self._hist_len):
+                h = self._hist[base + j]
+                if (h >= 0 and h not in terminal and h != idx
+                        and h not in lost):
+                    lost.append(h)
+                self._hist[base + j] = -1
+            quarantine = False
+            if idx is not None:
+                kills[idx] = kills.get(idx, 0) + 1
+                quarantine = kills[idx] >= self.poison_kills
+            if not quarantine:
+                if self._respawns >= self.max_respawns:
+                    raise ParallelWorkerError(
+                        -1 if idx is None else idx,
+                        f"worker {wid} died (exit {p.exitcode}) with "
+                        f"respawn budget ({self.max_respawns}) exhausted",
+                        "")
+                self._respawns += 1
+            self.supervisor_stats["respawns"] += 1
+            time.sleep(backoff)
+            backoff = min(backoff * 2.0, 1.0)
+            if self.transport == "shm":
+                # a kill between sem.acquire and the descriptor put
+                # leaks a permit; the queue-empty guard above means
+                # every delivered slot was decoded and released, so
+                # draining and refilling restores exactly `slots`
+                sem = self._sems[wid]
+                while sem.acquire(False):
+                    pass
+                for _ in range(self._slots_per_worker):
+                    sem.release()
+            # same repair for the result credits: a credit held for a
+            # message that died in the feeder buffer never comes back by
+            # itself. The worker is fully dead (exitcode reaped) and the
+            # queue is empty, so every message it flushed was already
+            # credited back — the refill is exact, not approximate.
+            credit = self._credits[wid]
+            while credit.acquire(False):
+                pass
+            for _ in range(self._queue_chunks):
+                credit.release()
+            self._claims[wid] = -1  # the requeue below owns the shard now
+            self._procs[wid] = self._make_worker(wid)
+            if quarantine:
+                self.supervisor_stats["quarantined"] += 1
+                self._synthetic.append((idx, _QUAR,
+                                        f"shard killed {kills[idx]} "
+                                        f"worker(s); quarantined"))
+            elif idx is not None:
+                lost.append(idx)
+            for i in lost:
+                self._requeue(i, received.get(i, 0))
+        return backoff
+
+    def _requeue(self, idx: int, skip: int) -> None:
+        while not self._stop.is_set():
+            try:
+                self._tasks.put((idx, self._task_items.get(idx), skip),
+                                timeout=0.1)
+                return
+            except _queue_mod.Full:
+                continue
 
     # -- event stream ----------------------------------------------------
     def iter_events(self, items: Iterable, *,
@@ -424,6 +710,10 @@ class ParallelWarcPool:
         done_seen = 0
         cur = 0                       # next idx to emit (ordered mode)
         pending: dict[int, list] = {}  # idx -> buffered events (ordered mode)
+        received: dict[int, int] = {}  # idx -> results decoded (supervise)
+        kills: dict[int, int] = {}     # idx -> workers it killed (supervise)
+        terminal: set[int] = set()     # idx done/quarantined (supervise)
+        backoff = 0.05
 
         def finished() -> bool:
             if not self._feed_done.is_set() or self._total is None:
@@ -435,25 +725,46 @@ class ParallelWarcPool:
                 raise ParallelWorkerError(
                     -1, f"task iterable raised: {self._feed_error!r}",
                     "") from self._feed_error
-            try:
-                idx, kind, payload = self._results.get(timeout=0.1)
-            except _queue_mod.Empty:
-                # a worker killed from outside (OOM, segfault) never sends
-                # its _DONE: waiting on it would hang forever and balloon
-                # the ordered `pending` buffer
-                crashed = [p for p in self._procs
-                           if p.exitcode not in (None, 0)]
-                if crashed and self._results.empty():
-                    raise ParallelWorkerError(
-                        -1, "worker process(es) died with exit code(s) "
-                        f"{[p.exitcode for p in crashed]}", "")
-                if (not any(p.is_alive() for p in self._procs)
-                        and self._results.empty() and not finished()):
-                    raise ParallelWorkerError(
-                        -1, "worker processes exited prematurely", "")
-                continue
+            if self._synthetic:
+                idx, kind, payload = self._synthetic.popleft()
+            else:
+                try:
+                    msg = self._results.get(timeout=0.1)
+                    if self._credits is not None:
+                        # supervised messages are wid-tagged: hand the
+                        # sender its result credit back
+                        idx, kind, payload, src = msg
+                        self._credits[src].release()
+                    else:
+                        idx, kind, payload = msg
+                except _queue_mod.Empty:
+                    if self.supervise:
+                        if self._results.empty():
+                            backoff = self._supervise_tick(
+                                received, kills, terminal, backoff)
+                        continue
+                    # a worker killed from outside (OOM, segfault) never
+                    # sends its _DONE: waiting on it would hang forever and
+                    # balloon the ordered `pending` buffer
+                    crashed = [p for p in self._procs
+                               if p.exitcode not in (None, 0)]
+                    if crashed and self._results.empty():
+                        raise ParallelWorkerError(
+                            -1, "worker process(es) died with exit code(s) "
+                            f"{[p.exitcode for p in crashed]}", "")
+                    if (not any(p.is_alive() for p in self._procs)
+                            and self._results.empty() and not finished()):
+                        raise ParallelWorkerError(
+                            -1, "worker processes exited prematurely", "")
+                    continue
             if kind == _ERROR:
                 raise ParallelWorkerError(idx, payload[0], payload[1])
+            if self.supervise and idx in terminal:
+                # stale duplicate from a requeue race: the shard already
+                # completed; drop the message (still release ring slots)
+                if kind == _CHUNK_SHM:
+                    self._decode_slot(payload)
+                continue
             if kind == _CHUNK_SHM:
                 # decode at dequeue time (FIFO per worker): the slot is
                 # released immediately, so ordered-mode buffering holds
@@ -469,11 +780,20 @@ class ParallelWarcPool:
             elif kind == _CHUNK:
                 self.transport_stats["queue_chunks"] += 1
                 self.transport_stats["results"] += len(payload)
-            if kind == _DONE:
+            if self.supervise and kind == _CHUNK:
+                received[idx] = received.get(idx, 0) + len(payload)
+            if kind in (_DONE, _QUAR):
                 done_seen += 1
+                if self.supervise:
+                    terminal.add(idx)
+                    self._task_items.pop(idx, None)
             if not ordered:
-                yield ("chunk", idx, payload) if kind == _CHUNK \
-                    else ("done", idx, payload)
+                if kind == _CHUNK:
+                    yield ("chunk", idx, payload)
+                elif kind == _DONE:
+                    yield ("done", idx, payload)
+                else:
+                    yield ("quarantined", idx, payload)
                 continue
             if idx != cur:
                 pending.setdefault(idx, []).append((kind, payload))
@@ -481,7 +801,7 @@ class ParallelWarcPool:
             if kind == _CHUNK:
                 yield ("chunk", idx, payload)
                 continue
-            yield ("done", idx, payload)
+            yield (("done" if kind == _DONE else "quarantined"), idx, payload)
             cur += 1
             self._progress = cur
             # flush buffered successors (a worker's messages are FIFO, so
@@ -495,7 +815,8 @@ class ParallelWarcPool:
                     if kind2 == _CHUNK:
                         yield ("chunk", cur, payload2)
                     else:
-                        yield ("done", cur, payload2)
+                        yield (("done" if kind2 == _DONE
+                                else "quarantined"), cur, payload2)
                         advanced = True
                 if not advanced:
                     break
@@ -522,6 +843,11 @@ class ParallelWarcPool:
             return
         self._closed = True
         self._stop.set()
+        if self._stop_ev is not None:
+            try:
+                self._stop_ev.set()
+            except (OSError, ValueError):  # pragma: no cover - teardown race
+                pass
         if self._feeder is not None:
             self._feeder.join(timeout=2.0)
         for sem in self._sems:   # unblock writers stuck on a full ring
@@ -547,6 +873,7 @@ class ParallelWarcPool:
                 seg.unlink()
             except (OSError, FileNotFoundError):  # pragma: no cover
                 pass
+            _reaper.unregister(seg)
         self._segments = []
         self._sems = []
 
@@ -569,12 +896,13 @@ class ParallelWarcPool:
 
 def _extract_documents(path: str, *, min_length: int = 64,
                        status_ok_only: bool = True,
-                       readahead: bool | None = None):
+                       readahead: bool | None = None,
+                       tolerant: bool = False):
     from repro.core.pipeline import iter_documents
 
     yield from iter_documents(path, min_length=min_length,
                               status_ok_only=status_ok_only,
-                              readahead=readahead)
+                              readahead=readahead, tolerant=tolerant)
 
 
 def _call_one(fn: Callable, item):
@@ -616,7 +944,9 @@ def iter_documents_parallel(paths: Iterable[str], *,
                             chunk_size: int = _DEFAULT_CHUNK_SIZE,
                             mp_context: str | None = None,
                             transport: str | None = None,
-                            readahead: bool | None = None) -> Iterator:
+                            readahead: bool | None = None,
+                            tolerant: bool = False,
+                            supervise: bool = False) -> Iterator:
     """Parallel ``iter_documents`` over many WARC shards.
 
     Parse, HTTP decode, and HTML→text extraction all run in ``workers``
@@ -638,15 +968,16 @@ def iter_documents_parallel(paths: Iterable[str], *,
         for p in paths:
             yield from iter_documents(p, min_length=min_length,
                                       status_ok_only=status_ok_only,
-                                      readahead=readahead)
+                                      readahead=readahead,
+                                      tolerant=tolerant)
         return
     fn = functools.partial(_extract_documents, min_length=min_length,
                            status_ok_only=status_ok_only,
-                           readahead=readahead)
+                           readahead=readahead, tolerant=tolerant)
     with ParallelWarcPool(fn, workers=workers, chunk_size=chunk_size,
                           mp_context=mp_context, transport=transport,
-                          frame_codec=(_encode_document, _decode_document)
-                          ) as pool:
+                          frame_codec=(_encode_document, _decode_document),
+                          supervise=supervise) as pool:
         yield from pool.iter_results(paths, ordered=ordered)
 
 
@@ -688,11 +1019,13 @@ def _decode_record(view: memoryview):
 
 
 def _extract_records(path: str, *, types_value: int, parse_http: bool,
-                     readahead: bool | None = None):
+                     readahead: bool | None = None,
+                     tolerant: bool = False):
     from repro.core.warc import FastWARCIterator, WarcRecordType
 
     it = FastWARCIterator(path, record_types=WarcRecordType(types_value),
-                          parse_http=parse_http, readahead=readahead)
+                          parse_http=parse_http, readahead=readahead,
+                          tolerant=tolerant)
     try:
         for rec in it:
             # detach: frames are encoded (and queue-fallback chunks
@@ -712,7 +1045,11 @@ def iter_records_parallel(paths: Iterable[str], *,
                           chunk_size: int = _DEFAULT_CHUNK_SIZE,
                           mp_context: str | None = None,
                           transport: str | None = None,
-                          readahead: bool | None = None) -> Iterator:
+                          readahead: bool | None = None,
+                          tolerant: bool = False,
+                          supervise: bool = False,
+                          max_respawns: int = 3,
+                          hang_timeout_s: float | None = None) -> Iterator:
     """Parallel bulk record export: full WARC records out of many shards.
 
     The payload-heavy sibling of :func:`iter_documents_parallel` (whole
@@ -720,6 +1057,13 @@ def iter_records_parallel(paths: Iterable[str], *,
     the workload the shared-memory transport exists for: each record
     travels as one length-prefixed frame in a ring slot instead of
     being pickled into a pipe. Records arrive detached (owning copies).
+
+    ``tolerant=True`` makes each worker's parser recover from damaged
+    records (only intact survivors are streamed back; per-range ledger
+    detail stays in the worker — use :func:`repro.index.cdx.build_index`
+    when the damage report itself is needed). ``supervise=True`` retries
+    worker deaths mid-shard, resuming exactly after the records already
+    delivered (see :class:`ParallelWarcPool`).
     """
     from repro.core.warc import WarcRecordType
 
@@ -730,28 +1074,45 @@ def iter_records_parallel(paths: Iterable[str], *,
         for p in paths:
             yield from _extract_records(p, types_value=int(record_types),
                                         parse_http=parse_http,
-                                        readahead=readahead)
+                                        readahead=readahead,
+                                        tolerant=tolerant)
         return
     fn = functools.partial(_extract_records, types_value=int(record_types),
-                           parse_http=parse_http, readahead=readahead)
+                           parse_http=parse_http, readahead=readahead,
+                           tolerant=tolerant)
     with ParallelWarcPool(fn, workers=workers, chunk_size=chunk_size,
                           mp_context=mp_context, transport=transport,
-                          frame_codec=(_encode_record, _decode_record)
-                          ) as pool:
+                          frame_codec=(_encode_record, _decode_record),
+                          supervise=supervise, max_respawns=max_respawns,
+                          hang_timeout_s=hang_timeout_s) as pool:
         yield from pool.iter_results(paths, ordered=ordered)
 
 
 def map_shards(fn: Callable, items: Iterable, *,
                workers: int | None = None,
-               mp_context: str | None = None) -> list:
+               mp_context: str | None = None,
+               supervise: bool = False,
+               max_respawns: int = 3,
+               hang_timeout_s: float | None = None,
+               poison_kills: int = 2) -> list:
     """Apply ``fn`` (module-level, one picklable result) per shard.
 
     Returns results in ``items`` order — the map half of map-reduce
-    analytics over shard collections.
+    analytics over shard collections. With ``supervise=True`` worker
+    deaths are retried (see :class:`ParallelWarcPool`); a shard
+    quarantined as poison yields ``None`` in its slot instead of
+    aborting the whole map.
     """
     items = [it for it in items]
     if workers is not None and workers <= 0 or len(items) <= 1:
         return [fn(it) for it in items]
+    out: list = [None] * len(items)
     with ParallelWarcPool(functools.partial(_call_one, fn), workers=workers,
-                          chunk_size=1, mp_context=mp_context) as pool:
-        return list(pool.iter_results(items, ordered=True))
+                          chunk_size=1, mp_context=mp_context,
+                          supervise=supervise, max_respawns=max_respawns,
+                          hang_timeout_s=hang_timeout_s,
+                          poison_kills=poison_kills) as pool:
+        for event in pool.iter_events(items, ordered=True):
+            if event[0] == "chunk":
+                out[event[1]] = event[2][0]
+    return out

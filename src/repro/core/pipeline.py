@@ -50,17 +50,21 @@ class Document:
 
 def iter_documents(source, *, min_length: int = 64,
                    status_ok_only: bool = True,
-                   readahead: bool | None = None) -> Iterator[Document]:
+                   readahead: bool | None = None,
+                   tolerant: bool = False) -> Iterator[Document]:
     """Yield text documents from one WARC file (path, bytes, or fileobj).
 
     ``readahead`` is forwarded to :class:`FastWARCIterator` (default
     auto: gzip members inflate on a decoder thread ahead of extraction).
     The iterator is closed on generator teardown, so an abandoned
     consumer (e.g. the token loader stopping mid-shard) deterministically
-    joins the decoder thread and releases the shard's fd.
+    joins the decoder thread and releases the shard's fd. ``tolerant``
+    recovers from damaged records instead of aborting the shard (the
+    skipped ranges land in the iterator's error ledger).
     """
     it = FastWARCIterator(source, record_types=WarcRecordType.response,
-                          parse_http=True, readahead=readahead)
+                          parse_http=True, readahead=readahead,
+                          tolerant=tolerant)
     try:
         for record in it:
             http = record.http_headers

@@ -13,6 +13,7 @@ from .record import (
     WarcRecord,
     WarcRecordType,
 )
+from .errors import ErrorLedger, LedgerEntry, RecordReadError
 from .fastwarc import FastWARCIterator, parse_header_block, read_record_at
 from .warcio_ref import BaselineRecord, WARCIOArchiveIterator
 from .writer import WarcWriter, recompress, serialize_record
@@ -21,8 +22,11 @@ from . import lz4, streams, xxh32
 
 __all__ = [
     "BaselineRecord",
+    "ErrorLedger",
     "FastWARCIterator",
     "HttpHeaderMap",
+    "LedgerEntry",
+    "RecordReadError",
     "WARCIOArchiveIterator",
     "WarcHeaderMap",
     "WarcRecord",

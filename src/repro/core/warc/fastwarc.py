@@ -22,9 +22,11 @@ IntFlag math, pre-bound locals) for measured wins — see EXPERIMENTS.md
 from __future__ import annotations
 
 import io
+import os
 from typing import BinaryIO, Callable, Iterator
 
 from .checksum import verify_digest
+from .errors import ErrorLedger, RecordReadError
 from .http import parse_http_fast
 from .record import (
     CRLF,
@@ -37,6 +39,7 @@ from .record import (
     WarcHeaderMap,
     WarcRecord,
     WarcRecordType,
+    parse_content_length,
 )
 from .record import scan_header_field_in as _scan_field_in
 from .streams import (
@@ -50,6 +53,7 @@ from .streams import (
     RecordBuffer,
     ZstdStream,
     detect_compression,
+    next_member_tolerant,
 )
 
 _READ_BLOCK = 1 << 20
@@ -85,6 +89,49 @@ def parse_header_block(block: bytes | memoryview) -> WarcHeaderMap:
         pairs.append((line[:colon],
                       value[1:] if value[:1] == b" " else value.strip()))
     return headers
+
+
+class _TolerantReadGuard:
+    """Wrap a decompressing reader so a mid-stream decode error becomes
+    EOF plus an ``ErrorLedger`` entry instead of an exception.
+
+    Used for tolerant zstd parsing: unlike gzip/LZ4 there are no member
+    boundaries to resync on, so a damaged stream loses its tail — the
+    ledger records where (decompressed-domain offset; the skipped length
+    is unknowable without a decodable stream, recorded as 0).
+    """
+
+    def __init__(self, raw, report) -> None:
+        self._raw = raw
+        self._report = report
+        self._produced = 0
+        self._dead = False
+
+    def _fail(self, exc: BaseException) -> None:
+        self._dead = True
+        self._report(self._produced, "bad_zstd_stream", 0, repr(exc))
+
+    def read(self, n: int = -1) -> bytes:
+        if self._dead:
+            return b""
+        try:
+            data = self._raw.read(n)
+        except Exception as exc:  # noqa: BLE001 - tolerant by contract
+            self._fail(exc)
+            return b""
+        self._produced += len(data)
+        return data
+
+    def readinto(self, buf) -> int:
+        if self._dead:
+            return 0
+        try:
+            n = self._raw.readinto(buf)
+        except Exception as exc:  # noqa: BLE001 - tolerant by contract
+            self._fail(exc)
+            return 0
+        self._produced += n
+        return n
 
 
 class FastWARCIterator:
@@ -134,6 +181,20 @@ class FastWARCIterator:
         slot-batches the decoder may run ahead of the parser (ring
         bound; default 3 — double buffering plus one slot of slack
         against scheduler jitter on busy hosts).
+    tolerant:
+        recover from malformed input instead of raising: bad
+        ``Content-Length``, garbage headers, truncated payloads and
+        corrupt gzip/LZ4 members trigger a *resync scan* to the next
+        record/member magic; each damaged byte range is quarantined
+        into ``self.error_ledger`` (offset, shard, error class, bytes
+        skipped) and parsing continues. Good records keep full
+        zero-copy semantics (requires ``zero_copy=True``; the legacy
+        loops stay strict baselines). Strict mode behavior is
+        bit-for-bit unchanged.
+    error_ledger:
+        optional shared :class:`~repro.core.warc.errors.ErrorLedger` to
+        append into (the tolerant index build aggregates one ledger
+        across shards); default: a fresh per-iterator ledger.
 
     Every Python-level byte copy either path makes is tallied in
     ``self.copy_stats`` (:class:`~repro.core.warc.streams.CopyStats`);
@@ -154,7 +215,18 @@ class FastWARCIterator:
         arena_bytes: int | None = None,
         readahead: bool | None = None,
         readahead_depth: int = 3,
+        tolerant: bool = False,
+        error_ledger: ErrorLedger | None = None,
     ) -> None:
+        if tolerant and not zero_copy:
+            # the legacy loops are kept as the *measured baseline* —
+            # teaching them resync would change what they measure
+            raise ValueError("tolerant=True requires zero_copy=True")
+        self.tolerant = tolerant
+        self.error_ledger = error_ledger if error_ledger is not None \
+            else ErrorLedger()
+        self._shard = source if isinstance(source, str) else None
+        self._slot_damaged = False  # set by _record_from_slot on bad members
         self._owned_file: BinaryIO | None = None
         # path / bytes sources can be re-opened by a readahead decoder
         # *process* (fork ships bytes for free); file objects cannot
@@ -198,6 +270,10 @@ class FastWARCIterator:
             # bulk C decode + in-buffer splitting (see ZstdStream docstring);
             # the arena path readintos straight out of the decompressor
             self._raw = ZstdStream(source)
+            if tolerant:
+                # zstd has no member boundaries to resync on: a damaged
+                # stream truncates at the error point, ledgered as a tail
+                self._raw = _TolerantReadGuard(self._raw, self._ledger)
 
     # ------------------------------------------------------------------
     def __iter__(self) -> Iterator[WarcRecord]:
@@ -249,6 +325,27 @@ class FastWARCIterator:
     def __exit__(self, *exc_info) -> None:
         self.close()
 
+    # -- fault accounting -------------------------------------------------
+    def _ledger(self, offset: int, error_class: str, bytes_skipped: int,
+                message: str = "") -> None:
+        self.error_ledger.record(self._shard, offset, error_class,
+                                 bytes_skipped, message)
+
+    @staticmethod
+    def _find_magic_anchored(rb: RecordBuffer, pos: int) -> int:
+        """Next ``WARC/`` magic at a line start (tolerant resync target).
+
+        Record payloads may legitimately contain ``WARC/`` (warcinfo
+        bodies quote it); anchoring to a preceding LF keeps the resync
+        scan from latching onto payload text mid-damaged-region.
+        """
+        nxt = rb.find(WARC_MAGIC, pos)
+        while nxt > 0:
+            if rb.startswith(b"\n", nxt - 1):
+                return nxt
+            nxt = rb.find(WARC_MAGIC, nxt + 1)
+        return nxt
+
     # -- shared record assembly -----------------------------------------
     def _type_value(self, header_block: bytes) -> int:
         raw = _scan_header_field(header_block, _TYPE_NEEDLE)
@@ -295,16 +392,31 @@ class FastWARCIterator:
             rb = RecordBuffer(self._raw, stats=self.copy_stats)
         types_mask = self._types_mask
         filter_active = self._filter_active
+        tolerant = self.tolerant
         magic_len = len(WARC_MAGIC)
         pos = 0  # absolute stream offset of the next unconsumed byte
+        # tolerant bookkeeping: [damage_start, <next good magic>) is one
+        # quarantined range of class damage_class when set
+        damage_start: int | None = None
+        damage_class = "garbage"
         while True:
             rb.discard(pos)
             if not rb.ensure(pos, magic_len):
+                if tolerant and damage_start is not None \
+                        and rb.end_abs > damage_start:
+                    self._ledger(damage_start, damage_class,
+                                 rb.end_abs - damage_start)
                 return
             if not rb.startswith(WARC_MAGIC, pos):
-                nxt = rb.find(WARC_MAGIC, pos)
+                if tolerant and damage_start is None:
+                    damage_start = pos
+                nxt = self._find_magic_anchored(rb, pos) if tolerant \
+                    else rb.find(WARC_MAGIC, pos)
                 if nxt < 0:
                     if rb.eof:
+                        if tolerant and damage_start is not None:
+                            self._ledger(damage_start, damage_class,
+                                         rb.end_abs - damage_start)
                         return
                     # garbage: keep only a magic-straddle tail, read on
                     pos = max(pos, rb.end_abs - magic_len + 1)
@@ -313,16 +425,59 @@ class FastWARCIterator:
                     continue
                 pos = nxt
                 rb.discard(pos)
+            if tolerant and damage_start is not None:
+                if pos > damage_start:
+                    self._ledger(damage_start, damage_class,
+                                 pos - damage_start)
+                damage_start = None
+                damage_class = "garbage"
             hdr_end = rb.find(HEADER_TERMINATOR, pos)
             while hdr_end < 0:
                 if rb.eof:
+                    if tolerant:
+                        self._ledger(pos, "truncated_tail",
+                                     rb.end_abs - pos)
                     return
                 rb.ensure(pos, rb.end_abs - pos + _READ_BLOCK)
                 hdr_end = rb.find(HEADER_TERMINATOR, pos)
             clen_raw = rb.scan_field(_CLEN_NEEDLE, pos, hdr_end)
-            clen = int(clen_raw) if clen_raw and clen_raw.isdigit() else 0
+            if tolerant:
+                clen_opt = parse_content_length(clen_raw)
+                if clen_opt is None:
+                    # untrustworthy framing: quarantine from this record's
+                    # magic and resync to the next one
+                    damage_start = pos
+                    damage_class = "bad_content_length"
+                    pos += magic_len
+                    continue
+                clen = clen_opt
+            else:
+                clen = int(clen_raw) if clen_raw and clen_raw.isdigit() else 0
             body_start = hdr_end + 4
             record_end = body_start + clen + 4
+            if tolerant:
+                if not rb.ensure(pos, record_end - pos):
+                    # EOF inside the claimed body. The whole tail is
+                    # buffered now (ensure grew the arena to EOF), so a
+                    # *bogus-but-numeric* length mid-file can still be
+                    # resynced past instead of eating the rest of the
+                    # shard; only a tail with no further record start is
+                    # a true truncation.
+                    nxt = self._find_magic_anchored(rb, pos + magic_len)
+                    if nxt < 0:
+                        self._ledger(pos, "truncated_tail",
+                                     rb.end_abs - pos)
+                        return
+                    self._ledger(pos, "bad_content_length", nxt - pos)
+                    pos = nxt
+                    continue
+                if not rb.startswith(HEADER_TERMINATOR, body_start + clen):
+                    # Content-Length does not land on a record terminator:
+                    # the framing is lies, resync rather than desync
+                    damage_start = pos
+                    damage_class = "bad_content_length"
+                    pos += magic_len
+                    continue
 
             type_raw = rb.scan_field(_TYPE_NEEDLE, pos, hdr_end)
             type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
@@ -336,7 +491,7 @@ class FastWARCIterator:
                     else rb.end_abs
                 continue
             if not rb.ensure(pos, record_end - pos):
-                return  # truncated final record
+                return  # truncated final record (strict: silent stop)
             header_block = rb.take_bytes(pos, hdr_end)
             content = rb.view(body_start, body_start + clen)
             record = self._finalize(header_block, type_value, content, pos)
@@ -478,6 +633,24 @@ class FastWARCIterator:
             yield from self._iter_members_readahead(stream, arena)
         elif is_lz4 and self._filter_active:
             yield from self._iter_lz4_arena_lazy(stream, arena)
+        elif self.tolerant:
+            stats = self.copy_stats
+            while True:
+                slot = arena.acquire()
+                item = next_member_tolerant(stream, slot, stats,
+                                            self._ledger)
+                if item is None:
+                    arena.release(slot)
+                    return
+                n, offset = item
+                record = self._record_from_slot(slot, 0, n, offset)
+                if record is None and self._slot_damaged:
+                    self._ledger(offset, "bad_member",
+                                 stream.tell_compressed() - offset,
+                                 "member decoded but contains no record")
+                arena.release(slot)
+                if record is not None:
+                    yield record
         else:
             stats = self.copy_stats
             while True:
@@ -502,20 +675,27 @@ class FastWARCIterator:
         # decoder thread. Lifecycle contract either way: the stage dies
         # with this generator (finally) and with close().
         stats = self.copy_stats
+        tolerant = self.tolerant
         watermark = self.arena_bytes if self.arena_bytes else _ARENA_BYTES
         decoder = None
         if self._source_spec is not None:
             try:
                 decoder = ProcessReadaheadDecoder(
                     self._source_spec, arena, depth=self.readahead_depth,
-                    watermark=watermark)
+                    watermark=watermark, tolerant=tolerant,
+                    on_ledger=self._ledger)
             except (RuntimeError, OSError):
                 decoder = None  # no fork / constrained /dev/shm: thread
         if decoder is None:
-            def decode_member(slot: bytearray):
-                offset = stream.tell_compressed()
-                n = stream.next_member_into(slot, stats)
-                return None if n is None else (n, offset)
+            if tolerant:
+                def decode_member(slot: bytearray):
+                    return next_member_tolerant(stream, slot, stats,
+                                                self._ledger)
+            else:
+                def decode_member(slot: bytearray):
+                    offset = stream.tell_compressed()
+                    n = stream.next_member_into(slot, stats)
+                    return None if n is None else (n, offset)
 
             decoder = ReadaheadDecoder(decode_member, arena,
                                        depth=self.readahead_depth,
@@ -532,8 +712,13 @@ class FastWARCIterator:
                 _, slot, members = item
                 for start, nbytes, offset in members:
                     record = record_from_slot(slot, start, nbytes, offset)
-                    if record is not None:
-                        yield record
+                    if record is None:
+                        if tolerant and self._slot_damaged:
+                            self._ledger(
+                                offset, "bad_member", 0,
+                                "member decoded but contains no record")
+                        continue
+                    yield record
                 release(slot)
         finally:
             self._stop_decoder()
@@ -545,26 +730,49 @@ class FastWARCIterator:
         # block headers only — cheap skipping *and* arena decode
         types_mask = self._types_mask
         stats = self.copy_stats
+        tolerant = self.tolerant
         while True:
             offset = stream.tell_compressed()
             slot = arena.acquire()
-            member = stream.begin_member_into(slot)
-            if member is None:
+            try:
+                member = stream.begin_member_into(slot)
+                if member is None:
+                    arena.release(slot)
+                    return
+                hdr_end = slot.find(HEADER_TERMINATOR, 0, member.prefix_len)
+                sniff_end = hdr_end if hdr_end >= 0 else member.prefix_len
+                type_raw = _scan_field_in(slot, _TYPE_NEEDLE, 0, sniff_end)
+                type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
+                              RECORD_TYPE_VALUES.get(type_raw.lower(),
+                                                     UNKNOWN_TYPE_VALUE))
+                if not (type_value & types_mask):
+                    self.records_skipped += 1
+                    member.skip()
+                    arena.release(slot)
+                    continue
+                n = member.finish(stats)
+            except Exception as exc:  # noqa: BLE001 - tolerant by contract
+                if not tolerant:
+                    arena.release(slot)
+                    raise
+                from .errors import classify_member_error
+
+                del slot[:]  # partial first-block decode: roll it off
                 arena.release(slot)
-                return
-            hdr_end = slot.find(HEADER_TERMINATOR, 0, member.prefix_len)
-            sniff_end = hdr_end if hdr_end >= 0 else member.prefix_len
-            type_raw = _scan_field_in(slot, _TYPE_NEEDLE, 0, sniff_end)
-            type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
-                          RECORD_TYPE_VALUES.get(type_raw.lower(),
-                                                 UNKNOWN_TYPE_VALUE))
-            if not (type_value & types_mask):
-                self.records_skipped += 1
-                member.skip()
-                arena.release(slot)
+                skipped = stream.resync(offset)
+                if skipped is None:
+                    self._ledger(offset, "truncated_tail",
+                                 stream.tell_compressed() - offset,
+                                 repr(exc))
+                    return
+                self._ledger(offset, classify_member_error(exc), skipped,
+                             repr(exc))
                 continue
-            n = member.finish(stats)
             record = self._record_from_slot(slot, 0, n, offset)
+            if record is None and tolerant and self._slot_damaged:
+                self._ledger(offset, "bad_member",
+                             stream.tell_compressed() - offset,
+                             "member decoded but contains no record")
             arena.release(slot)
             if record is not None:
                 yield record
@@ -575,12 +783,15 @@ class FastWARCIterator:
         slot, header block copied out (small, counted), content borrowed
         as a ``memoryview`` of the slot — the member-path twin of the
         :class:`RecordBuffer` parse (DESIGN.md §9)."""
+        self._slot_damaged = False
         end = at + nbytes
         start = slot.find(WARC_MAGIC, at, end)
         if start < 0:
+            self._slot_damaged = True  # decoded fine, but no record in it
             return None
         hdr_end = slot.find(HEADER_TERMINATOR, start, end)
         if hdr_end < 0:
+            self._slot_damaged = True
             return None
         type_raw = _scan_field_in(slot, _TYPE_NEEDLE, start, hdr_end)
         type_value = (UNKNOWN_TYPE_VALUE if type_raw is None else
@@ -630,29 +841,58 @@ class FastWARCIterator:
         return self._finalize(header_block, type_value, content, offset)
 
 
-def read_record_at(source: BinaryIO, offset: int, *,
+def read_record_at(source, offset: int, *,
                    parse_http: bool = True,
-                   verify_digests: bool = False) -> WarcRecord | None:
+                   verify_digests: bool = False,
+                   shard: str | None = None) -> WarcRecord:
     """Parse exactly one record at absolute ``offset`` in ``source``.
 
-    ``source`` must be a seekable file object over the *addressable*
-    stream: the compressed file for gzip/LZ4 members, the raw file for
+    ``source`` is a seekable file object over the *addressable* stream —
+    the compressed file for gzip/LZ4 members, the raw file for
     uncompressed WARCs (zstd has no cheap member boundaries — callers
-    decompress first; see ``streams.ZstdStream``). This is the paper's
+    decompress first; see ``streams.ZstdStream``) — or a filesystem
+    path, opened and closed around the read. This is the paper's
     "constant-time random access" claim made executable: cost is one
     seek + one member decode + one record parse, independent of archive
     size. The returned record's ``stream_offset`` is rebased to the
     absolute ``offset``.
+
+    An offset that addresses no record raises
+    :class:`~repro.core.warc.errors.RecordReadError` carrying the offset
+    and shard — never a bare ``zlib.error`` / ``struct.error`` /
+    ``LZ4Error`` from the decode internals, and never a silent ``None``:
+    whether the bytes there fail to decode (corrupted member) or decode
+    to nothing (stale index, truncated shard), the caller asked for a
+    record that does not exist.
     """
-    source.seek(offset)
-    # readahead off: one member is parsed and the iterator abandoned —
-    # spinning a decoder thread per random-access read would be pure cost
-    it = FastWARCIterator(source, parse_http=parse_http,
-                          verify_digests=verify_digests, readahead=False)
-    record = it.read_one()
-    if record is not None:
-        # content may be a zero-copy borrow of the iterator's arena;
-        # detach so the record outlives the abandoned iterator
-        record.detach()
-        record.stream_offset = offset
+    if isinstance(source, (str, os.PathLike)):
+        if shard is None:
+            shard = os.fspath(source)
+        with open(source, "rb") as f:
+            return read_record_at(f, offset, parse_http=parse_http,
+                                  verify_digests=verify_digests, shard=shard)
+    try:
+        source.seek(offset)
+        # readahead off: one member is parsed and the iterator abandoned —
+        # spinning a decoder thread per random-access read would be pure
+        # cost
+        it = FastWARCIterator(source, parse_http=parse_http,
+                              verify_digests=verify_digests,
+                              readahead=False)
+        record = it.read_one()
+    except (OSError, RecordReadError):
+        raise
+    except Exception as exc:
+        raise RecordReadError(
+            f"damaged record: {exc!r}", offset=offset, shard=shard) from exc
+    if record is None:
+        # e.g. a mid-member gzip offset: the member scan sees no magic
+        # and reports a clean end-of-stream rather than an error
+        raise RecordReadError("offset addresses no record "
+                              "(stale index or truncated shard)",
+                              offset=offset, shard=shard)
+    # content may be a zero-copy borrow of the iterator's arena;
+    # detach so the record outlives the abandoned iterator
+    record.detach()
+    record.stream_offset = offset
     return record

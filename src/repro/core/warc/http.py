@@ -16,6 +16,11 @@ from .record import HttpHeaderMap, HEADER_TERMINATOR, CRLF
 
 _BASELINE_SPLIT = re.compile(r":\s*")
 
+# Adversarial payloads can pack tens of thousands of tiny "a:b\r\n" lines
+# into the 64 KiB header window; cap how many we ever materialize so a
+# hostile record costs O(cap) header-map appends, not O(window).
+_MAX_HEADER_LINES = 512
+
 
 def parse_http_fast(payload: bytes | memoryview) -> tuple[HttpHeaderMap | None, int]:
     """Parse HTTP headers from ``payload``.
@@ -45,7 +50,7 @@ def parse_http_fast(payload: bytes | memoryview) -> tuple[HttpHeaderMap | None, 
     if not lines or not (lines[0].startswith(b"HTTP/") or b" HTTP/" in lines[0]):
         return None, 0
     headers = HttpHeaderMap(lines[0])
-    for line in lines[1:]:
+    for line in lines[1:_MAX_HEADER_LINES + 1]:
         if not line:
             continue
         if line[0] in (0x20, 0x09):  # folded continuation

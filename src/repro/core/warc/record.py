@@ -65,6 +65,26 @@ def record_type_from_bytes(value: bytes) -> WarcRecordType:
     return _RECORD_TYPE_BY_NAME.get(value.strip().lower(), WarcRecordType.unknown)
 
 
+def parse_content_length(raw: bytes | None) -> int | None:
+    """Strict ``Content-Length`` validation: non-negative decimal or bust.
+
+    The hot parse paths historically coerced a missing/garbled length to
+    ``0`` and kept going — fine for well-formed archives, catastrophic
+    for damaged ones (a wrong length desynchronizes the framing scan and
+    every subsequent "record" is garbage). The tolerant paths use this
+    instead and treat ``None`` as a resync trigger.
+    """
+    if raw is None:
+        return None
+    raw = raw.strip()
+    if not raw or not raw.isdigit():  # isdigit() rejects b"-1", b"1e3", b""
+        return None
+    try:
+        return int(raw)
+    except ValueError:  # pragma: no cover - isdigit makes this unreachable
+        return None
+
+
 def scan_header_field(block: bytes, needle: bytes) -> bytes | None:
     """Grab one ``Name:``-prefixed field value from a raw header block
     without parsing the block. The backbone of both the record-type

@@ -39,6 +39,7 @@ import select
 import struct
 import sys
 import threading
+import time
 import zlib
 from typing import BinaryIO, Iterator
 
@@ -56,6 +57,7 @@ from . import lz4 as _lz4
 from .record import scan_header_field_in
 
 GZIP_MAGIC = b"\x1f\x8b"
+GZIP_MEMBER_MAGIC = b"\x1f\x8b\x08"  # magic + CM=deflate: the resync needle
 ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 LZ4_MAGIC_BYTES = b"\x04\x22\x4d\x18"
 
@@ -281,6 +283,31 @@ class GZipStream(MemberStream):
     def tell_compressed(self) -> int:
         return self._abs + self._off
 
+    def resync(self, start_abs: int) -> int | None:
+        """Seek forward from a damaged member to the next plausible one.
+
+        Scans for the next gzip member magic (``1f 8b 08``) strictly
+        after ``start_abs``, leaves the cursor on it, and returns the
+        number of bytes skipped from ``start_abs``; ``None`` when EOF
+        arrives first (cursor parked at end-of-stream). Bytes before the
+        current buffer window are gone (already compacted), so a decode
+        error detected deep inside a member can at worst resync to a
+        *later* member — the skipped range is still accounted exactly.
+        """
+        pos = max(start_abs + 1 - self._abs, 0)
+        while True:
+            i = self._buf.find(GZIP_MEMBER_MAGIC, pos)
+            if i >= 0:
+                self._off = i
+                return self._abs + i - start_abs
+            # keep a straddle tail shorter than the needle, read more
+            keep = max(len(self._buf) - (len(GZIP_MEMBER_MAGIC) - 1), pos, 0)
+            self._off = min(keep, len(self._buf))
+            if not self._fill():
+                self._off = len(self._buf)
+                return None
+            pos = 0  # _fill compacted the buffer down to the kept tail
+
 
 class LZ4Stream(MemberStream):
     """Frame-per-record LZ4 reader; ``skip_member`` hops block headers only."""
@@ -345,6 +372,26 @@ class LZ4Stream(MemberStream):
 
     def tell_compressed(self) -> int:
         return self._pos
+
+    def resync(self, start_abs: int) -> int | None:
+        """Seek forward to the next *valid* frame header after ``start_abs``.
+
+        Candidate magics are validated with :func:`lz4.parse_frame_header`
+        (version bits + block-size code + header checksum), so false
+        positives inside damaged compressed data are skipped over.
+        Returns bytes skipped from ``start_abs``; ``None`` at EOF.
+        """
+        i = self._buf.find(LZ4_MAGIC_BYTES, start_abs + 1)
+        while i >= 0:
+            try:
+                _lz4.parse_frame_header(self._buf, i)
+            except _lz4.LZ4Error:
+                i = self._buf.find(LZ4_MAGIC_BYTES, i + 1)
+                continue
+            self._pos = i
+            return i - start_abs
+        self._pos = len(self._buf)
+        return None
 
 
 class _LazyLZ4Member:
@@ -583,6 +630,63 @@ def open_member_stream(raw: BinaryIO) -> tuple[MemberStream | None, str]:
     if kind == "lz4":
         return LZ4Stream(raw), kind
     return None, kind
+
+
+def open_member_stream_at(raw: BinaryIO,
+                          offset: int) -> tuple[MemberStream | None, str]:
+    """:func:`open_member_stream`, positioned at compressed ``offset``.
+
+    The respawn path of :class:`ProcessReadaheadDecoder`: a replacement
+    decode child resumes exactly where the last fully-received batch of
+    its predecessor ended, so parent-visible offsets stay absolute and
+    results stay deterministic across child deaths.
+    """
+    stream, kind = open_member_stream(raw)
+    if offset and stream is not None:
+        if kind == "gzip":
+            raw.seek(offset)
+            stream._buf = b""
+            stream._abs = offset
+        else:  # lz4: whole file is already buffered, offsets are absolute
+            stream._pos = offset
+    return stream, kind
+
+
+def next_member_tolerant(stream: MemberStream, out: bytearray, stats,
+                         report) -> tuple[int, int] | None:
+    """Decode the next member, resyncing past damaged ones.
+
+    The tolerant-mode twin of ``stream.next_member_into``: a member that
+    fails to decode (bad header, corrupt deflate/LZ4 blocks, truncated
+    tail) has its partial output rolled back off ``out``, the stream
+    resynced to the next member header, and the damaged compressed range
+    reported via ``report(offset, error_class, bytes_skipped, message)``.
+
+    Returns ``(nbytes, member_offset)`` for the next good member, or
+    ``None`` at EOF. Catches ``Exception`` broadly: damaged compressed
+    data surfaces as ``zlib.error``, ``LZ4Error``, ``struct.error``,
+    ``IndexError``... — any of them means "this member is gone", and in
+    tolerant mode no member may take down the shard.
+    """
+    from .errors import classify_member_error
+
+    while True:
+        offset = stream.tell_compressed()
+        base = len(out)
+        try:
+            n = stream.next_member_into(out, stats)
+        except Exception as exc:  # noqa: BLE001 - tolerant by contract
+            del out[base:]  # roll the partial decode off the slot
+            skipped = stream.resync(offset)
+            if skipped is None:
+                report(offset, "truncated_tail",
+                       stream.tell_compressed() - offset, repr(exc))
+                return None
+            report(offset, classify_member_error(exc), skipped, repr(exc))
+            continue
+        if n is None:
+            return None
+        return n, offset
 
 
 # --------------------------------------------------------------------------
@@ -1100,9 +1204,9 @@ class ReadaheadDecoder:
 # *main* thread replaces mp.Queue: the queue's feeder thread would
 # contend with the decode loop for the child's GIL (the same convoy the
 # process exists to escape) and pickle every descriptor.
-_RA_BATCH, _RA_BLOB, _RA_EOF, _RA_RAISE = 0, 1, 2, 3
+_RA_BATCH, _RA_BLOB, _RA_EOF, _RA_RAISE, _RA_LEDGER = 0, 1, 2, 3, 4
 _RA_HDR = struct.Struct("<BI")
-_RA_BATCH_HDR = struct.Struct("<II")   # slot_idx, nbytes
+_RA_BATCH_HDR = struct.Struct("<IIQ")  # slot_idx, nbytes, next_offset
 _RA_MEMBER = struct.Struct("<IIQ")     # start, nbytes, offset
 
 
@@ -1112,6 +1216,39 @@ def _ra_send(wfd: int, kind: int, payload: bytes) -> None:
     while mv:
         written = os.write(wfd, mv)
         mv = mv[written:]
+
+
+def _ra_send_ledger(wfd: int, offset: int, error_class: str,
+                    bytes_skipped: int, message: str) -> None:
+    _ra_send(wfd, _RA_LEDGER,
+             pickle.dumps((offset, error_class, bytes_skipped, message)))
+
+
+def _maybe_member_fault(count: int) -> None:
+    """Deterministic decoder-child fault hook (chaos tests only).
+
+    ``REPRO_FAULT_DECODER_STALL=<latch-path>:<member-N>:<seconds>``
+    stalls the decode loop at member ``count == N`` — exactly once
+    globally, via an ``O_EXCL`` latch file, so the respawned child sails
+    past the same member. Environment-variable plumbing survives both
+    fork and spawn; a no-op unless the variable is set.
+    """
+    spec = os.environ.get("REPRO_FAULT_DECODER_STALL")
+    if not spec:
+        return
+    try:
+        latch, n_s, secs_s = spec.rsplit(":", 2)
+        n, secs = int(n_s), float(secs_s)
+    except ValueError:
+        return
+    if count != n:
+        return
+    try:
+        fd = os.open(latch, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return
+    os.close(fd)
+    time.sleep(secs)
 
 
 class _MvSink:
@@ -1145,7 +1282,8 @@ class _MvSink:
 
 def _member_decode_child(src, shm_name: str, slot_bytes: int, slots: int,
                          sem, rfd: int, wfd: int, watermark: int,
-                         max_members: int) -> None:
+                         max_members: int, start_offset: int = 0,
+                         tolerant: bool = False) -> None:
     """Child-process main of :class:`ProcessReadaheadDecoder`.
 
     Opens its own view of the source (a path, or forked bytes), inflates
@@ -1161,7 +1299,7 @@ def _member_decode_child(src, shm_name: str, slot_bytes: int, slots: int,
     os.close(rfd)  # parent's read end: child must not hold it open
     try:
         raw = open(src, "rb") if isinstance(src, str) else io.BytesIO(src)
-        stream, _kind = open_member_stream(raw)
+        stream, _kind = open_member_stream_at(raw, start_offset)
         if stream is None:
             _ra_send(wfd, _RA_EOF, b"")
             return
@@ -1178,10 +1316,11 @@ def _member_decode_child(src, shm_name: str, slot_bytes: int, slots: int,
         try:
             if isinstance(stream, GZipStream):
                 _gzip_decode_into_ring(stream, shm, slot_bytes, slots, sem,
-                                       wfd, watermark, max_members)
+                                       wfd, watermark, max_members, tolerant)
             else:
                 _member_decode_into_ring(stream, shm, slot_bytes, slots,
-                                         sem, wfd, watermark, max_members)
+                                         sem, wfd, watermark, max_members,
+                                         tolerant)
         finally:
             shm.close()
     except BaseException as exc:  # attach/open failures etc.
@@ -1201,14 +1340,18 @@ def _ra_send_error(wfd: int, error: BaseException) -> None:
 
 def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
                              sem, wfd: int, watermark: int,
-                             max_members: int) -> None:
+                             max_members: int, tolerant: bool = False) -> None:
     """Generic child decode loop: members append to a local bytearray
     batch, then one memcpy into the ring slot (LZ4's decode-into API is
     append-based). gzip uses :func:`_gzip_decode_into_ring` instead,
-    which skips the local buffer entirely."""
+    which skips the local buffer entirely. With ``tolerant``, damaged
+    members resync instead of erroring, shipping a ledger message."""
+    from .errors import classify_member_error
+
     slot_idx = 0
     local = bytearray()
     eof = False
+    decoded = 0
     # ramp-up: a small first batch shortens the pipeline-fill bubble
     # (the parent would otherwise idle a full batch time)
     batch_cap = min(32, max_members)
@@ -1218,8 +1361,24 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
         error: BaseException | None = None
         while len(members) < batch_cap and len(local) < watermark:
             offset = stream.tell_compressed()
+            base = len(local)
             try:
                 n = stream.next_member_into(local)
+            except Exception as exc:
+                if tolerant:
+                    del local[base:]  # roll the partial decode off
+                    skipped = stream.resync(offset)
+                    if skipped is None:
+                        _ra_send_ledger(
+                            wfd, offset, "truncated_tail",
+                            stream.tell_compressed() - offset, repr(exc))
+                        eof = True
+                        break
+                    _ra_send_ledger(wfd, offset, classify_member_error(exc),
+                                    skipped, repr(exc))
+                    continue
+                error = exc
+                break
             except BaseException as exc:
                 error = exc
                 break
@@ -1227,20 +1386,25 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
                 eof = True
                 break
             members.append((len(local) - n, n, offset))
+            decoded += 1
+            _maybe_member_fault(decoded)
         batch_cap = max_members
         if members:
             nbytes = len(local)
+            next_off = stream.tell_compressed()
             table = b"".join(_RA_MEMBER.pack(*m) for m in members)
             if nbytes <= slot_bytes:
                 sem.acquire()  # FIFO drain: target slot is free
                 base = slot_idx * slot_bytes
                 shm.buf[base:base + nbytes] = local
                 _ra_send(wfd, _RA_BATCH,
-                         _RA_BATCH_HDR.pack(slot_idx, nbytes) + table)
+                         _RA_BATCH_HDR.pack(slot_idx, nbytes, next_off)
+                         + table)
                 slot_idx = (slot_idx + 1) % slots
             else:  # oversized batch (huge member): pipe fallback
                 _ra_send(wfd, _RA_BLOB,
-                         _RA_BATCH_HDR.pack(0, nbytes) + table + local)
+                         _RA_BATCH_HDR.pack(0, nbytes, next_off)
+                         + table + local)
         if error is not None:
             _ra_send_error(wfd, error)
             return
@@ -1249,13 +1413,18 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
 
 def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                            slots: int, sem, wfd: int, watermark: int,
-                           max_members: int) -> None:
+                           max_members: int, tolerant: bool = False) -> None:
     """gzip child decode loop: members inflate **directly into the ring
     slot** through a :class:`_MvSink` — no local batch buffer, no batch
     memcpy, each output byte written once. A member that outgrows its
-    slot spills and travels as a pipe blob instead."""
+    slot spills and travels as a pipe blob instead. With ``tolerant``,
+    damaged members are rolled back off the slot, the stream resyncs to
+    the next member magic, and a ledger message ships in-band."""
+    from .errors import classify_member_error
+
     slot_idx = 0
     eof = False
+    decoded = 0
     batch_cap = min(32, max_members)  # ramp-up (fill bubble)
     buf = shm.buf
     while not eof:
@@ -1273,6 +1442,22 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                     eof = True
                     break
                 stream._decode_member_body(sink.append)
+            except Exception as exc:
+                if tolerant:
+                    sink.pos = member_start  # roll the partial back off
+                    sink.spill = None
+                    skipped = stream.resync(offset)
+                    if skipped is None:
+                        _ra_send_ledger(
+                            wfd, offset, "truncated_tail",
+                            stream.tell_compressed() - offset, repr(exc))
+                        eof = True
+                        break
+                    _ra_send_ledger(wfd, offset, classify_member_error(exc),
+                                    skipped, repr(exc))
+                    continue
+                error = exc
+                break
             except BaseException as exc:
                 error = exc
                 break
@@ -1284,18 +1469,26 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                 break
             members.append((member_start - base,
                             sink.pos - member_start, offset))
+            decoded += 1
+            _maybe_member_fault(decoded)
         batch_cap = max_members
+        next_off = stream._abs + stream._off
         if members:
+            # resume cursor of the *batch* message stops short of a giant
+            # member sent separately below — a death between the two must
+            # re-drive the giant, not skip it
+            batch_next = giant[1] if giant is not None else next_off
             table = b"".join(_RA_MEMBER.pack(*m) for m in members)
             _ra_send(wfd, _RA_BATCH,
-                     _RA_BATCH_HDR.pack(slot_idx, sink.pos - base) + table)
+                     _RA_BATCH_HDR.pack(slot_idx, sink.pos - base,
+                                        batch_next) + table)
             slot_idx = (slot_idx + 1) % slots
         else:
             sem.release()  # nothing landed: hand the slot straight back
         if giant is not None:
             data, offset = giant
             _ra_send(wfd, _RA_BLOB,
-                     _RA_BATCH_HDR.pack(0, len(data))
+                     _RA_BATCH_HDR.pack(0, len(data), next_off)
                      + _RA_MEMBER.pack(0, len(data), offset) + data)
         if error is not None:
             _ra_send_error(wfd, error)
@@ -1328,10 +1521,14 @@ class ProcessReadaheadDecoder:
     """
 
     _IDLE = 0.05
+    _BACKOFF = 0.05  # first respawn delay; doubles per attempt, capped
+    _BACKOFF_CAP = 1.0
 
     def __init__(self, src, arena: MemberArena, *, depth: int = 3,
                  watermark: int = _ARENA_BYTES,
-                 max_members: int = 128) -> None:
+                 max_members: int = 128, tolerant: bool = False,
+                 on_ledger=None, max_respawns: int = 2,
+                 stall_timeout_s: float | None = None) -> None:
         import multiprocessing as mp
 
         # pre-import in the parent so the forked child's function-level
@@ -1355,21 +1552,48 @@ class ProcessReadaheadDecoder:
             # from-scratch LZ4 paths below — it can never call into XLA,
             # so fork stays safe with a live jax runtime in the parent.
             raise RuntimeError("no fork start method on this platform")
-        ctx = mp.get_context("fork")
+        self._ctx = mp.get_context("fork")
+        self._src = src
         self._arena = arena
         self._slot_bytes = max(2 * watermark, 1 << 16)
         self._slots = depth
-        self._shm = _shm_mod.SharedMemory(create=True,
-                                          size=self._slot_bytes * depth)
-        self._rfd = wfd = None
+        self._watermark = watermark
+        self._max_members = max_members
+        self._tolerant = tolerant
+        self._on_ledger = on_ledger
+        self._max_respawns = max_respawns
+        if stall_timeout_s is None:
+            env = os.environ.get("REPRO_DECODER_STALL_S")
+            stall_timeout_s = float(env) if env else None
+        self._stall_timeout_s = stall_timeout_s
+        self._resume = 0        # compressed offset the next child starts at
+        self._respawns = 0
         self._closed = False
+        self._shm = None
+        self._rfd = None
+        self._spawn()
+
+    def _spawn(self) -> None:
+        """Create segment + semaphore + pipe and start a decode child.
+
+        Called at construction and again by :meth:`_recover` after a
+        child death/stall — every spawn gets a *fresh* ring (segment and
+        semaphore), so permits a dead child took to its grave can never
+        shrink the replacement's ring.
+        """
+        from .. import reaper as _reaper
+
+        self._shm = _reaper.create_segment(self._slot_bytes * self._slots)
+        self._rfd = wfd = None
         try:
-            self._sem = ctx.Semaphore(depth)
+            self._sem = self._ctx.Semaphore(self._slots)
             self._rfd, wfd = os.pipe()
-            self.process = ctx.Process(
+            self.process = self._ctx.Process(
                 target=_member_decode_child,
-                args=(src, self._shm.name, self._slot_bytes, depth,
-                      self._sem, self._rfd, wfd, watermark, max_members),
+                args=(self._src, self._shm.name, self._slot_bytes,
+                      self._slots, self._sem, self._rfd, wfd,
+                      self._watermark, self._max_members, self._resume,
+                      self._tolerant),
                 name="warc-readahead-decoder", daemon=True)
             import warnings
 
@@ -1392,10 +1616,56 @@ class ProcessReadaheadDecoder:
                         os.close(fd)
                     except OSError:  # pragma: no cover - teardown race
                         pass
-            self._shm.close()
-            self._shm.unlink()
+            self._rfd = None
+            self._unlink_segment()
             raise
         os.close(wfd)  # child holds the only write end: EOF == child gone
+
+    def _unlink_segment(self) -> None:
+        from .. import reaper as _reaper
+
+        if self._shm is None:
+            return
+        try:
+            self._shm.close()
+            self._shm.unlink()
+        except (OSError, FileNotFoundError):  # pragma: no cover - race
+            pass
+        _reaper.unregister(self._shm)
+        self._shm = None
+
+    def _teardown_child(self) -> None:
+        if self.process.is_alive():
+            self.process.terminate()
+        self.process.join(timeout=5.0)
+        if self._rfd is not None:
+            try:
+                os.close(self._rfd)
+            except OSError:  # pragma: no cover - teardown race
+                pass
+            self._rfd = None
+        self._unlink_segment()
+
+    def _recover(self, reason: str) -> None:
+        """Reap a dead/stalled child and respawn from the resume cursor.
+
+        Every batch the parent has fully received is final (its bytes
+        were copied into the arena at ``get()`` time), so the
+        replacement child restarts decoding at ``self._resume`` — the
+        compressed offset just past the last received batch — and the
+        member stream continues deterministically. Capped exponential
+        backoff; budget exhaustion re-raises the underlying failure.
+        """
+        if self._respawns >= self._max_respawns:
+            raise RuntimeError(
+                f"readahead decoder process {reason}; respawn budget "
+                f"({self._max_respawns}) exhausted")
+        self._respawns += 1
+        delay = min(self._BACKOFF * (2 ** (self._respawns - 1)),
+                    self._BACKOFF_CAP)
+        self._teardown_child()
+        time.sleep(delay)
+        self._spawn()
 
     # -- consumer side ---------------------------------------------------
     def _read_exact(self, n: int) -> bytes | None:
@@ -1413,29 +1683,45 @@ class ProcessReadaheadDecoder:
     def get(self):
         """Next ``("batch", slot, members)`` with ``slot`` already landed
         in the parent arena, or ``None`` after EOF / close; re-raises
-        child decode errors in stream order."""
+        child decode errors in stream order. A child that dies or stalls
+        mid-stream is reaped and respawned from the resume cursor
+        (capped backoff) instead of failing the whole shard."""
+        waited = 0.0
         while True:
             ready, _, _ = select.select([self._rfd], [], [], self._IDLE)
             if not ready:
                 if self._closed:
                     return None
+                waited += self._IDLE
+                if (self._stall_timeout_s is not None
+                        and waited >= self._stall_timeout_s):
+                    self._recover(
+                        f"stalled (> {self._stall_timeout_s:.1f}s silent)")
+                    waited = 0.0
                 continue
+            waited = 0.0
             hdr = self._read_exact(_RA_HDR.size)
             if hdr is None:
                 if self._closed:
                     return None
-                raise RuntimeError(
-                    "readahead decoder process died (exit "
-                    f"{self.process.exitcode})")
+                self._recover(f"died (exit {self.process.exitcode})")
+                continue
             kind, plen = _RA_HDR.unpack(hdr)
             payload = self._read_exact(plen) if plen else b""
             if payload is None:
-                raise RuntimeError("readahead decoder pipe truncated")
+                if self._closed:
+                    return None
+                self._recover("died mid-message (pipe truncated)")
+                continue
             if kind == _RA_EOF:
                 return None
             if kind == _RA_RAISE:
                 raise pickle.loads(payload)
-            slot_idx, nbytes = _RA_BATCH_HDR.unpack_from(payload)
+            if kind == _RA_LEDGER:
+                if self._on_ledger is not None:
+                    self._on_ledger(*pickle.loads(payload))
+                continue
+            slot_idx, nbytes, next_off = _RA_BATCH_HDR.unpack_from(payload)
             table_end = len(payload) if kind == _RA_BATCH else \
                 len(payload) - nbytes
             members = list(_RA_MEMBER.iter_unpack(
@@ -1447,6 +1733,9 @@ class ProcessReadaheadDecoder:
                 self._sem.release()  # ring slot free before parsing starts
             else:  # _RA_BLOB: oversized batch travelled in the pipe
                 slot += memoryview(payload)[table_end:]
+            # the batch is now owned by the parent: a replacement child
+            # may resume just past it without losing or repeating data
+            self._resume = next_off
             self._arena.stats.count_decode_into(nbytes)
             return ("batch", slot, members)
 
@@ -1459,18 +1748,7 @@ class ProcessReadaheadDecoder:
         if self._closed:
             return
         self._closed = True
-        if self.process.is_alive():
-            self.process.terminate()
-        self.process.join(timeout=5.0)
-        try:
-            os.close(self._rfd)
-        except OSError:  # pragma: no cover - teardown race
-            pass
-        try:
-            self._shm.close()
-            self._shm.unlink()
-        except (OSError, FileNotFoundError):  # pragma: no cover
-            pass
+        self._teardown_child()
 
 
 def iter_members(path_or_buf, kind: str | None = None) -> Iterator[bytes]:

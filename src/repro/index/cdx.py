@@ -131,6 +131,11 @@ class CdxIndex:
         self.sig_bits = sig_bits
         self.sig_ngram = sig_ngram
         self.sig_hashes = sig_hashes
+        # damage report of a tolerant build: LedgerEntry rows for every
+        # byte range the sweep skipped (plus shard_quarantined entries).
+        # In-memory only — not persisted by save()/load(); a reloaded
+        # index starts with a clean slate.
+        self.errors: list = []
         self._uris: np.ndarray | None = None
         self._mimes: np.ndarray | None = None
 
@@ -312,10 +317,13 @@ class CdxIndex:
         merged = {name: np.concatenate(parts) for name, parts in cols.items()}
         merged["uri_off"] = np.concatenate(uri_offs)
         merged["mime_off"] = np.concatenate(mime_offs)
-        return cls(shard_paths, shard_kinds, merged,
-                   b"".join(uri_parts), b"".join(mime_parts),
-                   sig_bits=ref.sig_bits, sig_ngram=ref.sig_ngram,
-                   sig_hashes=ref.sig_hashes)
+        out = cls(shard_paths, shard_kinds, merged,
+                  b"".join(uri_parts), b"".join(mime_parts),
+                  sig_bits=ref.sig_bits, sig_ngram=ref.sig_ngram,
+                  sig_hashes=ref.sig_hashes)
+        for p in partials:
+            out.errors.extend(getattr(p, "errors", ()))
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -351,7 +359,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
                  sig_hashes: int = SIG_HASHES,
                  fused: bool = False,
                  batch_records: int = _FUSED_BATCH,
-                 readahead: bool | None = None) -> CdxIndex:
+                 readahead: bool | None = None,
+                 tolerant: bool = False) -> CdxIndex:
     """One-pass sweep of one shard into a single-shard partial index.
 
     ``fused=True`` computes digest + signature through the batched
@@ -397,7 +406,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
     # the index build overlaps decompression with signature/digest work.
     # Pending borrowed views pin their member-arena slots exactly like
     # RecordBuffer arenas, so the batched flush stays aliasing-safe.
-    it = FastWARCIterator(path, parse_http=True, readahead=readahead)
+    it = FastWARCIterator(path, parse_http=True, readahead=readahead,
+                          tolerant=tolerant)
     try:
         for record in it:
             content = record.content_view()
@@ -492,16 +502,23 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
         "uri_off": np.asarray(uri_off, np.uint64),
         "mime_off": np.asarray(mime_off, np.uint64),
     }
-    return CdxIndex([path], [kind], columns, b"".join(uri_parts),
-                    b"".join(mime_parts), sig_bits=sig_bits,
-                    sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+    out = CdxIndex([path], [kind], columns, b"".join(uri_parts),
+                   b"".join(mime_parts), sig_bits=sig_bits,
+                   sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+    if tolerant:
+        # the damage ledger rides the (picklable) partial back to the
+        # build_index parent, crossing the worker process boundary
+        out.errors = list(it.error_ledger.entries())
+    return out
 
 
 def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
                 sig_ngram: int = SIG_NGRAM,
                 sig_hashes: int = SIG_HASHES,
                 fused: bool | None = None,
-                readahead: bool | None = None) -> CdxIndex:
+                readahead: bool | None = None,
+                tolerant: bool = False,
+                supervise: bool = False) -> CdxIndex:
     """Index a sharded corpus: one parser sweep per shard, merged.
 
     ``workers > 0`` fans the per-shard sweeps out through
@@ -527,10 +544,19 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
     thread inside each sweep — serial builds overlap inflate with column
     assembly and fused kernel flushes; worker builds overlap it with the
     per-process sweep on top of the shard fan-out.
+
+    ``tolerant`` sweeps each shard in recovery mode: damaged records are
+    skipped (resynced past) instead of aborting the build, and every
+    skipped byte range is reported on the returned index's ``errors``
+    list (:class:`~repro.core.warc.errors.LedgerEntry` rows).
+    ``supervise`` (with ``workers > 0``) retries worker deaths; a shard
+    that keeps killing workers is dropped from the merge and reported as
+    one ``shard_quarantined`` ledger entry covering the whole file.
     """
     import functools
 
     from repro.core.parallel import map_shards
+    from repro.core.warc.errors import LedgerEntry
 
     if sig_bits <= 0 or sig_bits % 64:
         raise ValueError(f"sig_bits must be a positive multiple of 64, "
@@ -541,9 +567,27 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
         fused = workers == 0
     sweep = functools.partial(_index_shard, sig_bits=sig_bits,
                               sig_ngram=sig_ngram, sig_hashes=sig_hashes,
-                              fused=fused, readahead=readahead)
-    partials = map_shards(sweep, [str(p) for p in paths], workers=workers)
-    return CdxIndex.merge(partials)
+                              fused=fused, readahead=readahead,
+                              tolerant=tolerant)
+    paths = [str(p) for p in paths]
+    partials = map_shards(sweep, paths, workers=workers, supervise=supervise)
+    live: list[CdxIndex] = []
+    dropped: list[LedgerEntry] = []
+    for path, part in zip(paths, partials):
+        if part is None:  # quarantined by the pool supervisor
+            try:
+                size = os.path.getsize(path)
+            except OSError:
+                size = 0
+            dropped.append(LedgerEntry(
+                shard=path, offset=0, error_class="shard_quarantined",
+                bytes_skipped=size,
+                message="shard repeatedly killed indexing workers"))
+            continue
+        live.append(part)
+    merged = CdxIndex.merge(live)
+    merged.errors.extend(dropped)
+    return merged
 
 
 # --------------------------------------------------------------------------
@@ -592,16 +636,19 @@ class RandomAccessReader:
                                        base=int(frame_base))
                 return read_record_at(window, int(offset),
                                       parse_http=self._parse_http,
-                                      verify_digests=self._verify)
+                                      verify_digests=self._verify,
+                                      shard=self.path)
             if self._zbuf is None:
                 self._f.seek(0)
                 self._zbuf = ZstdStream(self._f).read()
             return read_record_at(io.BytesIO(self._zbuf), int(offset),
                                   parse_http=self._parse_http,
-                                  verify_digests=self._verify)
+                                  verify_digests=self._verify,
+                                  shard=self.path)
         return read_record_at(self._f, int(offset),
                               parse_http=self._parse_http,
-                              verify_digests=self._verify)
+                              verify_digests=self._verify,
+                              shard=self.path)
 
     def read_entry(self, entry: CdxEntry) -> WarcRecord | None:
         return self.read(entry.offset)

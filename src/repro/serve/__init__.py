@@ -10,7 +10,8 @@
 ``.engine`` pulls in jax + the model stack, so it is imported lazily by
 its users rather than here; the archive gateway imports light.
 """
-from .archive import ArchiveGateway, GatewayClosed, GatewayOverloaded
+from .archive import (ArchiveGateway, GatewayClosed, GatewayOverloaded,
+                      GatewayTimeout)
 from .cache import RecordCache
 from .metrics import GatewayMetrics, percentile
 
@@ -18,6 +19,7 @@ __all__ = [
     "ArchiveGateway",
     "GatewayClosed",
     "GatewayOverloaded",
+    "GatewayTimeout",
     "GatewayMetrics",
     "RecordCache",
     "percentile",

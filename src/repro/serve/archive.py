@@ -46,13 +46,15 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.warc.errors import RecordReadError
 from repro.index.cdx import CdxIndex
 from repro.index.query import PatternHit, QueryEngine, QueryPlan
 from repro.index.service import QueryRequest, QueryResponse
 from .cache import RecordCache
 from .metrics import GatewayMetrics
 
-__all__ = ["ArchiveGateway", "GatewayClosed", "GatewayOverloaded"]
+__all__ = ["ArchiveGateway", "GatewayClosed", "GatewayOverloaded",
+           "GatewayTimeout"]
 
 
 class GatewayOverloaded(RuntimeError):
@@ -63,6 +65,15 @@ class GatewayClosed(RuntimeError):
     """Request submitted to (or still pending in) a closed gateway."""
 
 
+class GatewayTimeout(RuntimeError):
+    """Per-request deadline expired before the scan could resolve it.
+
+    Distinct from :class:`GatewayOverloaded` (rejected at admission) —
+    a timed-out request was *accepted* but couldn't be served in time;
+    the caller can tell load shedding apart from slow serving.
+    """
+
+
 @dataclass
 class _Ticket:
     """One submitted request and its completion future."""
@@ -70,6 +81,10 @@ class _Ticket:
     request: QueryRequest
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
+    deadline: float | None = None  # absolute perf_counter time, or None
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
 
 class ArchiveGateway:
@@ -98,13 +113,19 @@ class ArchiveGateway:
         scan-resistant frequency-sketch admission duel — one-shot query
         sweeps can no longer flush the hot working set; ``"lru"`` is
         the PR 3 admit-always cache.
+    default_deadline_s:
+        deadline applied to every request that doesn't carry its own
+        ``deadline_s`` at :meth:`submit`; ``None`` (default) means no
+        deadline. Expired requests resolve with :class:`GatewayTimeout`
+        instead of occupying scan capacity.
     """
 
     def __init__(self, index: CdxIndex, *, engine: QueryEngine | None = None,
                  max_pending: int = 256, max_batch_requests: int = 16,
                  cache_bytes: int = 64 << 20, cache_admission: str = "tinylfu",
                  use_kernel: bool = True,
-                 interpret: bool = True, poll_interval_s: float = 0.02
+                 interpret: bool = True, poll_interval_s: float = 0.02,
+                 default_deadline_s: float | None = None
                  ) -> None:
         self.engine = engine if engine is not None else QueryEngine(
             index, use_kernel=use_kernel, interpret=interpret)
@@ -112,6 +133,7 @@ class ArchiveGateway:
         self.cache = RecordCache(cache_bytes, admission=cache_admission)
         self.metrics = GatewayMetrics()
         self.max_batch_requests = max(1, max_batch_requests)
+        self.default_deadline_s = default_deadline_s
         self._poll = poll_interval_s
         self._queue: "queue.Queue[_Ticket]" = queue.Queue(max(1, max_pending))
         self._inflight: dict[tuple, list[_Ticket]] = {}
@@ -124,7 +146,8 @@ class ArchiveGateway:
 
     # -- client side -----------------------------------------------------
     def submit(self, request: QueryRequest, *, block: bool = True,
-               timeout: float | None = None) -> "Future[QueryResponse]":
+               timeout: float | None = None,
+               deadline_s: float | None = None) -> "Future[QueryResponse]":
         """Queue one request; returns the future of its response.
 
         An identical scan already **executing** is joined directly (the
@@ -133,10 +156,20 @@ class ArchiveGateway:
         them into the same batch. With ``block=False`` (or on
         ``timeout``) a full queue raises :class:`GatewayOverloaded` —
         backpressure the caller can see.
+
+        ``deadline_s`` (default: the gateway's ``default_deadline_s``)
+        bounds how long the request may wait end-to-end: a ticket whose
+        deadline expires before its batch resolves gets
+        :class:`GatewayTimeout` instead of a response — under overload
+        the scheduler sheds expired queue entries without scanning for
+        them.
         """
         if self._closed:
             raise GatewayClosed("gateway is closed")
         ticket = _Ticket(request)
+        budget = deadline_s if deadline_s is not None else self.default_deadline_s
+        if budget is not None:
+            ticket.deadline = ticket.t_submit + budget
         with self._lock:
             waiters = self._inflight.get(request.scan_key())
             if waiters is not None:
@@ -186,7 +219,28 @@ class ArchiveGateway:
             except BaseException:  # the scheduler must outlive any batch
                 self.metrics.inc("errors")
 
+    def _timeout(self, ticket: _Ticket) -> None:
+        """Resolve one expired ticket (caller already claimed the future)."""
+        ticket.future.set_exception(GatewayTimeout(
+            f"deadline expired after "
+            f"{time.perf_counter() - ticket.t_submit:.3f}s"))
+        self.metrics.inc("timeouts")
+
     def _serve_batch(self, tickets: list[_Ticket]) -> None:
+        # shed already-expired tickets before planning anything: under
+        # overload the queue ages, and scanning for a waiter that stopped
+        # caring only makes every later deadline worse
+        now = time.perf_counter()
+        live: list[_Ticket] = []
+        for ticket in tickets:
+            if ticket.expired(now):
+                if ticket.future.set_running_or_notify_cancel():
+                    self._timeout(ticket)
+            else:
+                live.append(ticket)
+        if not live:
+            return
+        tickets = live
         # group by scan identity; first occurrence keeps submission order
         groups: dict[tuple, list[_Ticket]] = {}
         for ticket in tickets:
@@ -212,7 +266,9 @@ class ArchiveGateway:
                 except Exception as exc:  # malformed query: fail only its
                     failures[key] = exc   # own waiters, not the batch
                     self.metrics.inc("errors")
-            results = self._execute_plans(plans)
+            results, scan_failures = self._execute_plans(plans)
+            for key, exc in scan_failures.items():
+                failures.setdefault(key, exc)
         except BaseException as exc:  # scan failure: resolve all, keep serving
             self.metrics.inc("errors")
             failures = {key: failures.get(key, exc) for key in groups}
@@ -234,6 +290,9 @@ class ArchiveGateway:
                     continue
                 if error is not None:
                     ticket.future.set_exception(error)
+                    continue
+                if ticket.expired(now):  # scan outlived the deadline
+                    self._timeout(ticket)
                     continue
                 latency = now - ticket.t_submit
                 ticket.future.set_result(QueryResponse(
@@ -260,9 +319,43 @@ class ArchiveGateway:
             self.metrics.inc("records_fetched")
         return data
 
+    def _fetch_chunk(self, chunk: list[tuple[tuple, int]]
+                     ) -> tuple[dict[int, bytes], list[tuple[tuple, int]]]:
+        """Fetch one chunk's payloads, quarantining unreadable rows.
+
+        A row whose record can't be parsed (:class:`RecordReadError` —
+        damaged member, bad framing) is dropped from the chunk instead
+        of failing any query: a damaged record simply can't match, and
+        every plan sharing the row keeps its other candidates. Counted
+        under ``read_errors`` (fetch attempts that failed) and
+        ``quarantined_rows`` (distinct rows skipped).
+        """
+        bufs: dict[int, bytes] = {}
+        dead: set[int] = set()
+        for _, row in chunk:  # dedupe: shared rows fetched once
+            if row in bufs or row in dead:
+                continue
+            try:
+                bufs[row] = self._fetch(row)
+            except RecordReadError:
+                dead.add(row)
+                self.metrics.inc("read_errors")
+        if not dead:
+            return bufs, chunk
+        self.metrics.inc("quarantined_rows", len(dead))
+        return bufs, [(key, row) for key, row in chunk if row not in dead]
+
+    def _fail_chunk(self, chunk: list[tuple[tuple, int]],
+                    exc: BaseException,
+                    failures: dict[tuple, BaseException]) -> None:
+        self.metrics.inc("errors")
+        for key in {key for key, _ in chunk}:
+            failures.setdefault(key, exc)
+
     # -- cross-request scan ----------------------------------------------
     def _execute_plans(self, plans: dict[tuple, QueryPlan]
-                       ) -> dict[tuple, list[PatternHit]]:
+                       ) -> tuple[dict[tuple, list[PatternHit]],
+                                  dict[tuple, BaseException]]:
         """Scan all plans' candidates through *shared* kernel dispatches.
 
         Every (plan, candidate row) pair becomes one scan item; items
@@ -276,8 +369,15 @@ class ArchiveGateway:
         repeats across chunks), scanned and verified, then released —
         resident memory stays bounded by chunk size + cache budget, like
         the sync engine's streaming execute.
+
+        Failure isolation: unreadable rows are skipped per-row (see
+        :meth:`_fetch_chunk`); a chunk whose scan/verify raises fails
+        only the plans with items in that chunk (returned in the second
+        element), never the whole batch — one poisoned query can't take
+        down its co-batched neighbours.
         """
         results: dict[tuple, list[PatternHit]] = {key: [] for key in plans}
+        failures: dict[tuple, BaseException] = {}
         kernel_items: list[tuple[tuple, int]] = []  # (plan key, row)
         host_items: list[tuple[tuple, int]] = []
         for key, plan in plans.items():
@@ -294,35 +394,42 @@ class ArchiveGateway:
 
         n_scanned = bytes_scanned = 0
         for chunk in self._chunks(kernel_items):
-            bufs: dict[int, bytes] = {}
-            for _, row in chunk:  # dedupe: shared rows fetched once
-                if row not in bufs:
-                    bufs[row] = self._fetch(row)
-            self._scan_chunk(chunk, plans, bufs, results)
-            n_scanned += len(chunk)
-            bytes_scanned += sum(len(bufs[row]) for _, row in chunk)
+            chunk = [item for item in chunk if item[0] not in failures]
+            if not chunk:
+                continue
+            try:
+                bufs, chunk = self._fetch_chunk(chunk)
+                if chunk:
+                    self._scan_chunk(chunk, plans, bufs, results)
+                n_scanned += len(chunk)
+                bytes_scanned += sum(len(bufs[row]) for _, row in chunk)
+            except Exception as exc:
+                self._fail_chunk(chunk, exc, failures)
 
         # host path (literal sweep / regex gate, no device work): same
         # chunked fetch-dedup-release structure as the kernel path
         for chunk in self._chunks(host_items):
-            bufs = {}
-            for _, row in chunk:
-                if row not in bufs:
-                    bufs[row] = self._fetch(row)
-            for key, row in chunk:
-                plan = plans[key]
-                buf = bufs[row]
-                self._finish_row(plan, key, row, buf, plan.host_scan(buf),
-                                 results)
-                n_scanned += 1
-                bytes_scanned += len(buf)
+            chunk = [item for item in chunk if item[0] not in failures]
+            if not chunk:
+                continue
+            try:
+                bufs, chunk = self._fetch_chunk(chunk)
+                for key, row in chunk:
+                    plan = plans[key]
+                    buf = bufs[row]
+                    self._finish_row(plan, key, row, buf, plan.host_scan(buf),
+                                     results)
+                    n_scanned += 1
+                    bytes_scanned += len(buf)
+            except Exception as exc:
+                self._fail_chunk(chunk, exc, failures)
 
         self.metrics.inc("host_scans", len(host_items))
         self.metrics.inc("records_scanned", n_scanned)
         self.metrics.inc("bytes_scanned", bytes_scanned)
         for hits in results.values():
             hits.sort(key=lambda h: h.index_row)
-        return results
+        return results, failures
 
     def _chunks(self, items: list[tuple[tuple, int]]
                 ) -> "list[list[tuple[tuple, int]]]":

@@ -47,6 +47,9 @@ class GatewayMetrics:
         "bytes_scanned",
         "records_fetched",     # payload fetches that missed the cache
         "errors",              # scans resolved with an exception
+        "timeouts",            # requests resolved with GatewayTimeout
+        "read_errors",         # damaged-record fetches (RecordReadError)
+        "quarantined_rows",    # candidate rows skipped as unreadable
     )
 
     def __init__(self) -> None:

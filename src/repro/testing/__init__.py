@@ -1,0 +1,21 @@
+"""Test-support utilities: deterministic fault injection for chaos tests.
+
+Everything in here is import-light (no jax, no heavy deps) so test
+collection stays fast; the injectors themselves are pure byte surgery
+plus environment plumbing for the in-tree fault hooks.
+"""
+from .faults import (
+    DamagedSpan,
+    arm_decoder_stall,
+    arm_worker_kill,
+    corrupt_warc,
+    member_spans,
+)
+
+__all__ = [
+    "DamagedSpan",
+    "arm_decoder_stall",
+    "arm_worker_kill",
+    "corrupt_warc",
+    "member_spans",
+]

@@ -1,0 +1,328 @@
+"""Fault-tolerance suite (``pytest -m faults``): chaos soak + injectors.
+
+Exercises the PR 6 failure model end to end: deterministic byte
+corruption through the tolerant parser (survivors must be byte-identical
+to a clean oracle, every damaged range ledgered), supervised recovery
+from killed pool workers and stalled decoder children, shared-memory
+reaping after abnormal teardown, typed random-access read errors, and
+gateway degradation (deadlines + damaged-record isolation).
+
+Everything is deterministic: seeded corruption, one-shot latch files for
+process faults, equivalence asserted against serial clean runs.
+"""
+import collections
+import glob
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.parallel import iter_records_parallel, map_shards
+from repro.core.reaper import reap_orphans
+from repro.core.warc import FastWARCIterator, RecordReadError
+from repro.core.warc.fastwarc import read_record_at
+from repro.data.synth import CorpusSpec, generate_warc
+from repro.testing.faults import (
+    arm_decoder_stall,
+    arm_worker_kill,
+    corrupt_warc,
+    member_spans,
+)
+
+pytestmark = pytest.mark.faults
+
+CODECS = ("none", "gzip", "lz4")
+
+
+def _payloads(source, **kw):
+    return [bytes(r.payload_view())
+            for r in FastWARCIterator(source, parse_http=False, **kw)]
+
+
+def _shards(tmp_path, n=4, compression="gzip", n_pages=12):
+    paths = []
+    for i in range(n):
+        p = str(tmp_path / f"s{i}.warc.{compression}")
+        with open(p, "wb") as f:
+            f.write(generate_warc(CorpusSpec(n_pages=n_pages, seed=100 + i),
+                                  compression=compression))
+        paths.append(p)
+    return paths
+
+
+# --------------------------------------------------------------------------
+# corruptor: deterministic spans, exact ledger accounting
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compression", CODECS)
+def test_corruptor_spans_tile_and_repeat(compression):
+    data = generate_warc(CorpusSpec(n_pages=10, seed=3),
+                         compression=compression)
+    spans = member_spans(data)
+    assert spans[0][0] == 0 and spans[-1][1] == len(data)
+    assert all(spans[i][1] == spans[i + 1][0] for i in range(len(spans) - 1))
+    one = corrupt_warc(data, fraction=0.1, seed=9)
+    two = corrupt_warc(data, fraction=0.1, seed=9)
+    assert one == two
+    assert corrupt_warc(data, fraction=0.1, seed=10) != one
+
+
+@pytest.mark.parametrize("compression", CODECS)
+def test_tolerant_survivors_match_clean_oracle(compression):
+    data = generate_warc(CorpusSpec(n_pages=20, seed=5),
+                         compression=compression)
+    clean = _payloads(data)
+    bad, damage = corrupt_warc(data, fraction=0.08, seed=1)
+    assert damage
+    it = FastWARCIterator(bad, parse_http=False, tolerant=True)
+    got = [bytes(r.payload_view()) for r in it]
+    lost = {d.index for d in damage}
+    assert got == [p for i, p in enumerate(clean) if i not in lost]
+    ledger = it.error_ledger.entries()
+    for d in damage:  # every damaged range is covered by a ledger entry
+        assert any(e.offset <= d.start and e.end >= d.end for e in ledger), d
+    assert sum(e.bytes_skipped for e in ledger) >= sum(
+        d.end - d.start for d in damage) - len(damage) * 8
+
+
+@pytest.mark.parametrize("compression", CODECS)
+def test_truncated_final_record(compression):
+    data = generate_warc(CorpusSpec(n_pages=8, seed=2),
+                         compression=compression)
+    clean = _payloads(data)
+    cut, damage = corrupt_warc(data, mode="truncate")
+    assert len(damage) == 1 and damage[0].kind == "truncate"
+    it = FastWARCIterator(cut, parse_http=False, tolerant=True)
+    assert [bytes(r.payload_view()) for r in it] == clean[:-1]
+    assert it.error_ledger.counts() == {"truncated_tail": 1}
+    if compression == "none":
+        # strict uncompressed parse stops silently at a torn tail (no
+        # codec-level integrity to violate) — but never yields it
+        assert _payloads(cut) == clean[:-1]
+    else:
+        with pytest.raises(Exception):
+            _payloads(cut)  # strict decode refuses the torn member
+
+
+# --------------------------------------------------------------------------
+# chaos soak: corruption + worker kill + stalled decoder child, at once
+# --------------------------------------------------------------------------
+
+def test_chaos_soak(tmp_path, monkeypatch):
+    """The PR's acceptance scenario. Four gzip shards, one carrying >1%
+    corrupted members. Phase 1: supervised parallel export while one
+    pool worker hard-exits mid-shard. Phase 2: in-process export while
+    one readahead decoder child stalls past its heartbeat (pool workers
+    are daemonic, so decoder children only exist on the serial path).
+    Both phases must finish (no hang), stream exactly the intact records
+    (byte-identical to a clean oracle), and leave no shared-memory
+    segment behind.
+    """
+    paths = _shards(tmp_path, n=4)
+    clean = {p: _payloads(p) for p in paths}
+    with open(paths[1], "rb") as f:
+        data = f.read()
+    bad, damage = corrupt_warc(data, fraction=0.05, seed=4)
+    assert len(damage) >= max(1, len(member_spans(data)) // 100)
+    with open(paths[1], "wb") as f:
+        f.write(bad)
+
+    oracle = collections.Counter()
+    lost = {d.index for d in damage}
+    for p in paths:
+        keep = clean[p] if p != paths[1] else [
+            pay for i, pay in enumerate(clean[p]) if i not in lost]
+        oracle.update(keep)
+
+    # phase 1: corrupted members + a worker killed mid-stream
+    with arm_worker_kill(str(tmp_path), nth=10) as kill_latch:
+        got = collections.Counter(
+            bytes(r.payload_view()) for r in iter_records_parallel(
+                paths, workers=2, tolerant=True, supervise=True,
+                hang_timeout_s=10.0))
+        assert os.path.exists(kill_latch), "worker-kill fault never fired"
+    assert got == oracle
+    assert glob.glob("/dev/shm/repro-shm-*") == []
+
+    # phase 2: corrupted members + a stalled decoder child (supervised
+    # in-process: stall detected by heartbeat, child killed, respawned,
+    # decode resumed from the exact member cursor)
+    monkeypatch.setenv("REPRO_DECODER_STALL_S", "0.75")
+    with arm_decoder_stall(str(tmp_path), member=3,
+                           seconds=30.0) as stall_latch:
+        got2 = collections.Counter(
+            bytes(r.payload_view()) for r in iter_records_parallel(
+                paths, workers=0, tolerant=True, readahead=True))
+        assert os.path.exists(stall_latch), "decoder-stall fault never fired"
+    assert got2 == oracle
+    assert glob.glob("/dev/shm/repro-shm-*") == []
+
+
+def test_ledger_accounts_damage_across_workers(tmp_path):
+    from repro.index.cdx import build_index
+
+    paths = _shards(tmp_path, n=3)
+    with open(paths[2], "rb") as f:
+        data = f.read()
+    bad, damage = corrupt_warc(data, fraction=0.08, seed=6)
+    with open(paths[2], "wb") as f:
+        f.write(bad)
+    idx = build_index(paths, workers=2, tolerant=True, supervise=True)
+    assert all(e.shard == paths[2] for e in idx.errors)
+    for d in damage:
+        assert any(e.offset <= d.start and e.end >= d.end
+                   for e in idx.errors), d
+
+
+def test_fault_arming_does_not_leak_into_later_pools(tmp_path):
+    """Regression: the forkserver daemon snapshots ``os.environ`` when
+    it first starts, so a kill armed during one pool's lifetime used to
+    stay visible to every worker forked afterwards — and with the latch
+    file unlinked at disarm, a worker of an innocent later pool could
+    win the (stale) latch and die. The kill spec is now captured from
+    the parent's live environment at worker-spawn time.
+    """
+    import multiprocessing as mp
+
+    if "forkserver" not in mp.get_all_start_methods():
+        pytest.skip("forkserver unavailable on this platform")
+    paths = _shards(tmp_path, n=3, n_pages=4)
+    with arm_worker_kill(str(tmp_path), nth=5) as latch:
+        got = collections.Counter(
+            bytes(r.payload_view()) for r in iter_records_parallel(
+                paths, workers=2, supervise=True, hang_timeout_s=10.0,
+                mp_context="forkserver"))
+        assert os.path.exists(latch), "worker-kill fault never fired"
+    oracle = collections.Counter()
+    for p in paths:
+        oracle.update(_payloads(p))
+    assert got == oracle
+    # disarmed: a pool forked from the same (env-stale) daemon must
+    # run clean — no replayed kill, results intact
+    sizes = map_shards(os.path.getsize, paths, workers=2,
+                       mp_context="forkserver")
+    assert sizes == [os.path.getsize(p) for p in paths]
+
+
+def _size_or_die(path):
+    if "poison" in os.path.basename(path):
+        os._exit(77)
+    return os.path.getsize(path)
+
+
+def test_poison_shard_quarantined_others_survive(tmp_path):
+    paths = _shards(tmp_path, n=3)
+    poison = str(tmp_path / "poison.warc.gz")
+    with open(poison, "wb") as f:
+        f.write(b"\x1f\x8b\x08" + b"\x00" * 64)
+    items = paths + [poison]
+    out = map_shards(_size_or_die, items, workers=2, supervise=True,
+                     max_respawns=6, poison_kills=2)
+    assert out[:3] == [os.path.getsize(p) for p in paths]
+    assert out[3] is None
+    assert glob.glob("/dev/shm/repro-shm-*") == []
+
+
+# --------------------------------------------------------------------------
+# shared-memory reaper: abnormal teardown leaves nothing behind
+# --------------------------------------------------------------------------
+
+def test_reaper_collects_segment_after_sigkill(tmp_path):
+    # a child creates a tracked segment and dies by SIGKILL — no atexit,
+    # no unlink; the next reap in any surviving process must collect it
+    code = (
+        "import os, sys; sys.path.insert(0, {src!r})\n"
+        "from repro.core.reaper import create_segment\n"
+        "seg = create_segment(4096)\n"
+        "print(seg.name, flush=True)\n"
+        "os.kill(os.getpid(), 9)\n"
+    ).format(src=os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True)
+    name = proc.stdout.strip()
+    assert name.startswith("repro-shm-")
+    assert os.path.exists(f"/dev/shm/{name}"), "segment should outlive SIGKILL"
+    assert name in reap_orphans()
+    assert not os.path.exists(f"/dev/shm/{name}")
+
+
+# --------------------------------------------------------------------------
+# typed random-access errors
+# --------------------------------------------------------------------------
+
+def test_read_record_at_raises_typed_error(tmp_path):
+    from repro.index.cdx import RandomAccessReader, build_index
+
+    [path] = _shards(tmp_path, n=1)
+    idx = build_index([path], workers=0)
+    size = os.path.getsize(path)
+    bogus = size // 2 + 1  # mid-member: not a gzip boundary
+    with pytest.raises(RecordReadError) as ei:
+        read_record_at(path, bogus, shard=path)
+    assert ei.value.offset == bogus and ei.value.shard == path
+    with RandomAccessReader(path) as reader:
+        assert reader.read(int(idx.offset[0])) is not None
+        with pytest.raises(RecordReadError) as ei:
+            reader.read(bogus)
+        assert ei.value.shard == path  # reader attributes its shard
+
+
+# --------------------------------------------------------------------------
+# gateway degradation: deadlines + damaged-record isolation
+# --------------------------------------------------------------------------
+
+@pytest.fixture()
+def gw_index(tmp_path):
+    from repro.index.cdx import build_index
+
+    [path] = _shards(tmp_path, n=1, n_pages=20)
+    return path, build_index([path], workers=0)
+
+
+def test_gateway_deadline_times_out_and_recovers(gw_index):
+    from repro.index.service import QueryRequest
+    from repro.serve import ArchiveGateway, GatewayTimeout
+
+    _, idx = gw_index
+    with ArchiveGateway(idx, use_kernel=False) as gw:
+        fut = gw.submit(QueryRequest(b"the"), deadline_s=-1.0)
+        with pytest.raises(GatewayTimeout):
+            fut.result(10)
+        assert gw.metrics.count("timeouts") == 1
+        # an expired ticket must not wedge the scheduler
+        assert gw.query(QueryRequest(b"the")).total_matches > 0
+        assert gw.metrics.count("responses") == 1
+
+
+def test_gateway_default_deadline(gw_index):
+    from repro.index.service import QueryRequest
+    from repro.serve import ArchiveGateway, GatewayTimeout
+
+    _, idx = gw_index
+    with ArchiveGateway(idx, use_kernel=False,
+                        default_deadline_s=-1.0) as gw:
+        with pytest.raises(GatewayTimeout):
+            gw.query(QueryRequest(b"the"), timeout=10)
+
+
+def test_gateway_degrades_on_damaged_records(gw_index):
+    from repro.index.service import QueryRequest
+    from repro.serve import ArchiveGateway
+
+    path, idx = gw_index
+    with open(path, "rb") as f:
+        data = f.read()
+    with ArchiveGateway(idx, use_kernel=False) as gw:
+        base = gw.query(QueryRequest(b"the")).total_matches
+    assert base > 0
+    bad, damage = corrupt_warc(data, fraction=0.05, seed=8)
+    with open(path, "wb") as f:  # archive rots *after* indexing
+        f.write(bad)
+    with ArchiveGateway(idx, use_kernel=False) as gw:
+        degraded = gw.query(QueryRequest(b"the"))  # resolves, no exception
+        snap = gw.metrics.snapshot()
+    assert 0 < degraded.total_matches < base
+    assert snap["read_errors"] > 0
+    assert snap["quarantined_rows"] > 0
+    assert snap["errors"] == 0  # skipped rows, not failed queries

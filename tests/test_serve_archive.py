@@ -426,7 +426,8 @@ def test_shared_dispatch_across_distinct_queries(corpus):
     with ArchiveGateway(idx, engine=engine) as gw:
         plans = {req1.scan_key(): engine.plan(req1.pattern),
                  req2.scan_key(): engine.plan(req2.pattern)}
-        results = gw._execute_plans(plans)  # scheduler idle: direct call
+        results, failures = gw._execute_plans(plans)  # scheduler idle
+        assert not failures
         shared = gw.metrics.count("kernel_dispatches")
     assert 0 < shared < solo
     # and the shared scan found exactly what the solo runs found
