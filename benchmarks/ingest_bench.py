@@ -38,6 +38,15 @@ Three claims measured, not asserted:
   that gzip rec/s gains ≥1.3× from overlapping inflate with parsing.
   Arena-decoded output is verified byte-identical to the legacy path
   in-bench before any rate is reported.
+* **obs** (ISSUE 7) — the observability tax. The zero-copy uncompressed
+  sweep is raced tracing-off vs tracing-on, interleaved with
+  alternating order (the ``_decode_race`` best-of idiom: each mode's
+  fastest quiet window is the instrument, because per-pair ratios on a
+  shared container swing ±10%), and the bench *asserts* the
+  best-of-ratio ≤ 1.02: span instrumentation on the hot loop must cost
+  ≤2% even when enabled — the disabled default path is a strict subset
+  (one ``trace.enabled()`` test per iterator), so the gate covers it a
+  fortiori.
 * **robustness** (ISSUE 6) — the tolerant-mode tax and the recovery
   payoff. ``tolerant=True`` on a *clean* gzip archive must ride the
   exact same hot path as strict mode (the resync machinery only runs
@@ -230,6 +239,49 @@ def _decode_rows() -> list[str]:
     return rows
 
 
+# -- observability tax: tracing-off vs tracing-on (ISSUE 7) --------------
+
+def _obs_rows() -> list[str]:
+    from repro import obs
+    from repro.obs import trace
+
+    data = generate_warc(CorpusSpec(n_pages=_PAGES, seed=29), "none")
+
+    def sweep() -> int:
+        return sum(1 for _ in FastWARCIterator(data, parse_http=True))
+
+    prev = trace.enable(False)
+    try:
+        sweep()
+        trace.enable(True)
+        n = sweep()  # warm both paths (and the span reservoirs)
+        best = {False: float("inf"), True: float("inf")}
+        for rep in range(12):  # interleaved best-of: per-pair ratios on
+            # this container swing +-10% run to run, far above the tax
+            # being measured, so (the _decode_race rationale) each mode
+            # takes its fastest quiet window; alternating order kills
+            # any cache/GC bias favoring the second sweep of a pair
+            order = (False, True) if rep % 2 == 0 else (True, False)
+            for on in order:
+                trace.enable(on)
+                t0 = time.perf_counter()
+                sweep()
+                best[on] = min(best[on], time.perf_counter() - t0)
+    finally:
+        trace.enable(prev)
+    ratio = best[True] / best[False]
+    # the gate trace.py promises: spans on the zero-copy loop cost <=2%
+    # even ENABLED; the disabled default is a strict subset of that work
+    assert ratio <= 1.02, f"tracing overhead ratio {ratio:.3f} > 1.02"
+    fill_spans = obs.snapshot().counter("span.ingest.fill.count")
+    return [
+        f"ingest,obs,tracing_off,records_per_s,{n / best[False]:.1f}",
+        f"ingest,obs,tracing_on,records_per_s,{n / best[True]:.1f}",
+        f"ingest,obs,tracing_on,overhead_ratio,{ratio:.3f}",
+        f"ingest,obs,tracing_on,fill_spans_recorded,{fill_spans}",
+    ]
+
+
 # -- robustness: tolerant-mode tax + recovery under damage ---------------
 
 def _robustness_rows() -> list[str]:
@@ -353,6 +405,9 @@ def run(quiet: bool = False) -> list[str]:
 
     # 2b) tolerant-mode tax on clean archives + recovery under damage
     rows.extend(_robustness_rows())
+
+    # 2c) observability tax: paired tracing-off/on race, gated <=1.02
+    rows.extend(_obs_rows())
 
     with tempfile.TemporaryDirectory() as d:
         shard_paths = []

@@ -16,13 +16,19 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                request, coalesce/cache rates (benchmarks/serve_bench.py);
   * ingest   — zero-copy parse vs legacy (records/s + bytes copied per
                record), fused vs two-pass index build, shared-memory vs
-               pickle pool transport (benchmarks/ingest_bench.py).
+               pickle pool transport, and the observability tax (paired
+               tracing-off/on race, gated ≤1.02 in-bench)
+               (benchmarks/ingest_bench.py).
 
 ``--json`` additionally writes ``BENCH_pipeline.json`` (all non-index
 rows as records plus a throughput summary) and — per section that ran —
 ``BENCH_index.json`` / ``BENCH_serve.json`` / ``BENCH_ingest.json``, so
-each perf trajectory is tracked machine-readably across PRs.
-``--sections a,b`` restricts the run.
+each perf trajectory is tracked machine-readably across PRs. Every
+payload embeds the bench process's merged ``repro.obs`` counter snapshot
+under ``"obs"`` (cumulative across the sections that ran — kernel
+dispatch / pad-waste / ingest counters ride along with the timings; the
+file renders with ``python -m repro.obs.dump``). ``--sections a,b``
+restricts the run.
 
 Scale with REPRO_BENCH_PAGES (default 600 for table1 / 400 elsewhere).
 """
@@ -134,11 +140,16 @@ def main(argv: list[str] | None = None) -> None:
 
     if args.json:
 
+        from repro import obs
+
+        obs_dict = obs.snapshot().as_dict()
+
         def _write(path: str, bench: str, rows: list[str],
                    ran: list[str]) -> None:
             records = [_parse_row(line) for line in rows]
             payload = {"bench": bench, "sections": ran,
-                       "rows": records, "summary": _summary(records)}
+                       "rows": records, "summary": _summary(records),
+                       "obs": obs_dict}
             with open(path, "w") as f:
                 json.dump(payload, f, indent=2)
                 f.write("\n")

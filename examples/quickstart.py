@@ -5,6 +5,9 @@
    printing records/s for both (the paper's Table 1 axis).
 3. Recompress gzip -> LZ4 with the from-scratch codec and parse that too
    (the paper's concluding recommendation).
+4. Print the merged observability snapshot the run accumulated — parent
+   counters plus the readahead decoder child's, harvested over shared
+   memory (DESIGN.md §11).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -88,6 +91,20 @@ def main():
           lambda: sum(1 for _ in FastWARCIterator(warc_lz4, parse_http=True)))
     print("  (our LZ4 codec is pure Python — see EXPERIMENTS.md for the "
           "C-speed zstd numbers that carry the fast-codec claim)")
+
+    print("\n-- observability: everything above, in one snapshot "
+          "(DESIGN.md §11) --")
+    from repro import obs
+
+    snap = obs.snapshot()
+    print(f"  sources: {', '.join(snap.sources)}")
+    print(f"  ingest: {snap.counter('ingest.records')} records over "
+          f"{snap.counter('ingest.shards')} sweeps, "
+          f"{snap.counter('ingest.bytes_copied')/1e6:.1f} MB copied; "
+          f"decoder child decoded {snap.counter('decoder.members')} "
+          f"members in {snap.counter('decoder.batches')} batches")
+    print("  (render any snapshot as JSON or Prometheus text with "
+          "`python -m repro.obs.dump`)")
 
 
 if __name__ == "__main__":

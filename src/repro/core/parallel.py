@@ -49,6 +49,11 @@ from typing import Any, Callable, Iterable, Iterator
 
 import multiprocessing as mp
 
+from repro import obs
+from repro.obs.registry import ObsSnapshot, Registry
+from repro.obs.shmstats import (STATS_SLOT_BYTES, StatsSlotReader,
+                                StatsSlotWriter)
+
 from . import reaper as _reaper
 
 try:
@@ -153,6 +158,45 @@ class _ShmSlotWriter:
             pass
 
 
+class _WorkerStatsPublisher:
+    """Worker-side observability publisher over one seqlock stats slot.
+
+    Installs a **fresh** process-default :class:`Registry` (a forked
+    worker inherits the parent's counters — publishing those back would
+    double-count them on merge) and pickles cumulative snapshots into
+    this worker's slot of the parent-owned stats segment after every
+    completed shard. The parent harvests whenever it likes; because it
+    owns the segment, a SIGKILLed worker's last publish survives it.
+    """
+
+    def __init__(self, name: str, offset: int, source: str) -> None:
+        # parent owns the segment: attach without (re-)registering, same
+        # rationale as _ShmSlotWriter
+        from multiprocessing import resource_tracker
+
+        orig_register = resource_tracker.register
+        resource_tracker.register = lambda *a, **k: None
+        try:
+            self._shm = _shm_mod.SharedMemory(name=name)
+        finally:
+            resource_tracker.register = orig_register
+        self._view = self._shm.buf[offset:offset + STATS_SLOT_BYTES]
+        self._writer = StatsSlotWriter(self._view)
+        obs.set_registry(Registry(source=source))
+
+    def publish(self) -> None:
+        self._writer.publish(obs.snapshot())
+
+    def close(self) -> None:
+        self.publish()
+        self._writer.close()
+        self._view.release()  # exports must be gone before shm.close()
+        try:
+            self._shm.close()
+        except OSError:  # pragma: no cover - teardown race
+            pass
+
+
 def _maybe_worker_kill(counter: int, spec: str | None) -> None:
     """Fault-injection hook: die hard before sending result ``N``.
 
@@ -186,7 +230,8 @@ def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
                  shm_args=None, encode=None, wid: int = 0,
                  hb=None, stop_ev=None, claims=None, hist=None,
                  hist_len: int = 0, credit=None,
-                 fault_kill: str | None = None) -> None:
+                 fault_kill: str | None = None,
+                 stats_args=None) -> None:
     """Child-process main: stream worker_fn(item) results back in chunks.
 
     With ``stop_ev`` set (supervised pools) the loop polls the task
@@ -215,6 +260,12 @@ def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
             writer = _ShmSlotWriter(*shm_args)
         except Exception:  # segment vanished: stay on the queue path
             writer = None
+    stats_pub = None
+    if stats_args is not None and _shm_mod is not None:
+        try:
+            stats_pub = _WorkerStatsPublisher(*stats_args)
+        except Exception:  # segment vanished: run without obs publishing
+            stats_pub = None
 
     def beat() -> None:
         if hb is not None:
@@ -297,9 +348,15 @@ def _worker_loop(task_q, result_q, worker_fn, chunk_size: int,
                     produced += len(buf)
                 put((idx, _DONE, skip + produced))
                 beat()
+                if stats_pub is not None:  # per shard, never per record
+                    stats_pub.publish()
             except Exception as exc:  # surfaced as ParallelWorkerError
                 put((idx, _ERROR, (repr(exc), traceback.format_exc())))
+                if stats_pub is not None:
+                    stats_pub.publish()
     finally:
+        if stats_pub is not None:
+            stats_pub.close()
         if writer is not None:
             writer.close()
 
@@ -451,6 +508,10 @@ class ParallelWarcPool:
         self._segments: list = []
         self._sems: list = []
         self._procs: list = []
+        self._stats_seg = None
+        self._stats_gen = [0] * self.workers   # per-wid incarnation counter
+        self._worker_snaps: dict[str, ObsSnapshot] = {}
+        self._stats_absorbed = False
         self._closed = False  # before any allocation: __del__ must be safe
         self.transport_stats = {"shm_chunks": 0, "shm_bytes": 0,
                                 "queue_chunks": 0, "results": 0}
@@ -479,6 +540,16 @@ class ParallelWarcPool:
                 transport = "pickle"
         self.transport = transport
         self._slots_per_worker = slots_per_worker
+        # one seqlock stats slot per worker: workers publish cumulative
+        # ObsSnapshots here after every shard; the parent harvests on
+        # supervisor ticks / close / obs_snapshot(). Optional — a
+        # constrained /dev/shm degrades to no worker stats, not a crash.
+        if _shm_mod is not None:
+            try:
+                self._stats_seg = _reaper.create_segment(
+                    STATS_SLOT_BYTES * self.workers)
+            except OSError:
+                self._stats_seg = None
         self._worker_fn = worker_fn
         self._chunk_size = chunk_size
         self._encode = frame_codec[0] if frame_codec else None
@@ -497,13 +568,21 @@ class ParallelWarcPool:
         if self.supervise:
             hb = self._hb[wid]
             hb.value = time.monotonic()
+        stats_args = None
+        if self._stats_seg is not None:
+            # incarnation-tagged source: a respawned worker publishes
+            # under a fresh key, so the dead incarnation's harvested
+            # snapshot survives the slot being overwritten
+            self._stats_gen[wid] += 1
+            stats_args = (self._stats_seg.name, wid * STATS_SLOT_BYTES,
+                          f"worker-{wid}.{self._stats_gen[wid]}")
         p = self._ctx.Process(
             target=_worker_loop,
             args=(self._tasks, self._results, self._worker_fn,
                   self._chunk_size, shm_args, self._encode, wid, hb,
                   self._stop_ev, self._claims, self._hist, self._hist_len,
                   self._credits[wid] if self._credits else None,
-                  os.environ.get("REPRO_FAULT_WORKER_KILL")),
+                  os.environ.get("REPRO_FAULT_WORKER_KILL"), stats_args),
             daemon=True)
         p.start()
         return p
@@ -579,6 +658,68 @@ class ParallelWarcPool:
                 except _queue_mod.Full:
                     continue
 
+    # -- observability ---------------------------------------------------
+    def _harvest_worker_stats(self) -> None:
+        """Read every worker's latest published snapshot into
+        ``self._worker_snaps``, keyed by incarnation source
+        (``worker-<wid>.<gen>``) so a dead worker's harvest survives its
+        replacement reusing the slot. Cheap enough for supervisor ticks:
+        snapshots are a few KiB of counters per worker."""
+        if self._stats_seg is None:
+            return
+        for wid in range(self.workers):
+            view = self._stats_seg.buf[wid * STATS_SLOT_BYTES:
+                                       (wid + 1) * STATS_SLOT_BYTES]
+            reader = StatsSlotReader(view)
+            snap = reader.read()
+            reader.close()
+            view.release()  # export gone before any close/unlink
+            if snap is not None and snap.sources:
+                self._worker_snaps[snap.sources[0]] = snap
+
+    def obs_snapshot(self) -> ObsSnapshot:
+        """Merged pool-level observability: transport + supervisor
+        counters, the worst current heartbeat lag, and every worker
+        incarnation's last published snapshot.
+
+        This is the *live* view: while the pool runs, worker counters
+        exist only here, so ``obs.snapshot().merged_with(pool.obs_snapshot())``
+        is the mid-stream whole-tree picture with no double-count.
+        ``close()`` then absorbs exactly the same counters into the
+        process-default registry (the readahead-decoder harvest
+        discipline), after which ``obs.snapshot()`` alone is the whole
+        truth — do NOT also merge a post-close pool snapshot on top."""
+        self._harvest_worker_stats()
+        pool = ObsSnapshot(sources=("pool",))
+        for k, v in self.transport_stats.items():
+            pool.counters[f"pool.transport.{k}"] = int(v)
+        for k, v in self.supervisor_stats.items():
+            pool.counters[f"pool.{k}"] = int(v)
+        if self.supervise and self._hb:
+            now = time.monotonic()
+            pool.gauges["pool.heartbeat_lag_s"] = max(
+                0.0, max(now - hb.value for hb in self._hb))
+        snaps = [pool] + [self._worker_snaps[k]
+                          for k in sorted(self._worker_snaps)]
+        return ObsSnapshot.merge(snaps)
+
+    def _absorb_stats(self) -> None:
+        """Fold the pool's own counters plus every harvested worker
+        snapshot into the process-default registry, exactly once (from
+        ``close()``). Counters are cumulative, so the guard is what
+        keeps a double ``close()`` from double-counting."""
+        if self._stats_absorbed:
+            return
+        self._stats_absorbed = True
+        reg = obs.registry()
+        reg.fold_counters({f"pool.transport.{k}": int(v)
+                           for k, v in self.transport_stats.items()})
+        reg.fold_counters({f"pool.{k}": int(v)
+                           for k, v in self.supervisor_stats.items()})
+        reg.attach_source("pool")
+        for src in sorted(self._worker_snaps):
+            reg.absorb(self._worker_snaps[src])
+
     # -- supervision -----------------------------------------------------
     def _supervise_tick(self, received: dict, kills: dict, terminal: set,
                         backoff: float) -> float:
@@ -592,6 +733,9 @@ class ParallelWarcPool:
         message — a worker that dies the instant it claims still leaves
         the claim behind.
         """
+        # harvest first: a dead worker's last published counters must be
+        # captured before its replacement starts overwriting the slot
+        self._harvest_worker_stats()
         now = time.monotonic()
         for wid, p in enumerate(self._procs):
             claim = self._claims[wid]
@@ -861,6 +1005,8 @@ class ParallelWarcPool:
                 p.terminate()
         for p in self._procs:
             p.join(timeout=2.0)
+        self._harvest_worker_stats()  # final: before the segment unlinks
+        self._absorb_stats()
         for q in (self._tasks, self._results):
             try:
                 q.close()
@@ -876,6 +1022,14 @@ class ParallelWarcPool:
             _reaper.unregister(seg)
         self._segments = []
         self._sems = []
+        if self._stats_seg is not None:
+            try:
+                self._stats_seg.close()
+                self._stats_seg.unlink()
+            except (OSError, FileNotFoundError):  # pragma: no cover
+                pass
+            _reaper.unregister(self._stats_seg)
+            self._stats_seg = None
 
     def __enter__(self) -> "ParallelWarcPool":
         return self
@@ -1094,7 +1248,8 @@ def map_shards(fn: Callable, items: Iterable, *,
                supervise: bool = False,
                max_respawns: int = 3,
                hang_timeout_s: float | None = None,
-               poison_kills: int = 2) -> list:
+               poison_kills: int = 2,
+               with_obs: bool = False) -> list:
     """Apply ``fn`` (module-level, one picklable result) per shard.
 
     Returns results in ``items`` order — the map half of map-reduce
@@ -1102,11 +1257,22 @@ def map_shards(fn: Callable, items: Iterable, *,
     deaths are retried (see :class:`ParallelWarcPool`); a shard
     quarantined as poison yields ``None`` in its slot instead of
     aborting the whole map.
+
+    With ``with_obs=True`` returns ``(results, snapshot)`` where
+    ``snapshot`` is one merged :class:`~repro.obs.ObsSnapshot` spanning
+    the whole process tree: the parent registry, the pool's
+    transport/supervisor counters, and every worker incarnation's
+    published counters — all of which the pool's ``close()`` absorbed
+    into the process-default registry, so the snapshot composes with
+    later layers (e.g. a gateway's) without double-counting.
     """
     items = [it for it in items]
     if workers is not None and workers <= 0 or len(items) <= 1:
-        return [fn(it) for it in items]
-    out: list = [None] * len(items)
+        out = [fn(it) for it in items]
+        # serial path: fn ran in-process, its counters are already in
+        # the parent registry
+        return (out, obs.snapshot()) if with_obs else out
+    out = [None] * len(items)
     with ParallelWarcPool(functools.partial(_call_one, fn), workers=workers,
                           chunk_size=1, mp_context=mp_context,
                           supervise=supervise, max_respawns=max_respawns,
@@ -1115,4 +1281,9 @@ def map_shards(fn: Callable, items: Iterable, *,
         for event in pool.iter_events(items, ordered=True):
             if event[0] == "chunk":
                 out[event[1]] = event[2][0]
+    if with_obs:
+        # after close(): the final harvest (post worker join) and the
+        # pool's own counters were absorbed into the process registry —
+        # one snapshot, nothing counted twice
+        return out, obs.snapshot()
     return out

@@ -25,6 +25,9 @@ import io
 import os
 from typing import BinaryIO, Callable, Iterator
 
+from repro import obs
+from repro.obs import trace
+
 from .checksum import verify_digest
 from .errors import ErrorLedger, RecordReadError
 from .http import parse_http_fast
@@ -252,6 +255,11 @@ class FastWARCIterator:
         self._decoder: ReadaheadDecoder | ProcessReadaheadDecoder | None = None
         self.copy_stats = CopyStats()
         self.records_skipped = 0
+        self.records_yielded = 0
+        self._obs_published = False
+        # an externally-shared ledger (tolerant index build) predates this
+        # iterator: publish only the entries added past this watermark
+        self._ledger_base = len(self.error_ledger.entries())
 
         head = source.read(8)
         source.seek(-len(head), io.SEEK_CUR)
@@ -296,6 +304,7 @@ class FastWARCIterator:
             # generator teardown — callers iterating many shards per epoch
             # must not accumulate fds (WarcTokenLoader does exactly that)
             self._stop_decoder()
+            self._publish_obs()
             if self._owned_file is not None:
                 self.close()
 
@@ -316,6 +325,7 @@ class FastWARCIterator:
         decoder thread (and free its ring slots) if one is running, and
         close the underlying file if this iterator opened it."""
         self._stop_decoder()
+        self._publish_obs()
         if self._owned_file is not None and not self._owned_file.closed:
             self._owned_file.close()
 
@@ -324,6 +334,25 @@ class FastWARCIterator:
 
     def __exit__(self, *exc_info) -> None:
         self.close()
+
+    # -- observability ----------------------------------------------------
+    def _publish_obs(self) -> None:
+        """Fold this iterator's terminal counters into the process-default
+        registry (``ingest.*``): CopyStats, records yielded/skipped, and
+        the ledger entries this iterator added. Idempotent — the first of
+        exhaustion/close wins, so double-close never double-counts."""
+        if self._obs_published:
+            return
+        self._obs_published = True
+        reg = obs.registry()
+        reg.fold_counters(self.copy_stats.as_dict(), prefix="ingest.")
+        reg.fold_counters({
+            "records": self.records_yielded,
+            "records_skipped": self.records_skipped,
+            "shards": 1,
+            "ledger_entries":
+                len(self.error_ledger.entries()) - self._ledger_base,
+        }, prefix="ingest.")
 
     # -- fault accounting -------------------------------------------------
     def _ledger(self, offset: int, error_class: str, bytes_skipped: int,
@@ -376,6 +405,7 @@ class FastWARCIterator:
                 if pd is not None:
                     record.verified_payload_digest = verify_digest(
                         record.payload_view(), pd.decode("latin-1"))
+        self.records_yielded += 1
         return record
 
     # -- uncompressed / zstd: pooled-arena zero-copy splitting (default) --
@@ -385,11 +415,14 @@ class FastWARCIterator:
         # borrowed memoryview into it, and the only copies left are the
         # yielded records' (small) header blocks plus the arena-roll
         # tail — all tallied in self.copy_stats (DESIGN.md §9).
+        # tracing attributes fill time via a reader proxy wrapped ONLY when
+        # enabled — the disabled hot loop keeps its direct readinto path
+        raw = trace.timed_reader(self._raw) if trace.enabled() else self._raw
         if self.arena_bytes is not None:
-            rb = RecordBuffer(self._raw, stats=self.copy_stats,
+            rb = RecordBuffer(raw, stats=self.copy_stats,
                               arena_bytes=self.arena_bytes)
         else:
-            rb = RecordBuffer(self._raw, stats=self.copy_stats)
+            rb = RecordBuffer(raw, stats=self.copy_stats)
         types_mask = self._types_mask
         filter_active = self._filter_active
         tolerant = self.tolerant
@@ -635,10 +668,16 @@ class FastWARCIterator:
             yield from self._iter_lz4_arena_lazy(stream, arena)
         elif self.tolerant:
             stats = self.copy_stats
+            traced = trace.enabled()  # once per iterator, not per member
             while True:
                 slot = arena.acquire()
-                item = next_member_tolerant(stream, slot, stats,
-                                            self._ledger)
+                if traced:
+                    with trace.span("ingest.decode_member"):
+                        item = next_member_tolerant(stream, slot, stats,
+                                                    self._ledger)
+                else:
+                    item = next_member_tolerant(stream, slot, stats,
+                                                self._ledger)
                 if item is None:
                     arena.release(slot)
                     return
@@ -653,10 +692,15 @@ class FastWARCIterator:
                     yield record
         else:
             stats = self.copy_stats
+            traced = trace.enabled()
             while True:
                 offset = stream.tell_compressed()
                 slot = arena.acquire()
-                n = stream.next_member_into(slot, stats)
+                if traced:
+                    with trace.span("ingest.decode_member"):
+                        n = stream.next_member_into(slot, stats)
+                else:
+                    n = stream.next_member_into(slot, stats)
                 if n is None:
                     arena.release(slot)
                     return
@@ -704,21 +748,44 @@ class FastWARCIterator:
         get = decoder.get
         release = decoder.release
         record_from_slot = self._record_from_slot
+        traced = trace.enabled()  # once per iterator; spans are per batch
         try:
             while True:
-                item = get()
+                if traced:
+                    with trace.span("ingest.decode_wait"):
+                        item = get()
+                else:
+                    item = get()
                 if item is None:
                     return
                 _, slot, members = item
-                for start, nbytes, offset in members:
-                    record = record_from_slot(slot, start, nbytes, offset)
-                    if record is None:
-                        if tolerant and self._slot_damaged:
-                            self._ledger(
-                                offset, "bad_member", 0,
-                                "member decoded but contains no record")
-                        continue
-                    yield record
+                if traced:
+                    # parse the whole batch inside the span, yield after —
+                    # consumer time must not pollute ingest.parse_batch
+                    batch = []
+                    with trace.span("ingest.parse_batch"):
+                        for start, nbytes, offset in members:
+                            record = record_from_slot(slot, start, nbytes,
+                                                      offset)
+                            if record is None:
+                                if tolerant and self._slot_damaged:
+                                    self._ledger(
+                                        offset, "bad_member", 0,
+                                        "member decoded but contains "
+                                        "no record")
+                                continue
+                            batch.append(record)
+                    yield from batch
+                else:
+                    for start, nbytes, offset in members:
+                        record = record_from_slot(slot, start, nbytes, offset)
+                        if record is None:
+                            if tolerant and self._slot_damaged:
+                                self._ledger(
+                                    offset, "bad_member", 0,
+                                    "member decoded but contains no record")
+                            continue
+                        yield record
                 release(slot)
         finally:
             self._stop_decoder()
@@ -816,6 +883,11 @@ class FastWARCIterator:
         iterator, call ``read_one()`` — exactly one member is decompressed
         and one record parsed; the rest of the archive is never touched.
         """
+        # random-access reads are serving-side: the caller counts them
+        # (gateway.records_fetched); a throwaway iterator publishing
+        # ingest.shards/records per fetch would drown the real sweep
+        # counters in the merged snapshot
+        self._obs_published = True
         return next(iter(self), None)
 
     def _record_from_member(self, data: bytes, offset: int) -> WarcRecord | None:

@@ -53,6 +53,11 @@ try:
 except ImportError:  # pragma: no cover - py>=3.8 everywhere we run
     _shm_mod = None
 
+from repro.obs import trace
+from repro.obs.registry import ObsSnapshot
+from repro.obs.shmstats import (STATS_SLOT_BYTES, StatsSlotReader,
+                                StatsSlotWriter)
+
 from . import lz4 as _lz4
 from .record import scan_header_field_in
 
@@ -1280,10 +1285,38 @@ class _MvSink:
         self.pos = end
 
 
+class _ChildObs:
+    """Decoder-child counter surface: a plain dict published through a
+    seqlock stats slot after every batch (and at EOF/error), so the
+    parent can harvest the child's cumulative ``decoder.*`` counters even
+    if the child is later SIGKILLed. ``writer=None`` (no stats slot, e.g.
+    an old-style spawn) degrades to counting without publishing."""
+
+    __slots__ = ("counters", "_writer")
+
+    def __init__(self, writer: StatsSlotWriter | None) -> None:
+        self.counters = {
+            "decoder.members": 0, "decoder.batches": 0,
+            "decoder.bytes": 0, "decoder.giant_blobs": 0,
+            "decoder.ledger_entries": 0,
+        }
+        self._writer = writer
+
+    def bump(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def publish(self) -> None:
+        if self._writer is not None:
+            self._writer.publish(ObsSnapshot(
+                counters=dict(self.counters),
+                sources=("readahead-decoder",)))
+
+
 def _member_decode_child(src, shm_name: str, slot_bytes: int, slots: int,
                          sem, rfd: int, wfd: int, watermark: int,
                          max_members: int, start_offset: int = 0,
-                         tolerant: bool = False) -> None:
+                         tolerant: bool = False,
+                         stats_off: int = 0) -> None:
     """Child-process main of :class:`ProcessReadaheadDecoder`.
 
     Opens its own view of the source (a path, or forked bytes), inflates
@@ -1313,15 +1346,24 @@ def _member_decode_child(src, shm_name: str, slot_bytes: int, slots: int,
             shm = _shm_mod.SharedMemory(name=shm_name)
         finally:
             resource_tracker.register = orig_register
+        sbuf = shm.buf[stats_off:stats_off + STATS_SLOT_BYTES] \
+            if stats_off else None
+        cobs = _ChildObs(StatsSlotWriter(sbuf) if sbuf is not None else None)
         try:
             if isinstance(stream, GZipStream):
                 _gzip_decode_into_ring(stream, shm, slot_bytes, slots, sem,
-                                       wfd, watermark, max_members, tolerant)
+                                       wfd, watermark, max_members, tolerant,
+                                       cobs)
             else:
                 _member_decode_into_ring(stream, shm, slot_bytes, slots,
                                          sem, wfd, watermark, max_members,
-                                         tolerant)
+                                         tolerant, cobs)
         finally:
+            # memoryview exports must be gone before shm.close()
+            if cobs._writer is not None:
+                cobs._writer.close()
+            if sbuf is not None:
+                sbuf.release()
             shm.close()
     except BaseException as exc:  # attach/open failures etc.
         try:
@@ -1340,7 +1382,8 @@ def _ra_send_error(wfd: int, error: BaseException) -> None:
 
 def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
                              sem, wfd: int, watermark: int,
-                             max_members: int, tolerant: bool = False) -> None:
+                             max_members: int, tolerant: bool = False,
+                             cobs: "_ChildObs | None" = None) -> None:
     """Generic child decode loop: members append to a local bytearray
     batch, then one memcpy into the ring slot (LZ4's decode-into API is
     append-based). gzip uses :func:`_gzip_decode_into_ring` instead,
@@ -1348,6 +1391,8 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
     members resync instead of erroring, shipping a ledger message."""
     from .errors import classify_member_error
 
+    if cobs is None:
+        cobs = _ChildObs(None)
     slot_idx = 0
     local = bytearray()
     eof = False
@@ -1372,10 +1417,12 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
                         _ra_send_ledger(
                             wfd, offset, "truncated_tail",
                             stream.tell_compressed() - offset, repr(exc))
+                        cobs.bump("decoder.ledger_entries")
                         eof = True
                         break
                     _ra_send_ledger(wfd, offset, classify_member_error(exc),
                                     skipped, repr(exc))
+                    cobs.bump("decoder.ledger_entries")
                     continue
                 error = exc
                 break
@@ -1405,15 +1452,23 @@ def _member_decode_into_ring(stream, shm, slot_bytes: int, slots: int,
                 _ra_send(wfd, _RA_BLOB,
                          _RA_BATCH_HDR.pack(0, nbytes, next_off)
                          + table + local)
+                cobs.bump("decoder.giant_blobs")
+            cobs.bump("decoder.members", len(members))
+            cobs.bump("decoder.batches")
+            cobs.bump("decoder.bytes", nbytes)
+            cobs.publish()
         if error is not None:
             _ra_send_error(wfd, error)
+            cobs.publish()
             return
     _ra_send(wfd, _RA_EOF, b"")
+    cobs.publish()
 
 
 def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                            slots: int, sem, wfd: int, watermark: int,
-                           max_members: int, tolerant: bool = False) -> None:
+                           max_members: int, tolerant: bool = False,
+                           cobs: "_ChildObs | None" = None) -> None:
     """gzip child decode loop: members inflate **directly into the ring
     slot** through a :class:`_MvSink` — no local batch buffer, no batch
     memcpy, each output byte written once. A member that outgrows its
@@ -1422,6 +1477,8 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
     the next member magic, and a ledger message ships in-band."""
     from .errors import classify_member_error
 
+    if cobs is None:
+        cobs = _ChildObs(None)
     slot_idx = 0
     eof = False
     decoded = 0
@@ -1451,10 +1508,12 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                         _ra_send_ledger(
                             wfd, offset, "truncated_tail",
                             stream.tell_compressed() - offset, repr(exc))
+                        cobs.bump("decoder.ledger_entries")
                         eof = True
                         break
                     _ra_send_ledger(wfd, offset, classify_member_error(exc),
                                     skipped, repr(exc))
+                    cobs.bump("decoder.ledger_entries")
                     continue
                 error = exc
                 break
@@ -1483,6 +1542,10 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
                      _RA_BATCH_HDR.pack(slot_idx, sink.pos - base,
                                         batch_next) + table)
             slot_idx = (slot_idx + 1) % slots
+            cobs.bump("decoder.members", len(members))
+            cobs.bump("decoder.batches")
+            cobs.bump("decoder.bytes", sink.pos - base)
+            cobs.publish()
         else:
             sem.release()  # nothing landed: hand the slot straight back
         if giant is not None:
@@ -1490,10 +1553,16 @@ def _gzip_decode_into_ring(stream: "GZipStream", shm, slot_bytes: int,
             _ra_send(wfd, _RA_BLOB,
                      _RA_BATCH_HDR.pack(0, len(data), next_off)
                      + _RA_MEMBER.pack(0, len(data), offset) + data)
+            cobs.bump("decoder.members")
+            cobs.bump("decoder.giant_blobs")
+            cobs.bump("decoder.bytes", len(data))
+            cobs.publish()
         if error is not None:
             _ra_send_error(wfd, error)
+            cobs.publish()
             return
     _ra_send(wfd, _RA_EOF, b"")
+    cobs.publish()
 
 
 class ProcessReadaheadDecoder:
@@ -1583,7 +1652,11 @@ class ProcessReadaheadDecoder:
         """
         from .. import reaper as _reaper
 
-        self._shm = _reaper.create_segment(self._slot_bytes * self._slots)
+        # ring slots plus one trailing seqlock stats slot the child
+        # publishes its cumulative decoder.* counters into (harvested by
+        # the parent at teardown — survives a SIGKILLed child)
+        stats_off = self._slot_bytes * self._slots
+        self._shm = _reaper.create_segment(stats_off + STATS_SLOT_BYTES)
         self._rfd = wfd = None
         try:
             self._sem = self._ctx.Semaphore(self._slots)
@@ -1593,7 +1666,7 @@ class ProcessReadaheadDecoder:
                 args=(self._src, self._shm.name, self._slot_bytes,
                       self._slots, self._sem, self._rfd, wfd,
                       self._watermark, self._max_members, self._resume,
-                      self._tolerant),
+                      self._tolerant, stats_off),
                 name="warc-readahead-decoder", daemon=True)
             import warnings
 
@@ -1634,6 +1707,25 @@ class ProcessReadaheadDecoder:
         _reaper.unregister(self._shm)
         self._shm = None
 
+    def _harvest_stats(self) -> None:
+        """Absorb the child's last published ``decoder.*`` counters into
+        the process-default registry. Best effort: a child killed between
+        publishes loses only its in-flight batch's counts; a respawned
+        child re-decoding from the resume cursor may re-count members the
+        dead child decoded but never shipped."""
+        if self._shm is None:
+            return
+        stats_off = self._slot_bytes * self._slots
+        view = self._shm.buf[stats_off:stats_off + STATS_SLOT_BYTES]
+        reader = StatsSlotReader(view)
+        snap = reader.read()
+        reader.close()
+        view.release()  # export must be gone before close/unlink
+        if snap is not None:
+            from repro import obs
+
+            obs.registry().absorb(snap)
+
     def _teardown_child(self) -> None:
         if self.process.is_alive():
             self.process.terminate()
@@ -1644,6 +1736,7 @@ class ProcessReadaheadDecoder:
             except OSError:  # pragma: no cover - teardown race
                 pass
             self._rfd = None
+        self._harvest_stats()
         self._unlink_segment()
 
     def _recover(self, reason: str) -> None:
@@ -1661,6 +1754,9 @@ class ProcessReadaheadDecoder:
                 f"readahead decoder process {reason}; respawn budget "
                 f"({self._max_respawns}) exhausted")
         self._respawns += 1
+        from repro import obs
+
+        obs.registry().counter_add("decoder.respawns")
         delay = min(self._BACKOFF * (2 ** (self._respawns - 1)),
                     self._BACKOFF_CAP)
         self._teardown_child()
@@ -1729,7 +1825,11 @@ class ProcessReadaheadDecoder:
             slot = self._arena.acquire()
             if kind == _RA_BATCH:
                 base = slot_idx * self._slot_bytes
-                slot += self._shm.buf[base:base + nbytes]
+                if trace.enabled():  # per batch, never per record
+                    with trace.span("ingest.arena_land"):
+                        slot += self._shm.buf[base:base + nbytes]
+                else:
+                    slot += self._shm.buf[base:base + nbytes]
                 self._sem.release()  # ring slot free before parsing starts
             else:  # _RA_BLOB: oversized batch travelled in the pipe
                 slot += memoryview(payload)[table_end:]

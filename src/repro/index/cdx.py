@@ -136,6 +136,9 @@ class CdxIndex:
         # In-memory only — not persisted by save()/load(); a reloaded
         # index starts with a clean slate.
         self.errors: list = []
+        # observability: build_index attaches the merged ObsSnapshot of
+        # its sweep (parent + pool + workers). In-memory only, like errors.
+        self.obs = None
         self._uris: np.ndarray | None = None
         self._mimes: np.ndarray | None = None
 
@@ -552,6 +555,12 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
     ``supervise`` (with ``workers > 0``) retries worker deaths; a shard
     that keeps killing workers is dropped from the merge and reported as
     one ``shard_quarantined`` ledger entry covering the whole file.
+
+    The returned index carries the build's merged observability
+    snapshot on ``index.obs`` (:class:`~repro.obs.ObsSnapshot`): parent
+    registry counters (kernel dispatches, pad waste, serial-sweep
+    ingest stats) plus, for worker builds, pool transport/supervisor
+    counters and every worker's published ``ingest.*`` counters.
     """
     import functools
 
@@ -570,7 +579,8 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
                               fused=fused, readahead=readahead,
                               tolerant=tolerant)
     paths = [str(p) for p in paths]
-    partials = map_shards(sweep, paths, workers=workers, supervise=supervise)
+    partials, obs_snap = map_shards(sweep, paths, workers=workers,
+                                    supervise=supervise, with_obs=True)
     live: list[CdxIndex] = []
     dropped: list[LedgerEntry] = []
     for path, part in zip(paths, partials):
@@ -587,6 +597,7 @@ def build_index(paths, *, workers: int = 0, sig_bits: int = SIG_BITS,
         live.append(part)
     merged = CdxIndex.merge(live)
     merged.errors.extend(dropped)
+    merged.obs = obs_snap
     return merged
 
 

@@ -10,6 +10,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
+from repro.obs.kernels import record_dispatch
 from .adler32 import BLOCK, MOD, adler32_partials_batch
 
 __all__ = ["adler32", "adler32_batch", "combine_partials"]
@@ -58,6 +59,9 @@ def adler32_batch(payloads, *, block: int = BLOCK,
         for row, i in enumerate(idxs):
             padded[row, :bufs[i].size] = bufs[i]
         lengths = np.asarray([bufs[i].size for i in idxs], np.int64)
+        record_dispatch("adler32_batch", width=width, rows=len(idxs),
+                        padded_rows=len(idxs),
+                        useful_bytes=int(lengths.sum()))
         s, t = adler32_partials_batch(jnp.asarray(padded), block=block,
                                       interpret=interpret)
         out[idxs] = combine_partials(np.asarray(s), np.asarray(t), lengths,

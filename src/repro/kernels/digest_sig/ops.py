@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.kernels.adler32.ops import combine_partials
 from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
+from repro.obs.kernels import record_dispatch
 from .digest_sig import BLOCK, HPAD, digest_sig_partials_batch, group_rows
 
 __all__ = ["digest_signature_batch"]
@@ -80,6 +81,9 @@ def digest_signature_batch(payloads, *, bits: int | None = None,
         for row, i in enumerate(idxs):
             padded[row, :bufs[i].size] = bufs[i]
         lengths = np.asarray([bufs[i].size for i in idxs], np.int64)
+        record_dispatch("digest_signature_batch", width=width,
+                        rows=len(idxs), padded_rows=padded.shape[0],
+                        useful_bytes=int(lengths.sum()))
         s, t, h = digest_sig_partials_batch(jnp.asarray(padded), n=n,
                                             block=block, interpret=interpret)
         live = len(idxs)

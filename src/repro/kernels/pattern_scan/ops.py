@@ -15,6 +15,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
+from repro.obs.kernels import record_dispatch
 from .pattern_scan import (
     DEFAULT_BLOCK,
     MAX_PATTERN,
@@ -95,6 +96,9 @@ def find_pattern_mask_batch(bufs, pattern, *, block: int = DEFAULT_BLOCK,
         rows = [arrs[i] for i in idxs]
         rows += [empty] * (_pad_rows(len(rows)) - len(rows))
         padded, halos = _pack(rows, block, width)
+        record_dispatch("find_pattern_mask_batch", width=width,
+                        rows=len(idxs), padded_rows=len(rows),
+                        useful_bytes=sum(arrs[i].size for i in idxs))
         masks = pattern_scan_batch(jnp.asarray(padded), jnp.asarray(halos),
                                    jnp.asarray(pat_vec), pat_len=plen,
                                    block=block, interpret=interpret)
@@ -142,6 +146,9 @@ def find_pattern_masks_multi(bufs, patterns, *, block: int = DEFAULT_BLOCK,
         pat_mat = np.stack([pats[i] for i in idxs] + [pad_pat] * n_pad)
         lens = np.asarray([[plens[i]] for i in idxs] + [[1]] * n_pad,
                           np.int32)
+        record_dispatch("find_pattern_masks_multi", width=width,
+                        rows=len(idxs), padded_rows=len(rows),
+                        useful_bytes=sum(arrs[i].size for i in idxs))
         masks = pattern_scan_batch_multi(
             jnp.asarray(padded), jnp.asarray(halos), jnp.asarray(pat_mat),
             jnp.asarray(lens), max_len=max(plens[i] for i in idxs),

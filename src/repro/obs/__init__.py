@@ -1,0 +1,70 @@
+"""``repro.obs`` — unified observability layer.
+
+One process-default :class:`~repro.obs.registry.Registry` holds counters,
+gauges and bounded-reservoir histograms for everything in this process:
+the zero-copy parser's CopyStats/ErrorLedger totals, trace spans
+(``repro.obs.trace``, disabled by default), and the always-on kernel
+dispatch profiler (``repro.obs.kernels``). Child processes publish their
+own registries through shared-memory stats blocks
+(``repro.obs.shmstats``); the pool supervisor and the readahead decoder
+teardown harvest them, so a merged :class:`ObsSnapshot` spans the whole
+process tree. Export as JSON (:meth:`ObsSnapshot.to_json`), Prometheus
+text (:func:`render_prometheus`), or via ``python -m repro.obs.dump``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+from repro.obs.registry import (
+    HISTOGRAM_CAP,
+    ObsSnapshot,
+    Registry,
+    percentile,
+    render_prometheus,
+)
+from repro.obs import trace
+
+__all__ = [
+    "HISTOGRAM_CAP",
+    "ObsSnapshot",
+    "Registry",
+    "merge",
+    "percentile",
+    "registry",
+    "render_prometheus",
+    "reset",
+    "set_registry",
+    "snapshot",
+    "trace",
+]
+
+_default = Registry(source="parent")
+
+
+def registry() -> Registry:
+    """The process-default registry every always-on producer writes to."""
+    return _default
+
+
+def set_registry(reg: Registry) -> Registry:
+    """Swap the process-default registry (pool workers install a fresh
+    one after fork so inherited parent counters don't double-count).
+    Returns the previous registry."""
+    global _default
+    prev = _default
+    _default = reg
+    return prev
+
+
+def snapshot(source: Optional[str] = None) -> ObsSnapshot:
+    """Snapshot the process-default registry."""
+    return _default.snapshot(source=source)
+
+
+def merge(snaps: Iterable[ObsSnapshot]) -> ObsSnapshot:
+    return ObsSnapshot.merge(snaps)
+
+
+def reset() -> None:
+    """Clear the process-default registry (tests and benches)."""
+    _default.reset()

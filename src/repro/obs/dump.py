@@ -1,0 +1,110 @@
+"""Snapshot export CLI: ``python -m repro.obs.dump``.
+
+Three modes:
+
+* ``python -m repro.obs.dump snapshot.json`` — render a saved
+  :meth:`~repro.obs.ObsSnapshot.as_dict` JSON file (e.g. the ``obs``
+  section of a ``BENCH_*.json``) as JSON or Prometheus text.
+* ``python -m repro.obs.dump --ingest SHARD...`` — sweep the given WARC
+  shards with the zero-copy parser and dump the resulting process
+  snapshot (ingest counters, kernel dispatches if any fired).
+* ``python -m repro.obs.dump --demo`` — one synthetic ingest-to-serve
+  run: gzip shards are written, swept serially (readahead decoder
+  child), indexed with a 2-worker pool, and queried through an
+  :class:`~repro.serve.ArchiveGateway`; the printed snapshot is the
+  merge of every layer — parent, pool workers, decoder child, gateway —
+  which is also what CI uploads as its Prometheus artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.registry import ObsSnapshot, render_prometheus
+
+
+def _demo_snapshot() -> ObsSnapshot:
+    """Synthetic ingest-to-serve run; returns the full merged snapshot."""
+    import os
+    import tempfile
+
+    from repro import obs
+    from repro.core.warc.fastwarc import FastWARCIterator
+    from repro.data.synth import CorpusSpec, write_corpus
+    from repro.index import QueryRequest, build_index
+    from repro.serve import ArchiveGateway
+
+    with tempfile.TemporaryDirectory(prefix="repro-obs-demo-") as tmp:
+        paths = []
+        for i in range(3):
+            p = os.path.join(tmp, f"shard-{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=40, seed=i), "gzip")
+            paths.append(p)
+        # serial readahead sweep: decode runs in a child process whose
+        # decoder.* counters are harvested into the parent registry
+        for _ in FastWARCIterator(paths[0]):
+            pass
+        # pooled index build: worker ingest.* counters flow through the
+        # pool's stats slots and are absorbed into the process registry
+        # at pool close (index.obs is that same snapshot)
+        index = build_index(paths, workers=2)
+        with ArchiveGateway(index, cache_bytes=1 << 20) as gw:
+            for pattern in (b"nginx", b"crawl", b"absent-needle!"):
+                gw.submit(QueryRequest(pattern, top_k=3)).result(600)
+            # gw.snapshot() = process registry (parent + absorbed decoder
+            # child + absorbed pool workers) merged with the gateway's
+            # private registry: already the whole tree, counted once
+            return gw.snapshot()
+
+
+def _ingest_snapshot(paths) -> ObsSnapshot:
+    from repro import obs
+    from repro.core.warc.fastwarc import FastWARCIterator
+
+    for p in paths:
+        for _ in FastWARCIterator(p):
+            pass
+    return obs.snapshot()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.dump",
+        description="Render repro observability snapshots.")
+    ap.add_argument("snapshot", nargs="?", default=None,
+                    help="saved ObsSnapshot JSON file to render")
+    ap.add_argument("--ingest", nargs="+", metavar="SHARD", default=None,
+                    help="sweep these WARC shards and dump the snapshot")
+    ap.add_argument("--demo", action="store_true",
+                    help="synthetic ingest-to-serve run (no inputs needed)")
+    ap.add_argument("--format", choices=("json", "prom"), default="json")
+    ap.add_argument("--out", default=None,
+                    help="write here instead of stdout")
+    args = ap.parse_args(argv)
+
+    if sum(bool(x) for x in (args.snapshot, args.ingest, args.demo)) != 1:
+        ap.error("choose exactly one of: a snapshot file, --ingest, --demo")
+    if args.demo:
+        snap = _demo_snapshot()
+    elif args.ingest:
+        snap = _ingest_snapshot(args.ingest)
+    else:
+        with open(args.snapshot, "r", encoding="utf-8") as f:
+            data = json.load(f)
+        if "counters" not in data and isinstance(data.get("obs"), dict):
+            data = data["obs"]  # a BENCH_*.json: unwrap its obs section
+        snap = ObsSnapshot.from_dict(data)
+
+    text = render_prometheus(snap) if args.format == "prom" \
+        else snap.to_json(indent=2) + "\n"
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(text)
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

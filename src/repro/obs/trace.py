@@ -1,0 +1,152 @@
+"""Stage tracing for the ingest hot path.
+
+Spans are recorded as duration histograms (``span.<name>_s``) plus a
+count counter in the process-default registry. Tracing is **off by
+default** and the instrumented call sites are written so the disabled
+cost is one truth-test per *batch* (or per iterator construction), never
+per record — the zero-copy loop's ≤2% overhead gate in
+``benchmarks/ingest_bench.py`` holds the line.
+
+Span names in use across the repo:
+
+=========================  =================================================
+``ingest.fill``            raw reads refilling the uncompressed RecordBuffer
+``ingest.decode_member``   inline (non-readahead) member decode-into-arena
+``ingest.decode_wait``     parse loop blocked waiting on the readahead
+                           decoder (small = good overlap)
+``ingest.arena_land``      memcpy landing a decoded shm batch in the arena
+``ingest.parse_batch``     parsing the records of one landed member batch
+``kernel.dispatch``        one Pallas kernel dispatch (see obs.kernels)
+=========================  =================================================
+"""
+from __future__ import annotations
+
+import os
+from time import perf_counter
+from typing import Iterator
+
+__all__ = ["add", "add_many", "count", "enable", "enabled", "span",
+           "timed_reader"]
+
+_ENABLED = os.environ.get("REPRO_OBS_TRACE", "") not in ("", "0")
+
+
+def enabled() -> bool:
+    """Is span recording on? Call sites capture this once per iterator or
+    per batch — never per record."""
+    return _ENABLED
+
+
+def enable(on: bool = True) -> bool:
+    """Turn span recording on/off; returns the previous setting."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(on)
+    return prev
+
+
+def add(name: str, seconds: float, n: int = 1) -> None:
+    """Record a span duration directly (for call sites that time with
+    ``perf_counter`` themselves)."""
+    from repro import obs
+
+    reg = obs.registry()
+    reg.observe(f"span.{name}_s", seconds)
+    if n:
+        reg.counter_add(f"span.{name}.count", n)
+
+
+def add_many(name: str, durations) -> None:
+    """Record a batch of span durations under one registry lock."""
+    if not durations:
+        return
+    from repro import obs
+
+    reg = obs.registry()
+    reg.observe_many(f"span.{name}_s", durations)
+    reg.counter_add(f"span.{name}.count", len(durations))
+
+
+def count(name: str, n: int = 1) -> None:
+    from repro import obs
+
+    obs.registry().counter_add(name, n)
+
+
+class span:
+    """``with trace.span("ingest.parse_batch"): ...`` — records even when
+    tracing was enabled after construction; guard with
+    ``trace.enabled()`` at the call site for the zero-cost path."""
+
+    __slots__ = ("name", "_t0")
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __enter__(self) -> "span":
+        self._t0 = perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        add(self.name, perf_counter() - self._t0)
+
+
+class timed_reader:
+    """File-object proxy that attributes ``read``/``readinto`` time to a
+    span. Only ever wrapped around the raw source when tracing is
+    enabled, so the disabled path never sees an extra call frame.
+
+    Reads on the zero-copy loop can be per-record-frequent, so durations
+    accumulate locally and flush to the registry in batches of
+    ``_FLUSH_EVERY`` (one lock acquisition per batch) and at EOF — the
+    ≤2% tracing-tax gate in ``benchmarks/ingest_bench.py`` is what this
+    buffering buys. A generator torn down mid-stream can strand up to
+    one unflushed batch; span *counts* are best-effort by design."""
+
+    _FLUSH_EVERY = 64
+
+    __slots__ = ("_f", "_name", "_pending")
+
+    def __init__(self, f, name: str = "ingest.fill"):
+        self._f = f
+        self._name = name
+        self._pending: list = []
+
+    def _note(self, dt: float, eof: bool) -> None:
+        self._pending.append(dt)
+        if eof or len(self._pending) >= self._FLUSH_EVERY:
+            self.flush()
+
+    def flush(self) -> None:
+        if self._pending:
+            add_many(self._name, self._pending)
+            self._pending = []
+
+    def read(self, n: int = -1):
+        t0 = perf_counter()
+        out = self._f.read(n)
+        self._note(perf_counter() - t0, not out)
+        return out
+
+    def readinto(self, b) -> int:
+        t0 = perf_counter()
+        out = self._f.readinto(b)
+        self._note(perf_counter() - t0, not out)
+        return out
+
+    def __getattr__(self, attr):
+        return getattr(self._f, attr)
+
+
+def timed_iter(it: Iterator, name: str) -> Iterator:
+    """Yield from ``it``, attributing the time blocked in ``next()`` to
+    span ``name`` (used for decoder get-waits)."""
+    while True:
+        t0 = perf_counter()
+        try:
+            item = next(it)
+        except StopIteration:
+            add(name, perf_counter() - t0)
+            return
+        add(name, perf_counter() - t0)
+        yield item

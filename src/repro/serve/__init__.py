@@ -5,7 +5,8 @@
   with backpressure, request coalescing, cross-request kernel batching
   and a byte-budgeted record cache over :mod:`repro.index`;
 * :mod:`.cache` / :mod:`.metrics` — the gateway's payload LRU and its
-  measurement surface.
+  measurement surface (a facade over :mod:`repro.obs` since PR 7;
+  ``ArchiveGateway.snapshot()`` exports a mergeable ``ObsSnapshot``).
 
 ``.engine`` pulls in jax + the model stack, so it is imported lazily by
 its users rather than here; the archive gateway imports light.

@@ -199,6 +199,18 @@ class ArchiveGateway:
     def pending(self) -> int:
         return self._queue.qsize()
 
+    def snapshot(self):
+        """Observability hook: one merged :class:`~repro.obs.ObsSnapshot`
+        — this gateway's private metrics registry + cache counters
+        (source ``"gateway"``) merged with the process-default registry
+        (kernel dispatch profile, ingest counters, harvested children).
+        For the raw dict surface keep using ``gateway.metrics.snapshot()``.
+        """
+        from repro import obs
+
+        return obs.snapshot().merged_with(
+            self.metrics.obs_snapshot(self.cache))
+
     # -- scheduler -------------------------------------------------------
     def _loop(self) -> None:
         while True:

@@ -3,32 +3,32 @@
 The ISSUE's acceptance criterion is not "the gateway feels faster" but
 "fewer kernel dispatches per request, observable in metrics" — so the
 gateway counts everything that matters (requests, coalesced waiters,
-unique scans, kernel dispatches, records/bytes scanned, fetches) and
-keeps every per-request latency so p50/p99 are exact, not bucketed
-(serving-bench scale is thousands of requests, not millions; a
-reservoir can replace the list if that ever changes).
+unique scans, kernel dispatches, records/bytes scanned, fetches).
+
+Since PR 7 this is a thin facade over :class:`repro.obs.Registry` — the
+same counter/histogram machinery the ingest path, the worker pools and
+the kernel profiler publish through — instead of its own lock + dict +
+latency list. The unbounded per-request latency list is gone: latencies
+land in the registry's bounded reservoir histogram (exact below
+``repro.obs.HISTOGRAM_CAP`` samples, deterministic Algorithm-R sampling
+beyond), which is what the PR 3 docstring deferred to "if that ever
+changes". p50/p99 keep the same linear interpolation, so numbers stay
+comparable.
+
+Each ``GatewayMetrics`` owns a private registry (source ``"gateway"``):
+two gateways in one process never cross-count, and
+:meth:`obs_snapshot` exports the whole surface as a mergeable
+:class:`~repro.obs.ObsSnapshot`.
 
 Thread-safe: submit-side counters race with the scheduler thread.
 """
 from __future__ import annotations
 
-import threading
+from repro.obs.registry import ObsSnapshot, Registry, percentile
 
 __all__ = ["GatewayMetrics", "percentile"]
 
-
-def percentile(values: list[float], q: float) -> float:
-    """Linear-interpolated percentile (``q`` in [0, 100]) of a list."""
-    if not values:
-        return 0.0
-    data = sorted(values)
-    if len(data) == 1:
-        return data[0]
-    rank = (q / 100.0) * (len(data) - 1)
-    lo = int(rank)
-    hi = min(lo + 1, len(data) - 1)
-    frac = rank - lo
-    return data[lo] * (1.0 - frac) + data[hi] * frac
+_LATENCY_HIST = "gateway.latency_s"
 
 
 class GatewayMetrics:
@@ -52,26 +52,29 @@ class GatewayMetrics:
         "quarantined_rows",    # candidate rows skipped as unreadable
     )
 
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._counts = {name: 0 for name in self._COUNTERS}
-        self._latencies: list[float] = []
+    def __init__(self, registry: Registry | None = None) -> None:
+        self._reg = registry if registry is not None \
+            else Registry(source="gateway")
+        # declare every counter up front: count()/snapshot() report 0 for
+        # untouched counters instead of KeyError/absence
+        for name in self._COUNTERS:
+            self._reg.counter_add(name, 0)
+
+    @property
+    def registry(self) -> Registry:
+        return self._reg
 
     def inc(self, name: str, n: int = 1) -> None:
-        with self._lock:
-            self._counts[name] += n
+        self._reg.counter_add(name, n)
 
     def observe_latency(self, seconds: float) -> None:
-        with self._lock:
-            self._latencies.append(seconds)
+        self._reg.observe(_LATENCY_HIST, seconds)
 
     def count(self, name: str) -> int:
-        with self._lock:
-            return self._counts[name]
+        return self._reg.counter(name)
 
     def latency_s(self, q: float) -> float:
-        with self._lock:
-            return percentile(self._latencies, q)
+        return self._reg.quantile(_LATENCY_HIST, q)
 
     def snapshot(self, cache=None) -> dict:
         """One coherent view: raw counters + the derived headline rates.
@@ -79,16 +82,34 @@ class GatewayMetrics:
         ``cache`` — optional :class:`repro.serve.cache.RecordCache`; its
         counters are folded in under ``cache_*`` keys.
         """
-        with self._lock:
-            out: dict = dict(self._counts)
-            lat = list(self._latencies)
+        snap = self._reg.snapshot()
+        out: dict = {name: snap.counter(name) for name in self._COUNTERS}
         responses = max(out["responses"], 1)
-        out["latency_p50_ms"] = percentile(lat, 50) * 1e3
-        out["latency_p99_ms"] = percentile(lat, 99) * 1e3
+        out["latency_p50_ms"] = snap.quantile(_LATENCY_HIST, 50) * 1e3
+        out["latency_p99_ms"] = snap.quantile(_LATENCY_HIST, 99) * 1e3
         out["coalesce_rate"] = out["coalesced"] / max(out["requests"], 1)
         out["dispatches_per_request"] = out["kernel_dispatches"] / responses
         out["records_scanned_per_request"] = out["records_scanned"] / responses
         if cache is not None:
             for key, value in cache.snapshot().items():
                 out[f"cache_{key}"] = value
+        return out
+
+    def obs_snapshot(self, cache=None) -> ObsSnapshot:
+        """The same surface as a mergeable :class:`ObsSnapshot`, counters
+        prefixed ``gateway.``; cache counters fold in as
+        ``gateway.cache.*``."""
+        raw = self._reg.snapshot()
+        out = ObsSnapshot(sources=("gateway",))
+        out.counters = {f"gateway.{k}": v for k, v in raw.counters.items()}
+        out.gauges = {f"gateway.{k}": v for k, v in raw.gauges.items()}
+        out.histograms = dict(raw.histograms)  # already gateway.-prefixed
+        if cache is not None:
+            for key, value in cache.snapshot().items():
+                if isinstance(value, float):
+                    out.gauges[f"gateway.cache.{key}"] = value
+                elif isinstance(value, int):
+                    out.counters[f"gateway.cache.{key}"] = value
+                # non-numeric cache fields (e.g. the policy name) have no
+                # counter/gauge representation and are skipped
         return out

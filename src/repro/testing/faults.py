@@ -150,6 +150,11 @@ def _armed(var: str, latch_dir: str, spec_tail: str):
     latch = os.path.join(str(latch_dir), f"fault-latch-{uuid.uuid4().hex}")
     prev = os.environ.get(var)
     os.environ[var] = f"{latch}:{spec_tail}"
+    # observability: armed faults are themselves counted, so a merged
+    # snapshot from a fault-injection run says which faults were live
+    from repro import obs
+
+    obs.registry().counter_add(f"faults.armed.{var}")
     try:
         yield latch
     finally:

@@ -1,0 +1,462 @@
+"""Observability suite (``pytest -m obs``): the ISSUE 7 layer end to end.
+
+Covers the registry's concurrency and determinism contracts, the seqlock
+shared-memory stats slots, cross-process harvest through the pool (alive
+and fault-killed workers), the tracing tax gate, and the headline
+acceptance run: one ingest-to-serve pass producing a single merged
+snapshot whose counters come from the parent, ≥2 pool workers, the
+readahead decoder child and the gateway — each counted exactly once.
+"""
+import glob
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro import obs
+from repro.core.parallel import map_shards
+from repro.core.warc import FastWARCIterator
+from repro.data.synth import CorpusSpec, generate_warc, write_corpus
+from repro.obs import trace
+from repro.obs.kernels import pad_waste_report
+from repro.obs.registry import (
+    HISTOGRAM_CAP,
+    ObsSnapshot,
+    Registry,
+    percentile,
+    render_prometheus,
+)
+from repro.obs.shmstats import STATS_SLOT_BYTES, StatsSlotReader, StatsSlotWriter
+from repro.testing.faults import arm_worker_kill
+
+pytestmark = pytest.mark.obs
+
+
+@pytest.fixture(autouse=True)
+def _fresh_registry():
+    """Isolate every test behind a fresh process-default registry."""
+    prev = obs.set_registry(Registry(source="parent"))
+    yield
+    obs.set_registry(prev)
+
+
+def _shm_segments() -> set:
+    return set(glob.glob("/dev/shm/repro-shm-*"))
+
+
+# -- registry ------------------------------------------------------------
+
+def test_counters_exact_under_threads():
+    reg = Registry()
+    threads = [threading.Thread(target=lambda: [reg.counter_add("hits")
+                                                for _ in range(5000)])
+               for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.counter("hits") == 40000
+
+
+def test_histograms_exact_under_threads():
+    reg = Registry()
+
+    def observe(lo):
+        for i in range(2000):
+            reg.observe("lat", float(lo + i))
+
+    threads = [threading.Thread(target=observe, args=(k * 2000,))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # 8000 observations exceed the cap: count is exact, reservoir bounded
+    assert reg.hist_count("lat") == 8000
+    snap = reg.snapshot()
+    assert len(snap.histograms["lat"]["samples"]) == HISTOGRAM_CAP
+    assert snap.histograms["lat"]["min"] == 0.0
+    assert snap.histograms["lat"]["max"] == 7999.0
+
+
+def test_reservoir_deterministic():
+    """Same name + same observation sequence => identical reservoir."""
+    a, b = Registry(), Registry()
+    for i in range(3 * HISTOGRAM_CAP):
+        v = float((i * 2654435761) % 100000)
+        a.observe("lat_s", v)
+        b.observe("lat_s", v)
+    sa = a.snapshot().histograms["lat_s"]
+    sb = b.snapshot().histograms["lat_s"]
+    assert sa["samples"] == sb["samples"]
+    assert sa["count"] == 3 * HISTOGRAM_CAP
+    assert a.quantile("lat_s", 50) == b.quantile("lat_s", 50)
+
+
+def test_percentile_interpolation():
+    assert percentile([], 99) == 0.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+
+
+# -- snapshots: merge determinism ----------------------------------------
+
+def _snap(counters, gauges=(), source="parent", hist_vals=()):
+    s = ObsSnapshot(sources=(source,))
+    s.counters = dict(counters)
+    s.gauges = dict(gauges)
+    if hist_vals:
+        vals = sorted(hist_vals)
+        s.histograms["h"] = {"count": len(vals), "sum": sum(vals),
+                             "min": vals[0], "max": vals[-1],
+                             "samples": list(vals)}
+    return s
+
+
+def test_merge_sums_counters_maxes_gauges_dedups_sources():
+    a = _snap({"x": 1, "y": 2}, {"g": 1.0}, "parent")
+    b = _snap({"x": 10}, {"g": 3.0}, "worker-0.1")
+    c = _snap({"y": 5}, {"g": 2.0}, "parent")
+    m = ObsSnapshot.merge([a, b, c])
+    assert m.counters == {"x": 11, "y": 7}
+    assert m.gauges == {"g": 3.0}
+    assert m.sources == ("parent", "worker-0.1")
+
+
+def test_merge_order_independent():
+    snaps = [_snap({"x": i}, {"g": float(i)}, f"w{i}",
+                   hist_vals=[float(j + i) for j in range(10)])
+             for i in range(5)]
+    fwd = ObsSnapshot.merge(snaps)
+    rev = ObsSnapshot.merge(list(reversed(snaps)))
+    assert fwd.counters == rev.counters
+    assert fwd.gauges == rev.gauges
+    assert fwd.histograms["h"]["count"] == rev.histograms["h"]["count"]
+    assert fwd.histograms["h"]["samples"] == rev.histograms["h"]["samples"]
+    assert sorted(fwd.sources) == sorted(rev.sources)
+
+
+def test_merge_decimates_but_keeps_endpoints():
+    a = _snap({}, hist_vals=[float(i) for i in range(HISTOGRAM_CAP)])
+    b = _snap({}, hist_vals=[float(i) + 0.5 for i in range(HISTOGRAM_CAP)],
+              source="worker-0.1")
+    m = a.merged_with(b)
+    h = m.histograms["h"]
+    assert h["count"] == 2 * HISTOGRAM_CAP
+    assert len(h["samples"]) == HISTOGRAM_CAP
+    assert h["samples"][0] == 0.0 and h["min"] == 0.0
+    assert h["samples"][-1] == HISTOGRAM_CAP - 0.5
+    assert h["max"] == HISTOGRAM_CAP - 0.5
+
+
+def test_absorb_equals_merge():
+    """Registry.absorb must follow the exact merged_with rules."""
+    child = _snap({"x": 3}, {"g": 9.0}, "worker-1.1",
+                  hist_vals=[1.0, 2.0, 3.0])
+    reg = Registry(source="parent")
+    reg.counter_add("x", 1)
+    reg.observe("h", 10.0)
+    base = reg.snapshot()
+    reg.absorb(child)
+    got = reg.snapshot()
+    want = base.merged_with(child)
+    assert got.counters == want.counters
+    assert got.gauges == want.gauges
+    assert got.histograms["h"]["count"] == want.histograms["h"]["count"]
+    assert sorted(got.histograms["h"]["samples"]) == \
+        sorted(want.histograms["h"]["samples"])
+    assert set(got.sources) == set(want.sources)
+
+
+def test_json_and_prometheus_render():
+    reg = Registry(source="parent")
+    reg.counter_add("ingest.records", 42)
+    reg.gauge_set("pool.heartbeat_lag_s", 0.25)
+    for v in (0.001, 0.002, 0.003):
+        reg.observe("span.ingest.fill_s", v)
+    snap = reg.snapshot()
+    d = json.loads(snap.to_json())
+    assert d["counters"]["ingest.records"] == 42
+    assert d["histograms"]["span.ingest.fill_s"]["count"] == 3
+    back = ObsSnapshot.from_dict(d)
+    assert back.counters == snap.counters
+    assert back.gauges == snap.gauges
+    text = render_prometheus(snap)
+    assert "repro_ingest_records 42" in text
+    assert 'repro_obs_source{source="parent"} 1' in text
+    assert 'repro_span_ingest_fill_s{quantile="0.5"} 0.002' in text
+    assert "repro_span_ingest_fill_s_count 3" in text
+
+
+def test_dump_cli_renders_snapshot_file(tmp_path):
+    from repro.obs.dump import main
+
+    reg = Registry()
+    reg.counter_add("ingest.records", 7)
+    path = tmp_path / "snap.json"
+    path.write_text(reg.snapshot().to_json())
+    out = tmp_path / "snap.prom"
+    assert main([str(path), "--format", "prom", "--out", str(out)]) == 0
+    assert "repro_ingest_records 7" in out.read_text()
+    # a BENCH_*.json wrapper (obs nested under "obs") unwraps
+    wrapped = tmp_path / "bench.json"
+    wrapped.write_text(json.dumps({"bench": "ingest", "rows": [],
+                                   "obs": json.loads(path.read_text())}))
+    assert main([str(wrapped), "--format", "prom", "--out", str(out)]) == 0
+    assert "repro_ingest_records 7" in out.read_text()
+
+
+# -- shm stats slots ------------------------------------------------------
+
+def test_stats_slot_roundtrip_and_torn_frames():
+    buf = bytearray(STATS_SLOT_BYTES)
+    reader = StatsSlotReader(buf)
+    assert reader.read() is None  # never written
+    writer = StatsSlotWriter(buf)
+    snap = _snap({"decoder.members": 9}, source="readahead-decoder")
+    assert writer.publish(snap)
+    got = reader.read()
+    assert got.counters == {"decoder.members": 9}
+    assert got.sources == ("readahead-decoder",)
+    # torn frame: odd seq marker (writer died mid-publish) is skipped
+    buf[0] |= 1
+    assert reader.read() is None
+    # a successor writer recovers from the stale odd marker
+    writer2 = StatsSlotWriter(buf)
+    assert writer2.publish(_snap({"decoder.members": 11},
+                                 source="readahead-decoder"))
+    assert reader.read().counters["decoder.members"] == 11
+
+
+def test_stats_slot_oversize_drops():
+    buf = bytearray(1024)
+    writer = StatsSlotWriter(buf)
+    big = _snap({f"counter.{i}": i for i in range(2000)})
+    assert not writer.publish(big)
+    assert writer.oversize_drops == 1
+    assert StatsSlotReader(buf).read() is None  # nothing half-written
+    assert writer.publish(_snap({"ok": 1}))  # next smaller publish lands
+
+
+# -- tracing --------------------------------------------------------------
+
+def test_span_and_timed_reader_accounting(tmp_path):
+    prev = trace.enable(True)
+    try:
+        with trace.span("ingest.parse_batch"):
+            time.sleep(0.01)
+        data = generate_warc(CorpusSpec(n_pages=5, seed=3), "none")
+        for _ in FastWARCIterator(data, parse_http=True):
+            pass
+    finally:
+        trace.enable(prev)
+    snap = obs.snapshot()
+    assert snap.counter("span.ingest.parse_batch.count") == 1
+    assert snap.quantile("span.ingest.parse_batch_s", 50) >= 0.01
+    # the uncompressed loop attributed its refills via the reader proxy
+    assert snap.counter("span.ingest.fill.count") >= 1
+    assert snap.counter("ingest.records") > 0
+
+
+def test_tracing_disabled_records_nothing():
+    assert not trace.enabled()  # default off
+    data = generate_warc(CorpusSpec(n_pages=5, seed=3), "none")
+    for _ in FastWARCIterator(data, parse_http=True):
+        pass
+    snap = obs.snapshot()
+    assert not any(k.startswith("span.") for k in snap.counters)
+    assert not snap.histograms
+
+
+def test_tracing_overhead_gate():
+    """The ≤2% tax the bench enforces, at test scale: interleaved
+    best-of sweeps (the shared-container drift rationale of
+    benchmarks/ingest_bench.py:_obs_rows). Best-of times converge to
+    the true cost under scheduler noise, so the race keeps adding
+    rounds until the gate holds (bounded), instead of flaking tier-1
+    on one noisy window."""
+    data = generate_warc(CorpusSpec(n_pages=250, seed=29), "none")
+
+    def sweep():
+        return sum(1 for _ in FastWARCIterator(data, parse_http=True))
+
+    prev = trace.enable(False)
+    try:
+        sweep()
+        trace.enable(True)
+        sweep()
+        best = {False: float("inf"), True: float("inf")}
+        ratio = float("inf")
+        for _ in range(3):  # rounds accumulate into the same best-of
+            for rep in range(10):
+                order = (False, True) if rep % 2 == 0 else (True, False)
+                for on in order:
+                    trace.enable(on)
+                    t0 = time.perf_counter()
+                    sweep()
+                    best[on] = min(best[on], time.perf_counter() - t0)
+            ratio = best[True] / best[False]
+            if ratio <= 1.02:
+                break
+    finally:
+        trace.enable(prev)
+    assert ratio <= 1.02
+
+
+# -- kernel dispatch profiler ---------------------------------------------
+
+def test_kernel_dispatch_profile_and_pad_waste():
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.kernels.digest_sig import digest_signature_batch
+    from repro.obs.kernels import reset_shape_cache
+
+    reset_shape_cache()
+    payloads = [b"x" * 100, b"y" * 1000, b"z" * 100]
+    digest_signature_batch(payloads)
+    digest_signature_batch(payloads)  # same shapes: reuse, not compile
+    snap = obs.snapshot()
+    base = "kernel.digest_signature_batch"
+    assert snap.counter(f"{base}.dispatches") >= 2
+    assert snap.counter(f"{base}.rows") >= 6
+    assert snap.counter(f"{base}.useful_bytes") == 2 * 1200
+    assert snap.counter(f"{base}.padded_bytes") >= \
+        snap.counter(f"{base}.useful_bytes")
+    assert snap.counter(f"{base}.shape_reuses") >= \
+        snap.counter(f"{base}.shape_compiles")
+    report = pad_waste_report(snap)
+    prof = report["digest_signature_batch"]
+    assert prof["buckets"], "per-width buckets missing"
+    for bucket in prof["buckets"].values():
+        assert 0.0 <= bucket["pad_waste_ratio"] < 1.0
+
+
+# -- cross-process harvest ------------------------------------------------
+
+def _sweep_records(path: str) -> int:
+    return sum(1 for _ in FastWARCIterator(path, parse_http=False))
+
+
+def _shards(tmp_path, n=4, n_pages=8):
+    paths = []
+    for i in range(n):
+        p = str(tmp_path / f"s{i}.warc.gz")
+        write_corpus(p, CorpusSpec(n_pages=n_pages, seed=50 + i), "gzip")
+        paths.append(p)
+    return paths
+
+
+def test_map_shards_merges_worker_counters(tmp_path):
+    before = _shm_segments()
+    paths = _shards(tmp_path)
+    counts, snap = map_shards(_sweep_records, paths, workers=2,
+                              with_obs=True)
+    total = sum(counts)
+    assert total > 0
+    srcs = set(snap.sources)
+    assert {"parent", "pool"} <= srcs
+    workers = {s for s in srcs if s.startswith("worker-")}
+    assert len(workers) >= 2
+    # every record swept in a worker is in the merged snapshot, exactly
+    # once (workers fork with a FRESH registry: nothing double-counts)
+    assert snap.counter("ingest.records") == total
+    assert snap.counter("ingest.shards") == len(paths)
+    assert snap.counter("pool.transport.results") > 0
+    assert _shm_segments() == before  # stats segment unlinked
+
+
+def test_map_shards_serial_path_obs(tmp_path):
+    paths = _shards(tmp_path, n=1)
+    counts, snap = map_shards(_sweep_records, paths, workers=0,
+                              with_obs=True)
+    # in-process sweep: no pool, no workers — but the gzip sweep still
+    # ran its readahead decoder child, whose harvest rides along
+    assert snap.sources[0] == "parent"
+    assert "pool" not in snap.sources
+    assert snap.counter("ingest.records") == counts[0]
+
+
+def test_decoder_child_counters_harvested(tmp_path):
+    before = _shm_segments()
+    path = str(tmp_path / "s.warc.gz")
+    write_corpus(path, CorpusSpec(n_pages=20, seed=9), "gzip")
+    n = sum(1 for _ in FastWARCIterator(path))  # process readahead
+    snap = obs.snapshot()
+    assert "readahead-decoder" in snap.sources
+    assert snap.counter("decoder.members") > 0
+    assert snap.counter("decoder.batches") > 0
+    assert snap.counter("ingest.records") == n
+    assert _shm_segments() == before
+
+
+def test_worker_death_stats_survive_harvest(tmp_path):
+    """A SIGKILLed worker's published counters outlive it: the parent
+    owns the stats segment, the supervisor harvests per incarnation."""
+    before = _shm_segments()
+    paths = _shards(tmp_path, n=6)
+    with arm_worker_kill(str(tmp_path), nth=2) as latch:
+        counts, snap = map_shards(_sweep_records, paths, workers=2,
+                                  supervise=True, hang_timeout_s=10.0,
+                                  with_obs=True)
+        fired = os.path.exists(latch)
+    assert fired, "armed worker kill never fired"
+    assert all(c is not None for c in counts)
+    assert snap.counter("pool.respawns") >= 1
+    assert snap.counter("faults.armed.REPRO_FAULT_WORKER_KILL") == 1
+    # both original incarnations are in the merge — including the killed
+    # one, which published after its first completed shard and whose
+    # parent-owned stats slot preserves that past SIGKILL. (The respawn
+    # publishes too when it completes work or exits cleanly, but pool
+    # teardown may terminate an idle respawn first — its shard was
+    # re-driven, so no counters are lost either way.)
+    incarnations = {s for s in snap.sources if s.startswith("worker-")}
+    assert {"worker-0.1", "worker-1.1"} <= incarnations
+    # re-driven shard: the dead worker counted records it never
+    # delivered, so the merged total is >= the delivered total
+    assert snap.counter("ingest.records") >= sum(counts)
+    assert _shm_segments() == before
+
+
+# -- the acceptance run: ingest -> serve, one snapshot, counted once ------
+
+def test_ingest_to_serve_merged_snapshot(tmp_path):
+    pytest.importorskip("jax")
+    from repro.index import QueryRequest, build_index
+    from repro.serve import ArchiveGateway
+
+    before = _shm_segments()
+    paths = _shards(tmp_path, n=3, n_pages=10)
+    serial_n = sum(1 for _ in FastWARCIterator(paths[0]))
+    # fused=True explicitly: worker builds default to the host path, but
+    # the acceptance criterion wants kernel dispatch counters flowing up
+    # from worker processes (fork context: jax is already imported here)
+    index = build_index(paths, workers=2, fused=True)
+    with ArchiveGateway(index, cache_bytes=1 << 20) as gw:
+        for pattern in (b"nginx", b"absent-needle!"):
+            gw.submit(QueryRequest(pattern, top_k=2)).result(600)
+        snap = gw.snapshot()
+
+    srcs = set(snap.sources)
+    assert {"parent", "pool", "readahead-decoder", "gateway"} <= srcs
+    assert len({s for s in srcs if s.startswith("worker-")}) >= 2
+    # exactly-once accounting across the whole tree: the serial sweep
+    # plus each worker's shard sweep, nothing absorbed twice
+    total = serial_n + sum(r for r in
+                           (_sweep_records(p) for p in paths))
+    assert snap.counter("ingest.records") == total
+    assert snap.counter("ingest.shards") == 1 + len(paths)
+    assert snap.counter("decoder.members") > 0
+    assert snap.counter("gateway.requests") == 2
+    assert snap.counter("gateway.responses") == 2
+    # kernel profile flowed up from the workers (fused index build) and
+    # from the gateway's own scans, with per-width pad-waste buckets
+    report = pad_waste_report(snap)
+    assert "digest_signature_batch" in report
+    assert report["digest_signature_batch"]["buckets"]
+    scans = [k for k in report if k.startswith("find_pattern")]
+    assert scans and all(report[k]["dispatches"] > 0 for k in scans)
+    assert index.obs is not None
+    assert _shm_segments() == before
