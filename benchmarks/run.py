@@ -13,7 +13,10 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                (benchmarks/index_bench.py);
   * serve    — archive-gateway vs synchronous query service under
                1/8/64 concurrent clients: throughput, dispatches per
-               request, coalesce/cache rates (benchmarks/serve_bench.py);
+               request, coalesce/cache rates, per-stage trace
+               attribution at 8/64 clients + the request-tracing tax
+               (paired off/on race, gated ≤1.05 in-bench)
+               (benchmarks/serve_bench.py);
   * ingest   — zero-copy parse vs legacy (records/s + bytes copied per
                record), fused vs two-pass index build, shared-memory vs
                pickle pool transport, and the observability tax (paired

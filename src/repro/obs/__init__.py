@@ -10,6 +10,12 @@ own registries through shared-memory stats blocks
 teardown harvest them, so a merged :class:`ObsSnapshot` spans the whole
 process tree. Export as JSON (:meth:`ObsSnapshot.to_json`), Prometheus
 text (:func:`render_prometheus`), or via ``python -m repro.obs.dump``.
+
+Request-scoped tracing (PR 8) layers on top: span trees
+(``repro.obs.trace``), the always-on bounded flight recorder with
+anomaly auto-dump (``repro.obs.flight``), Chrome-trace / stage-breakdown
+exporters (``repro.obs.export``) and the live ``python -m repro.obs.top``
+dashboard.
 """
 from __future__ import annotations
 
@@ -22,12 +28,14 @@ from repro.obs.registry import (
     percentile,
     render_prometheus,
 )
-from repro.obs import trace
+from repro.obs import export, flight, trace
 
 __all__ = [
     "HISTOGRAM_CAP",
     "ObsSnapshot",
     "Registry",
+    "export",
+    "flight",
     "merge",
     "percentile",
     "registry",

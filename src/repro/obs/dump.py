@@ -94,6 +94,14 @@ def main(argv=None) -> int:
             data = json.load(f)
         if "counters" not in data and isinstance(data.get("obs"), dict):
             data = data["obs"]  # a BENCH_*.json: unwrap its obs section
+        if "counters" not in data:
+            # a BENCH file from before obs embedding (or some unrelated
+            # JSON): say so instead of rendering an empty snapshot
+            print(f"error: {args.snapshot} holds no obs snapshot (no "
+                  f"'counters' key and no embedded 'obs' payload) — "
+                  f"regenerate it with benchmarks/run.py --json",
+                  file=sys.stderr)
+            return 2
         snap = ObsSnapshot.from_dict(data)
 
     text = render_prometheus(snap) if args.format == "prom" \

@@ -1,0 +1,153 @@
+"""Span exporters: Chrome ``trace_event`` JSON + per-stage breakdown tables.
+
+Two consumers, two shapes:
+
+* :func:`chrome_trace` turns a span list (usually
+  ``flight_recorder.spans()`` or a flight dump) into the Chrome
+  ``trace_event`` format — complete (``"ph": "X"``) events with
+  microsecond timestamps, one ``tid`` per producing thread, thread-name
+  metadata events, and trace/span/parent ids under ``args`` — loadable
+  in ``chrome://tracing`` and Perfetto as-is.
+* :func:`breakdown_from_snapshot` / :func:`breakdown_from_spans` distill
+  *where the time went*: per-stage count, total seconds, p50/p99 and
+  share-of-total. The snapshot variant reads the gateway's
+  ``gateway.stage.<name>_s`` histograms (complete counts — rings are
+  bounded, registries are not) and is what ``benchmarks/serve_bench.py``
+  uses to attribute the 64-client cliff; the span variant works on any
+  span list (e.g. one trace tree out of a dump).
+
+``share`` is each stage's fraction of the summed stage time. Stages mix
+per-request spans (``queue_wait``) with per-batch spans shared by many
+requests (``cache_fill``, ``kernel_dispatch``), so shares answer "which
+stage burns the wall time" — exactly the attribution question — not
+"what does one request pay", which is what the p50/p99 columns are for.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Mapping, Optional
+
+from repro.obs.registry import ObsSnapshot, percentile
+from repro.obs.trace import Span
+
+__all__ = ["breakdown_from_snapshot", "breakdown_from_spans",
+           "chrome_trace", "dominant_stage", "render_stage_table",
+           "write_chrome_trace"]
+
+
+def chrome_trace(spans: Iterable[Span], *,
+                 process_name: str = "repro") -> dict:
+    """Chrome/Perfetto ``trace_event`` JSON object for a span list."""
+    pid = os.getpid()
+    tids: Dict[str, int] = {}
+    events: List[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": process_name},
+    }]
+    body: List[dict] = []
+    for s in sorted(spans, key=lambda s: s.t0):
+        if s.t1 is None:
+            continue
+        tid = tids.get(s.thread)
+        if tid is None:
+            tid = tids[s.thread] = len(tids) + 1
+            events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                           "tid": tid, "args": {"name": s.thread}})
+        args = {"trace_id": s.trace_id, "span_id": s.span_id,
+                "parent_id": s.parent_id}
+        if s.attrs:
+            args.update({k: v for k, v in s.attrs.items()
+                         if isinstance(v, (str, int, float, bool))})
+        body.append({
+            "name": s.name,
+            "cat": s.name.split(".", 1)[0],
+            "ph": "X",
+            "ts": s.as_dict()["t0_us"],
+            "dur": (s.t1 - s.t0) * 1e6,
+            "pid": pid,
+            "tid": tid,
+            "args": args,
+        })
+    return {"traceEvents": events + body, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, spans: Iterable[Span], **kw) -> str:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(chrome_trace(spans, **kw), f)
+        f.write("\n")
+    return path
+
+
+def _finalize(out: Dict[str, dict]) -> Dict[str, dict]:
+    total = sum(v["total_s"] for v in out.values())
+    for v in out.values():
+        v["share"] = v["total_s"] / total if total else 0.0
+    return dict(sorted(out.items(), key=lambda kv: -kv[1]["total_s"]))
+
+
+def breakdown_from_spans(spans: Iterable[Span]) -> Dict[str, dict]:
+    """Per-stage attribution from a span list: ``{name: {count,
+    total_s, p50_ms, p99_ms, share}}``, sorted by total time."""
+    groups: Dict[str, List[float]] = {}
+    for s in spans:
+        if s.t1 is None:
+            continue
+        groups.setdefault(s.name, []).append(s.t1 - s.t0)
+    out = {}
+    for name, durs in groups.items():
+        out[name] = {
+            "count": len(durs),
+            "total_s": sum(durs),
+            "p50_ms": percentile(durs, 50) * 1e3,
+            "p99_ms": percentile(durs, 99) * 1e3,
+        }
+    return _finalize(out)
+
+
+def breakdown_from_snapshot(snap: ObsSnapshot | Mapping,
+                            prefix: str = "gateway.stage."
+                            ) -> Dict[str, dict]:
+    """Per-stage attribution from the stage histograms of a snapshot
+    (or its :meth:`~repro.obs.ObsSnapshot.as_dict` form). Histogram
+    names ``<prefix><stage>_s`` become stage keys; counts and sums are
+    exact (reservoir sampling bounds only the quantile samples)."""
+    hists = snap.histograms if isinstance(snap, ObsSnapshot) \
+        else snap.get("histograms", {})
+    out: Dict[str, dict] = {}
+    for name, h in hists.items():
+        if not name.startswith(prefix) or not name.endswith("_s"):
+            continue
+        stage = name[len(prefix):-2]
+        samples = sorted(h.get("samples", ()))
+        if samples:
+            p50, p99 = percentile(samples, 50), percentile(samples, 99)
+        else:  # as_dict form: pre-computed quantiles, no raw samples
+            p50, p99 = h.get("p50", 0.0), h.get("p99", 0.0)
+        out[stage] = {
+            "count": h["count"],
+            "total_s": h["sum"],
+            "p50_ms": p50 * 1e3,
+            "p99_ms": p99 * 1e3,
+        }
+    return _finalize(out)
+
+
+def dominant_stage(breakdown: Mapping[str, Mapping]) -> Optional[str]:
+    """The stage burning the most total time, or ``None`` if empty."""
+    if not breakdown:
+        return None
+    return max(breakdown, key=lambda k: breakdown[k]["total_s"])
+
+
+def render_stage_table(breakdown: Mapping[str, Mapping]) -> str:
+    """Fixed-width text table of a stage breakdown (for `obs.top` and
+    humans reading bench logs)."""
+    lines = [f"{'stage':<18} {'count':>8} {'p50 ms':>9} {'p99 ms':>9} "
+             f"{'total s':>9} {'share':>6}"]
+    for name, v in breakdown.items():
+        lines.append(
+            f"{name:<18} {v['count']:>8} {v['p50_ms']:>9.2f} "
+            f"{v['p99_ms']:>9.2f} {v['total_s']:>9.3f} "
+            f"{v['share'] * 100:>5.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,266 @@
+"""Flight recorder: always-on, bounded, per-thread span rings + anomaly dumps.
+
+A :class:`FlightRecorder` keeps the last ``capacity_per_thread``
+finished :class:`~repro.obs.trace.Span`\\ s **per writing thread** in
+fixed-size ring buffers. Appends are lock-free in the only sense that
+matters under the GIL: each ring has exactly one writer (its thread),
+an append is two reference stores plus an int bump, and readers never
+block writers — a dump may observe a ring mid-rotation and lose the
+span being overwritten that instant, which is fine for a diagnostic
+artifact. The global lock is touched once per thread *lifetime* (ring
+registration), never per span, so the recorder can stay on in the serve
+hot path at bounded memory (``capacity_per_thread × threads`` span
+objects, no growth).
+
+**Anomaly auto-dump.** :meth:`trip` is the hook the gateway calls when
+something the SLO cares about happens (``GatewayTimeout``,
+``GatewayOverloaded``, p99 over the SLO gauge, queue-depth high-water):
+it writes the last few thousand spans to a JSON file — the flight
+recorder's whole reason to exist is that by the time you know a request
+was slow, the evidence is normally gone. Dumps are rate-limited
+(``min_dump_interval_s``) so an overload storm produces one artifact,
+not thousands; suppressed trips are counted
+(``flight.trips_suppressed``). Dump files land in ``dump_dir``
+(default: ``$REPRO_FLIGHT_DIR`` or ``<tmp>/repro-flight``) and render
+into Chrome ``trace_event`` JSON via :mod:`repro.obs.export`.
+
+``python -m repro.obs.flight --demo`` runs a synthetic gateway with an
+induced ``GatewayTimeout`` and writes both artifacts (flight dump +
+Chrome trace) — CI uploads them from the serve tier.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from time import perf_counter, time as _wall
+from typing import List, Optional
+
+from repro.obs.trace import Span
+
+__all__ = ["DEFAULT_CAPACITY", "FlightRecorder", "recorder",
+           "set_recorder"]
+
+#: Spans retained per writing thread before the ring rotates.
+DEFAULT_CAPACITY = 4096
+
+
+def _default_dump_dir() -> str:
+    return os.environ.get("REPRO_FLIGHT_DIR") or \
+        os.path.join(tempfile.gettempdir(), "repro-flight")
+
+
+class _Ring:
+    """Single-writer span ring: ``buf[idx % cap]`` slot store + bump."""
+
+    __slots__ = ("buf", "idx", "cap", "thread")
+
+    def __init__(self, cap: int, thread: str):
+        self.buf: List[Optional[Span]] = [None] * cap
+        self.idx = 0
+        self.cap = cap
+        self.thread = thread
+
+    def append(self, span: Span) -> None:
+        self.buf[self.idx % self.cap] = span
+        self.idx += 1
+
+    def items(self) -> List[Span]:
+        """Resident spans, oldest first (reader-side; tolerant of a
+        concurrent writer rotating under it)."""
+        idx, cap = self.idx, self.cap
+        if idx <= cap:
+            out = self.buf[:idx]
+        else:
+            cut = idx % cap
+            out = self.buf[cut:] + self.buf[:cut]
+        return [s for s in out if s is not None]
+
+
+class FlightRecorder:
+    """Bounded always-on span store with rate-limited anomaly dumps."""
+
+    def __init__(self, capacity_per_thread: int = DEFAULT_CAPACITY, *,
+                 min_dump_interval_s: float = 30.0,
+                 dump_dir: Optional[str] = None,
+                 max_dump_spans: int = 8192) -> None:
+        self.capacity_per_thread = max(16, int(capacity_per_thread))
+        self.min_dump_interval_s = min_dump_interval_s
+        self.dump_dir = dump_dir if dump_dir is not None \
+            else _default_dump_dir()
+        self.max_dump_spans = max_dump_spans
+        self._local = threading.local()
+        self._rings: List[_Ring] = []
+        self._reg_lock = threading.Lock()   # ring registration only
+        self._dump_lock = threading.Lock()  # dump serialization only
+        self._last_dump = float("-inf")
+        self._dump_seq = 0
+        self.dump_paths: List[str] = []
+
+    # -- hot path --------------------------------------------------------
+    def record(self, span: Span) -> None:
+        ring = getattr(self._local, "ring", None)
+        if ring is None:
+            ring = _Ring(self.capacity_per_thread,
+                         threading.current_thread().name)
+            self._local.ring = ring
+            with self._reg_lock:
+                self._rings.append(ring)
+        ring.append(span)
+
+    # -- readers ---------------------------------------------------------
+    def spans(self, last: Optional[int] = None) -> List[Span]:
+        """Resident finished spans across all rings, sorted by start time
+        (``last`` keeps only the newest N)."""
+        with self._reg_lock:
+            rings = list(self._rings)
+        out: List[Span] = []
+        for ring in rings:
+            out.extend(s for s in ring.items() if s.t1 is not None)
+        out.sort(key=lambda s: s.t0)
+        if last is not None and len(out) > last:
+            out = out[-last:]
+        return out
+
+    def trace_tree(self, trace_id: int) -> List[Span]:
+        """Every resident span of one trace, parents before children."""
+        spans = [s for s in self.spans() if s.trace_id == trace_id]
+        spans.sort(key=lambda s: (s.parent_id != 0, s.t0))
+        return spans
+
+    def clear(self) -> None:
+        with self._reg_lock:
+            rings = list(self._rings)
+        for ring in rings:
+            ring.buf = [None] * ring.cap
+            ring.idx = 0
+
+    # -- dumping ---------------------------------------------------------
+    def trip(self, reason: str, attrs: Optional[dict] = None
+             ) -> Optional[str]:
+        """Anomaly hook: dump unless one fired within
+        ``min_dump_interval_s``. Returns the dump path, or ``None`` when
+        suppressed. Counts ``flight.trips.<reason>`` either way."""
+        from repro import obs
+
+        obs.registry().counter_add(f"flight.trips.{reason}")
+        now = perf_counter()
+        with self._dump_lock:
+            if now - self._last_dump < self.min_dump_interval_s:
+                obs.registry().counter_add("flight.trips_suppressed")
+                return None
+            self._last_dump = now
+        return self.dump(reason=reason, attrs=attrs)
+
+    def dump(self, path: Optional[str] = None, *, reason: str = "manual",
+             attrs: Optional[dict] = None) -> str:
+        """Write the resident spans (newest ``max_dump_spans``) as JSON;
+        returns the path written."""
+        from repro import obs
+
+        spans = self.spans(last=self.max_dump_spans)
+        if path is None:
+            os.makedirs(self.dump_dir, exist_ok=True)
+            with self._dump_lock:
+                self._dump_seq += 1
+                seq = self._dump_seq
+            safe = "".join(c if c.isalnum() or c in "-_" else "-"
+                           for c in reason)
+            path = os.path.join(
+                self.dump_dir, f"flight-{os.getpid()}-{seq:04d}-{safe}.json")
+        payload = {
+            "reason": reason,
+            "attrs": attrs or {},
+            "wall_time_s": _wall(),
+            "pid": os.getpid(),
+            "n_spans": len(spans),
+            "spans": [s.as_dict() for s in spans],
+        }
+        tmp = f"{path}.tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(payload, f)
+            f.write("\n")
+        os.replace(tmp, path)  # a reader never sees a half-written dump
+        self.dump_paths.append(path)
+        obs.registry().counter_add("flight.dumps")
+        return path
+
+
+_default = FlightRecorder()
+
+
+def recorder() -> FlightRecorder:
+    """The process-default flight recorder ``Span.finish`` records into."""
+    return _default
+
+
+def set_recorder(rec: FlightRecorder) -> FlightRecorder:
+    """Swap the process-default recorder (tests); returns the previous."""
+    global _default
+    prev = _default
+    _default = rec
+    return prev
+
+
+# -- CLI: ``python -m repro.obs.flight --demo`` ---------------------------
+
+def _demo(out_dir: str) -> tuple:
+    """Synthetic traced serve run with one induced GatewayTimeout.
+
+    Returns ``(flight_dump_path, chrome_trace_path)`` — the two
+    artifacts CI uploads from the serve tier.
+    """
+    import tempfile as _tf
+
+    from repro.data.synth import CorpusSpec, write_corpus
+    from repro.index import QueryRequest, build_index
+    from repro.obs.export import write_chrome_trace
+    from repro.serve import ArchiveGateway, GatewayTimeout
+
+    rec = FlightRecorder(min_dump_interval_s=0.0, dump_dir=out_dir)
+    with _tf.TemporaryDirectory(prefix="repro-flight-demo-") as tmp:
+        paths = []
+        for i in range(2):
+            p = os.path.join(tmp, f"shard-{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=30, seed=i), "gzip")
+            paths.append(p)
+        index = build_index(paths)
+        with ArchiveGateway(index, cache_bytes=1 << 20,
+                            flight_recorder=rec) as gw:
+            for pattern in (b"nginx", b"crawl", b"absent-needle!"):
+                gw.submit(QueryRequest(pattern, top_k=3)).result(600)
+            try:  # induced anomaly: an already-expired deadline
+                gw.submit(QueryRequest(b"nginx", top_k=3),
+                          deadline_s=-1.0).result(600)
+            except GatewayTimeout:
+                pass
+    dump_path = rec.dump_paths[-1] if rec.dump_paths else \
+        rec.dump(reason="demo")
+    chrome_path = os.path.join(out_dir, "chrome-trace.json")
+    write_chrome_trace(chrome_path, rec.spans())
+    return dump_path, chrome_path
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.flight",
+        description="Flight-recorder artifact generator.")
+    ap.add_argument("--demo", action="store_true",
+                    help="traced serve run with an induced GatewayTimeout")
+    ap.add_argument("--out-dir", default="flight-artifacts",
+                    help="directory for the dump + Chrome trace JSON")
+    args = ap.parse_args(argv)
+    if not args.demo:
+        ap.error("only --demo is supported")
+    os.makedirs(args.out_dir, exist_ok=True)
+    dump_path, chrome_path = _demo(args.out_dir)
+    print(f"wrote {dump_path}")
+    print(f"wrote {chrome_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -215,18 +215,37 @@ class ObsSnapshot:
 
 _PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
 
+#: Quantile labels of a rendered summary family (label, percentile).
+_PROM_QUANTILES = (("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0))
+
 
 def _prom_name(prefix: str, name: str) -> str:
     return _PROM_BAD.sub("_", f"{prefix}_{name}")
 
 
+def _prom_label_value(value: str) -> str:
+    """Escape a label value per the text exposition format: backslash,
+    double-quote and line-feed are the three characters the grammar
+    escapes (in that order — escaping the escapes first)."""
+    return value.replace("\\", "\\\\").replace('"', '\\"') \
+                .replace("\n", "\\n")
+
+
 def render_prometheus(snap: ObsSnapshot, prefix: str = "repro") -> str:
-    """Prometheus text exposition of a snapshot (counters, gauges, and
-    histogram summaries with p50/p99 quantile lines)."""
+    """Prometheus text exposition of a snapshot.
+
+    Counters and gauges render as their own typed families; every
+    reservoir histogram renders as a proper **summary family** — one
+    ``# TYPE <name> summary`` header, ``quantile``-labelled sample
+    lines (:data:`_PROM_QUANTILES`) plus the exact ``_count`` / ``_sum``
+    children the summary type requires. Label values pass through
+    :func:`_prom_label_value`, so sources containing ``\\``, ``"`` or
+    newlines can't corrupt the exposition."""
     lines: List[str] = []
+    src_pn = _prom_name(prefix, "obs_source")
+    lines.append(f"# TYPE {src_pn} gauge")
     for src in snap.sources:
-        lines.append(f'{_prom_name(prefix, "obs_source")}'
-                     f'{{source="{src}"}} 1')
+        lines.append(f'{src_pn}{{source="{_prom_label_value(src)}"}} 1')
     for name, v in sorted(snap.counters.items()):
         pn = _prom_name(prefix, name)
         lines.append(f"# TYPE {pn} counter")
@@ -239,8 +258,9 @@ def render_prometheus(snap: ObsSnapshot, prefix: str = "repro") -> str:
         pn = _prom_name(prefix, name)
         s = sorted(h["samples"])
         lines.append(f"# TYPE {pn} summary")
-        lines.append(f'{pn}{{quantile="0.5"}} {percentile(s, 50.0):.9g}')
-        lines.append(f'{pn}{{quantile="0.99"}} {percentile(s, 99.0):.9g}')
+        for label, q in _PROM_QUANTILES:
+            lines.append(
+                f'{pn}{{quantile="{label}"}} {percentile(s, q):.9g}')
         lines.append(f"{pn}_count {h['count']}")
         lines.append(f"{pn}_sum {h['sum']:.9g}")
     return "\n".join(lines) + "\n"

@@ -1,0 +1,178 @@
+"""``python -m repro.obs.top`` — live terminal view of a serve gateway.
+
+Polls a gateway's merged :meth:`~repro.serve.ArchiveGateway.snapshot`
+on an interval and renders the headline serving signals the way
+``top(1)`` renders a host: requests/s and responses/s (counter deltas
+between polls), queue depth + high-water, coalesce rate, dispatches per
+request, cache hit rate, timeout/reject/error totals, and the
+per-stage p50/p99 attribution table (from the request-scoped tracing
+histograms, :mod:`repro.obs.export`).
+
+Modes:
+
+* ``--demo`` — build a tiny synthetic corpus, start a traced gateway,
+  drive it with background client threads, and render live (the
+  self-contained way to *see* the instrument; ``--iterations N`` bounds
+  the run, which is also what the tests use);
+* ``--file SNAP.json`` — render one frame from a saved snapshot (an
+  ``ObsSnapshot.as_dict()`` file, a flight of ``gw.snapshot()``, or a
+  ``BENCH_*.json`` with an embedded ``obs`` payload). Rates need two
+  samples, so counter-rate fields render as totals.
+
+The renderer itself (:func:`render`) is a pure function of (current
+snapshot, previous snapshot, dt) — testable without a terminal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional
+
+from repro.obs.export import breakdown_from_snapshot, render_stage_table
+from repro.obs.registry import ObsSnapshot
+
+__all__ = ["main", "render"]
+
+_CLEAR = "\x1b[2J\x1b[H"
+
+
+def _rate(cur: ObsSnapshot, prev: Optional[ObsSnapshot], name: str,
+          dt: float) -> float:
+    if prev is None or dt <= 0:
+        return 0.0
+    return (cur.counter(name) - prev.counter(name)) / dt
+
+
+def render(snap: ObsSnapshot, prev: Optional[ObsSnapshot] = None,
+           dt: float = 0.0, *, clock: str = "") -> str:
+    """One dashboard frame from a merged gateway snapshot."""
+    c = snap.counter
+    requests = c("gateway.requests")
+    responses = max(c("gateway.responses"), 1)
+    cache_hits = c("gateway.cache.hits")
+    cache_total = cache_hits + c("gateway.cache.misses")
+    lines = [
+        f"repro.obs.top — archive gateway {clock}".rstrip(),
+        "",
+        f"req/s {_rate(snap, prev, 'gateway.requests', dt):>8.1f}   "
+        f"resp/s {_rate(snap, prev, 'gateway.responses', dt):>8.1f}   "
+        f"queue {snap.gauge('gateway.queue_depth'):>4.0f} "
+        f"(hw {snap.gauge('gateway.queue_depth_highwater'):.0f})",
+        f"requests {requests}   coalesced {c('gateway.coalesced')} "
+        f"({c('gateway.coalesced') / max(requests, 1) * 100:.1f}%)   "
+        f"dispatches/req "
+        f"{c('gateway.kernel_dispatches') / responses:.2f}   "
+        f"cache hit "
+        f"{cache_hits / cache_total * 100 if cache_total else 0.0:.1f}%",
+        f"latency p50 {snap.quantile('gateway.latency_s', 50) * 1e3:.1f} ms"
+        f"   p99 {snap.quantile('gateway.latency_s', 99) * 1e3:.1f} ms   "
+        f"timeouts {c('gateway.timeouts')}   "
+        f"rejected {c('gateway.rejected')}   errors {c('gateway.errors')}   "
+        f"flight dumps {c('flight.dumps') + c('gateway.flight_dumps')}",
+        "",
+    ]
+    breakdown = breakdown_from_snapshot(snap)
+    if breakdown:
+        lines.append(render_stage_table(breakdown))
+    else:
+        lines.append("(no gateway.stage.* histograms — request tracing off?)")
+    return "\n".join(lines) + "\n"
+
+
+def _load_snapshot_file(path: str) -> ObsSnapshot:
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if "counters" not in data and isinstance(data.get("obs"), dict):
+        data = data["obs"]
+    if "counters" not in data:
+        raise ValueError(
+            f"{path} holds no obs snapshot (no 'counters' key and no "
+            f"embedded 'obs' payload)")
+    return ObsSnapshot.from_dict(data)
+
+
+def _run_demo(interval: float, iterations: Optional[int],
+              out=sys.stdout) -> int:
+    import os
+    import tempfile
+    import threading
+
+    from repro.data.synth import CorpusSpec, write_corpus
+    from repro.index import QueryRequest, build_index
+    from repro.serve import ArchiveGateway
+
+    patterns = (b"nginx", b"crawl", b"archive", b"absent-needle!")
+    with tempfile.TemporaryDirectory(prefix="repro-obs-top-") as tmp:
+        paths = []
+        for i in range(2):
+            p = os.path.join(tmp, f"shard-{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=30, seed=i), "gzip")
+            paths.append(p)
+        index = build_index(paths)
+        stop = threading.Event()
+        with ArchiveGateway(index, cache_bytes=1 << 20) as gw:
+
+            def client(seed: int) -> None:
+                k = seed
+                while not stop.is_set():
+                    req = QueryRequest(patterns[k % len(patterns)], top_k=3)
+                    k += 1
+                    try:
+                        gw.submit(req).result(600)
+                    except Exception:
+                        return
+
+            clients = [threading.Thread(target=client, args=(i,), daemon=True)
+                       for i in range(4)]
+            for t in clients:
+                t.start()
+            try:
+                prev, t_prev, n = None, time.perf_counter(), 0
+                while iterations is None or n < iterations:
+                    time.sleep(interval)
+                    snap = gw.snapshot()
+                    now = time.perf_counter()
+                    out.write(_CLEAR if out.isatty() else "")
+                    out.write(render(snap, prev, now - t_prev,
+                                     clock=time.strftime("%H:%M:%S")))
+                    out.flush()
+                    prev, t_prev = snap, now
+                    n += 1
+            except KeyboardInterrupt:
+                pass
+            finally:
+                stop.set()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.top",
+        description="Live terminal dashboard for the archive gateway.")
+    ap.add_argument("--demo", action="store_true",
+                    help="drive a synthetic traced gateway and watch it")
+    ap.add_argument("--file", default=None,
+                    help="render one frame from a saved snapshot JSON")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="poll interval in seconds (demo mode)")
+    ap.add_argument("--iterations", type=int, default=None,
+                    help="stop after N frames (demo mode; default: run "
+                         "until interrupted)")
+    args = ap.parse_args(argv)
+    if bool(args.demo) == bool(args.file):
+        ap.error("choose exactly one of --demo / --file")
+    if args.file:
+        try:
+            snap = _load_snapshot_file(args.file)
+        except ValueError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+        sys.stdout.write(render(snap))
+        return 0
+    return _run_demo(args.interval, args.iterations)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,11 +1,26 @@
-"""Stage tracing for the ingest hot path.
+"""Stage tracing: flat timed sections *and* request-scoped span trees.
 
-Spans are recorded as duration histograms (``span.<name>_s``) plus a
-count counter in the process-default registry. Tracing is **off by
-default** and the instrumented call sites are written so the disabled
-cost is one truth-test per *batch* (or per iterator construction), never
-per record — the zero-copy loop's ≤2% overhead gate in
-``benchmarks/ingest_bench.py`` holds the line.
+Two tiers share this module:
+
+* **Flat spans** (PR 7) — durations recorded as histograms
+  (``span.<name>_s``) plus a count counter in the process-default
+  registry. Tracing is **off by default** and the instrumented call
+  sites are written so the disabled cost is one truth-test per *batch*
+  (or per iterator construction), never per record — the zero-copy
+  loop's ≤2% overhead gate in ``benchmarks/ingest_bench.py`` holds the
+  line.
+* **Span trees** (PR 8) — :class:`Span` carries ``trace_id`` /
+  ``span_id`` / ``parent_id`` so one request's time decomposes into true
+  parent/child stages, across thread boundaries: the submitting thread
+  opens the root span, stashes it on the ticket, and the scheduler
+  thread opens children against that explicit parent
+  (:func:`start_span`). Within one thread the current span propagates
+  through a ``contextvars.ContextVar`` (:func:`current_span`,
+  :class:`use_span`). Finished spans land in the flight recorder
+  (:mod:`repro.obs.flight`) — bounded per-thread rings, always cheap —
+  and the *owner* of the span decides which registry (if any) gets its
+  duration histogram; the gateway routes stage durations into its
+  private registry as ``gateway.stage.<name>_s``.
 
 Span names in use across the repo:
 
@@ -17,16 +32,35 @@ Span names in use across the repo:
 ``ingest.arena_land``      memcpy landing a decoded shm batch in the arena
 ``ingest.parse_batch``     parsing the records of one landed member batch
 ``kernel.dispatch``        one Pallas kernel dispatch (see obs.kernels)
+``serve.prefill``          LM serve engine: prompt prefill of one batch
+``serve.decode``           LM serve engine: decode loop of one batch
+``gw.request``             gateway request root (submit → resolution)
+``gw.admission``           submit body: coalesce probe + queue put
+``gw.queue_wait``          queue put → drained by the scheduler
+``gw.coalesce_attach``     attach to an in-flight identical scan
+``gw.scan_batch``          scheduler batch root (one drained batch)
+``gw.batch_form``          shed expired + group by scan key + publish
+``gw.prefilter``           plan: literal/signature prefilter → candidates
+``gw.cache_fill``          chunk payload fetch (cache hits + decompress)
+``gw.kernel_dispatch``     one shared multi-pattern kernel dispatch
+``gw.host_verify``         host-side verify/regex gate over a chunk
+``gw.respond``             ranking + resolving every waiter's future
+``gw.timeout``             marker: request resolved with GatewayTimeout
 =========================  =================================================
 """
 from __future__ import annotations
 
+import contextvars
+import itertools
 import os
+import threading
+import time as _time
 from time import perf_counter
-from typing import Iterator
+from typing import Iterator, Optional, Tuple, Union
 
-__all__ = ["add", "add_many", "count", "enable", "enabled", "span",
-           "timed_reader"]
+__all__ = ["ROOT", "Span", "add", "add_many", "count", "current_span",
+           "enable", "enabled", "perf_to_wall_us", "span", "start_span",
+           "timed_reader", "use_span"]
 
 _ENABLED = os.environ.get("REPRO_OBS_TRACE", "") not in ("", "0")
 
@@ -136,6 +170,165 @@ class timed_reader:
 
     def __getattr__(self, attr):
         return getattr(self._f, attr)
+
+
+# -- span trees (PR 8) ----------------------------------------------------
+
+# wall-clock anchor: spans time with perf_counter (monotonic, cheap) and
+# convert to wall microseconds only at export time, via one pair of
+# epoch samples taken at import
+_EPOCH_PERF = perf_counter()
+_EPOCH_WALL = _time.time()
+
+#: monotonically increasing ids; ``itertools.count().__next__`` is
+#: GIL-atomic, so ids are unique across threads without a lock
+_NEXT_ID = itertools.count(1).__next__
+
+
+def perf_to_wall_us(t_perf: float) -> float:
+    """Convert a ``perf_counter`` instant to wall-clock microseconds."""
+    return (_EPOCH_WALL + (t_perf - _EPOCH_PERF)) * 1e6
+
+
+class Span:
+    """One timed stage in a trace tree.
+
+    ``trace_id`` groups every span of one logical request (or one
+    scheduler batch); ``parent_id`` is the ``span_id`` of the enclosing
+    stage (``0`` for roots). Spans are started by :func:`start_span`
+    and closed with :meth:`finish`, which appends them to a flight
+    recorder ring (:mod:`repro.obs.flight`). A span may be started on
+    one thread and finished on another — ``thread`` records the
+    *starting* thread, which is the one whose time the span attributes.
+    """
+
+    __slots__ = ("name", "trace_id", "span_id", "parent_id", "t0", "t1",
+                 "thread", "attrs")
+
+    def __init__(self, name: str, trace_id: int, span_id: int,
+                 parent_id: int, t0: float, thread: str,
+                 attrs: Optional[dict] = None):
+        self.name = name
+        self.trace_id = trace_id
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.thread = thread
+        self.attrs = attrs
+
+    @property
+    def duration_s(self) -> float:
+        return (self.t1 if self.t1 is not None else perf_counter()) - self.t0
+
+    def set_attr(self, key: str, value) -> None:
+        if self.attrs is None:
+            self.attrs = {}
+        self.attrs[key] = value
+
+    def context(self) -> Tuple[int, int]:
+        """``(trace_id, span_id)`` — the hand-off token for children
+        started on another thread."""
+        return (self.trace_id, self.span_id)
+
+    def finish(self, t1: Optional[float] = None, *,
+               recorder=None) -> float:
+        """Close the span and record it; returns the duration in seconds.
+
+        ``recorder=None`` uses the process-default flight recorder;
+        pass ``recorder=False`` to close without recording (tests).
+        Idempotent: a second ``finish`` only returns the duration.
+        """
+        if self.t1 is not None:
+            return self.t1 - self.t0
+        self.t1 = t1 if t1 is not None else perf_counter()
+        if recorder is not False:
+            if recorder is None:
+                from repro.obs import flight
+
+                recorder = flight.recorder()
+            recorder.record(self)
+        return self.t1 - self.t0
+
+    def as_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "trace_id": self.trace_id,
+            "span_id": self.span_id,
+            "parent_id": self.parent_id,
+            "thread": self.thread,
+            "t0_us": perf_to_wall_us(self.t0),
+            "dur_us": (self.t1 - self.t0) * 1e6 if self.t1 is not None
+                      else None,
+        }
+        if self.attrs:
+            d["attrs"] = dict(self.attrs)
+        return d
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "open" if self.t1 is None else f"{self.duration_s * 1e3:.3f}ms"
+        return (f"Span({self.name!r}, trace={self.trace_id}, "
+                f"id={self.span_id}, parent={self.parent_id}, {state})")
+
+
+_current_span: "contextvars.ContextVar[Optional[Span]]" = \
+    contextvars.ContextVar("repro_obs_current_span", default=None)
+
+#: Sentinel parent: root a fresh trace even when a current span exists.
+ROOT: Tuple = ()
+
+ParentLike = Union[Span, Tuple[int, int], None]
+
+
+def current_span() -> Optional[Span]:
+    """The thread's (really: context's) innermost active span, if any."""
+    return _current_span.get()
+
+
+def start_span(name: str, parent: ParentLike = None, *,
+               t0: Optional[float] = None,
+               attrs: Optional[dict] = None) -> Span:
+    """Open a span.
+
+    ``parent`` may be a :class:`Span`, a ``(trace_id, span_id)`` context
+    tuple (cross-thread hand-off), or ``None`` — then the contextvar's
+    current span is the parent, and if there is none either, this span
+    roots a fresh trace. ``t0`` backdates the start (used for
+    ``gw.queue_wait``, whose start is the submit instant recorded on
+    the ticket)."""
+    if parent is None:
+        parent = _current_span.get()
+    if parent is None or parent == ():  # () == ROOT: force a fresh trace
+        trace_id, parent_id = _NEXT_ID(), 0
+    elif isinstance(parent, Span):
+        trace_id, parent_id = parent.trace_id, parent.span_id
+    else:
+        trace_id, parent_id = parent
+    return Span(name, trace_id, _NEXT_ID(), parent_id,
+                t0 if t0 is not None else perf_counter(),
+                threading.current_thread().name, attrs)
+
+
+class use_span:
+    """Context manager installing ``span`` as the context's current span
+    (children started with ``parent=None`` nest under it); optionally
+    finishes it on exit (``finish=True``)."""
+
+    __slots__ = ("_span", "_finish", "_recorder", "_token")
+
+    def __init__(self, span_: Span, *, finish: bool = False, recorder=None):
+        self._span = span_
+        self._finish = finish
+        self._recorder = recorder
+
+    def __enter__(self) -> Span:
+        self._token = _current_span.set(self._span)
+        return self._span
+
+    def __exit__(self, *exc) -> None:
+        _current_span.reset(self._token)
+        if self._finish:
+            self._span.finish(recorder=self._recorder)
 
 
 def timed_iter(it: Iterator, name: str) -> Iterator:

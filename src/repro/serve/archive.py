@@ -25,7 +25,20 @@ that aggregates that work *before* touching the archive:
   candidates across requests skip the decompress entirely;
 * **metrics** — :mod:`repro.serve.metrics` records p50/p99 latency,
   coalesce rate, dispatches-per-request and cache hit rate, making the
-  aggregation wins checkable (``BENCH_serve.json``).
+  aggregation wins checkable (``BENCH_serve.json``);
+* **request-scoped tracing** (PR 8, on by default, ≤1.05× gated
+  in-bench) — every request gets a trace id at submit; its time
+  decomposes into true parent/child spans across the thread boundary
+  (admission → queue wait → coalesce/attach → batch formation →
+  prefilter → cache fill → kernel dispatch → host verify → respond,
+  names in :mod:`repro.obs.trace`). Stage durations land in the
+  gateway registry as ``gateway.stage.<name>_s`` histograms (the
+  attribution surface of ``benchmarks/serve_bench.py`` and
+  ``python -m repro.obs.top``); finished spans land in the always-on
+  bounded flight recorder (:mod:`repro.obs.flight`), which auto-dumps
+  the recent span history to a file whenever an anomaly trips —
+  :class:`GatewayTimeout`, :class:`GatewayOverloaded`, queue-depth
+  high-water, or p99 above the ``slo_p99_s`` gauge.
 
 Correctness bar: responses are **byte-identical** to what an independent
 synchronous :class:`~repro.index.query.QueryEngine` run would produce —
@@ -50,6 +63,8 @@ from repro.core.warc.errors import RecordReadError
 from repro.index.cdx import CdxIndex
 from repro.index.query import PatternHit, QueryEngine, QueryPlan
 from repro.index.service import QueryRequest, QueryResponse
+from repro.obs import flight as obs_flight
+from repro.obs import trace as obs_trace
 from .cache import RecordCache
 from .metrics import GatewayMetrics
 
@@ -82,9 +97,47 @@ class _Ticket:
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
     deadline: float | None = None  # absolute perf_counter time, or None
+    # request-scoped tracing (None when trace_requests=False): the root
+    # span carries the trace across the submit-thread → scheduler-thread
+    # boundary; wait_span times queue residency (opened by the submitter,
+    # closed by the scheduler)
+    span: obs_trace.Span | None = None
+    wait_span: obs_trace.Span | None = None
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
+
+
+class _StageCM:
+    """``with gw._stage("gw.cache_fill") as sp:`` — span + stage
+    histogram, or a no-op when the gateway isn't tracing."""
+
+    __slots__ = ("_gw", "span")
+
+    def __init__(self, gw: "ArchiveGateway", name: str,
+                 parent=None, attrs=None):
+        self._gw = gw
+        self.span = obs_trace.start_span(name, parent, attrs=attrs)
+
+    def __enter__(self) -> obs_trace.Span:
+        return self.span
+
+    def __exit__(self, *exc) -> None:
+        self._gw._end_span(self.span)
+
+
+class _NullCM:
+    __slots__ = ()
+    span = None
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+_NULL_CM = _NullCM()
 
 
 class ArchiveGateway:
@@ -118,6 +171,20 @@ class ArchiveGateway:
         ``deadline_s`` at :meth:`submit`; ``None`` (default) means no
         deadline. Expired requests resolve with :class:`GatewayTimeout`
         instead of occupying scan capacity.
+    trace_requests:
+        request-scoped span tracing (default on; the serve bench gates
+        the traced path at ≤1.05× the untraced one). Off, the only cost
+        left is one branch per stage.
+    flight_recorder:
+        where finished spans and anomaly dumps go; ``None`` uses the
+        process-default :func:`repro.obs.flight.recorder`.
+    slo_p99_s:
+        latency objective: after a batch resolves, a measured p99 above
+        this trips an anomaly dump (needs ≥32 latency samples so one
+        cold scan can't cry wolf). ``None`` disables the check.
+    queue_highwater:
+        admission-queue depth that trips an anomaly dump when first
+        crossed (default: ¾ of ``max_pending``).
     """
 
     def __init__(self, index: CdxIndex, *, engine: QueryEngine | None = None,
@@ -125,7 +192,11 @@ class ArchiveGateway:
                  cache_bytes: int = 64 << 20, cache_admission: str = "tinylfu",
                  use_kernel: bool = True,
                  interpret: bool = True, poll_interval_s: float = 0.02,
-                 default_deadline_s: float | None = None
+                 default_deadline_s: float | None = None,
+                 trace_requests: bool = True,
+                 flight_recorder: obs_flight.FlightRecorder | None = None,
+                 slo_p99_s: float | None = None,
+                 queue_highwater: int | None = None,
                  ) -> None:
         self.engine = engine if engine is not None else QueryEngine(
             index, use_kernel=use_kernel, interpret=interpret)
@@ -135,6 +206,14 @@ class ArchiveGateway:
         self.max_batch_requests = max(1, max_batch_requests)
         self.default_deadline_s = default_deadline_s
         self._poll = poll_interval_s
+        self._trace = bool(trace_requests)
+        self._flight = flight_recorder if flight_recorder is not None \
+            else obs_flight.recorder()
+        self._slo_p99_s = slo_p99_s
+        self._highwater = queue_highwater if queue_highwater is not None \
+            else max(4, (max_pending * 3) // 4)
+        self._above_highwater = False
+        self._queue_hw_seen = 0
         self._queue: "queue.Queue[_Ticket]" = queue.Queue(max(1, max_pending))
         self._inflight: dict[tuple, list[_Ticket]] = {}
         self._lock = threading.Lock()
@@ -143,6 +222,38 @@ class ArchiveGateway:
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="archive-gateway")
         self._thread.start()
+
+    # -- tracing plumbing -------------------------------------------------
+    def _end_span(self, span: obs_trace.Span | None) -> None:
+        """Finish a span into the flight recorder and fold its duration
+        into the ``gateway.stage.*`` histogram of the same name."""
+        if span is not None:
+            self.metrics.observe_stage(span.name,
+                                       span.finish(recorder=self._flight))
+
+    def _stage(self, name: str, parent=None, attrs=None):
+        """Context manager for one scheduler-side stage (no-op untraced)."""
+        if not self._trace:
+            return _NULL_CM
+        return _StageCM(self, name, parent, attrs)
+
+    def _trip(self, reason: str, attrs: dict | None = None) -> None:
+        """Anomaly: auto-dump the flight recorder (rate-limited inside)."""
+        if self._flight.trip(reason, attrs) is not None:
+            self.metrics.inc("flight_dumps")
+
+    def _note_queue_depth(self, depth: int) -> None:
+        self.metrics.gauge_set("queue_depth", depth)
+        if depth > self._queue_hw_seen:
+            self._queue_hw_seen = depth
+            self.metrics.gauge_set("queue_depth_highwater", depth)
+        if depth >= self._highwater:
+            if not self._above_highwater:  # trip on the crossing, not
+                self._above_highwater = True  # on every submit above it
+                self._trip("queue_highwater",
+                           {"depth": depth, "highwater": self._highwater})
+        else:
+            self._above_highwater = False
 
     # -- client side -----------------------------------------------------
     def submit(self, request: QueryRequest, *, block: bool = True,
@@ -170,19 +281,47 @@ class ArchiveGateway:
         budget = deadline_s if deadline_s is not None else self.default_deadline_s
         if budget is not None:
             ticket.deadline = ticket.t_submit + budget
+        adm = None
+        if self._trace:
+            # root span: the whole request, submit → resolution; its
+            # trace id rides the ticket across the scheduler boundary
+            ticket.span = obs_trace.start_span(
+                "gw.request", parent=obs_trace.ROOT, t0=ticket.t_submit,
+                attrs={"pattern": repr(request.pattern[:64]),
+                       "regex": request.regex, "top_k": request.top_k})
+            adm = obs_trace.start_span("gw.admission", ticket.span,
+                                       t0=ticket.t_submit)
         with self._lock:
             waiters = self._inflight.get(request.scan_key())
             if waiters is not None:
                 waiters.append(ticket)
                 self.metrics.inc("requests")
                 self.metrics.inc("coalesced")
+                if adm is not None:
+                    self._end_span(adm)
+                    with self._stage("gw.coalesce_attach", ticket.span,
+                                     attrs={"inflight_waiters":
+                                            len(waiters)}):
+                        pass
                 return ticket.future
         try:
             self._queue.put(ticket, block=block, timeout=timeout)
         except queue.Full:
             self.metrics.inc("rejected")
+            if adm is not None:
+                adm.set_attr("rejected", True)
+                self._end_span(adm)
+                ticket.span.set_attr("error", "GatewayOverloaded")
+                ticket.span.finish(recorder=self._flight)
+            self._trip("gateway_overloaded",
+                       {"max_pending": self._queue.maxsize})
             raise GatewayOverloaded(
                 f"admission queue full ({self._queue.maxsize} pending)")
+        if adm is not None:
+            self._end_span(adm)
+            ticket.wait_span = obs_trace.start_span("gw.queue_wait",
+                                                    ticket.span)
+        self._note_queue_depth(self._queue.qsize())
         if self._closed and not self._thread.is_alive():
             # raced close(): we passed the closed check before close()
             # flipped it, but enqueued after the scheduler exited — no
@@ -226,6 +365,7 @@ class ArchiveGateway:
                     batch.append(self._queue.get_nowait())
                 except queue.Empty:
                     break
+            self._note_queue_depth(self._queue.qsize())
             try:
                 self._serve_batch(batch)
             except BaseException:  # the scheduler must outlive any batch
@@ -233,12 +373,53 @@ class ArchiveGateway:
 
     def _timeout(self, ticket: _Ticket) -> None:
         """Resolve one expired ticket (caller already claimed the future)."""
+        waited = time.perf_counter() - ticket.t_submit
         ticket.future.set_exception(GatewayTimeout(
-            f"deadline expired after "
-            f"{time.perf_counter() - ticket.t_submit:.3f}s"))
+            f"deadline expired after {waited:.3f}s"))
         self.metrics.inc("timeouts")
+        if ticket.span is not None:
+            # marker child + closed root *before* the trip, so the dump
+            # holds the offending request's complete span tree
+            with self._stage("gw.timeout", ticket.span,
+                             attrs={"waited_s": waited}):
+                pass
+            ticket.span.set_attr("error", "GatewayTimeout")
+            ticket.span.finish(recorder=self._flight)
+        self._trip("gateway_timeout",
+                   {"waited_s": waited,
+                    "trace_id": ticket.span.trace_id if ticket.span else None})
 
     def _serve_batch(self, tickets: list[_Ticket]) -> None:
+        if not self._trace:
+            self._serve_batch_body(tickets)
+            return
+        # the batch roots its own trace (a scan serves many requests —
+        # span trees are strict, so waiter roots *link* to it via attrs
+        # rather than parent it); installing it as the context's current
+        # span lets every stage below default-parent to it
+        for ticket in tickets:
+            if ticket.wait_span is not None:  # queue residency ends here
+                self._end_span(ticket.wait_span)
+                ticket.wait_span = None
+        batch_span = obs_trace.start_span(
+            "gw.scan_batch", obs_trace.ROOT,
+            attrs={"n_tickets": len(tickets),
+                   "waiter_traces": [t.span.trace_id for t in tickets
+                                     if t.span is not None]})
+        try:
+            with obs_trace.use_span(batch_span):
+                self._serve_batch_body(tickets)
+        finally:
+            self._end_span(batch_span)
+        if self._slo_p99_s is not None and self.metrics.latency_count() >= 32:
+            p99 = self.metrics.latency_s(99)
+            self.metrics.gauge_set("latency_p99_s", p99)
+            if p99 > self._slo_p99_s:
+                self._trip("slo_p99", {"p99_s": p99,
+                                       "slo_s": self._slo_p99_s})
+
+    def _serve_batch_body(self, tickets: list[_Ticket]) -> None:
+        form = self._stage("gw.batch_form").__enter__()
         # shed already-expired tickets before planning anything: under
         # overload the queue ages, and scanning for a waiter that stopped
         # caring only makes every later deadline worse
@@ -251,6 +432,7 @@ class ArchiveGateway:
             else:
                 live.append(ticket)
         if not live:
+            self._end_span(form)
             return
         tickets = live
         # group by scan identity; first occurrence keeps submission order
@@ -266,15 +448,19 @@ class ArchiveGateway:
             # publish the in-flight registry: identical requests submitted
             # while we scan attach to these lists and never enter the queue
             self._inflight.update(groups)
+        self._end_span(form)
         self.metrics.inc("scan_batches")
         self.metrics.inc("unique_scans", len(groups))
         results: dict[tuple, list[PatternHit]] = {}
         failures: dict[tuple, BaseException] = {}
         try:
             plans = {}
-            for key, waiters in groups.items():
+            for key, group_waiters in groups.items():
                 try:
-                    plans[key] = self._plan(waiters[0].request)
+                    with self._stage("gw.prefilter",
+                                     attrs={"pattern":
+                                            repr(key[0][:64])}):
+                        plans[key] = self._plan(group_waiters[0].request)
                 except Exception as exc:  # malformed query: fail only its
                     failures[key] = exc   # own waiters, not the batch
                     self.metrics.inc("errors")
@@ -287,32 +473,43 @@ class ArchiveGateway:
         finally:
             with self._lock:
                 waiters = {key: self._inflight.pop(key) for key in groups}
-        now = time.perf_counter()
-        for key, tickets_for_key in waiters.items():
-            hits = results.get(key, [])
-            error = failures.get(key)
-            # rank: most matches first, index order breaks ties (stable) —
-            # identical to IndexQueryService
-            ranked = sorted(hits, key=lambda h: -h.n_matches)
-            for ticket in tickets_for_key:
-                # a client may have cancel()ed while we scanned; claiming
-                # the future first makes the set_* below race-free (and a
-                # cancelled ticket must not kill the scheduler)
-                if not ticket.future.set_running_or_notify_cancel():
-                    continue
-                if error is not None:
-                    ticket.future.set_exception(error)
-                    continue
-                if ticket.expired(now):  # scan outlived the deadline
-                    self._timeout(ticket)
-                    continue
-                latency = now - ticket.t_submit
-                ticket.future.set_result(QueryResponse(
-                    request=ticket.request,
-                    hits=ranked[:ticket.request.top_k],
-                    total_matches=len(hits), latency_s=latency))
-                self.metrics.observe_latency(latency)
-                self.metrics.inc("responses")
+        with self._stage("gw.respond"):
+            now = time.perf_counter()
+            for key, tickets_for_key in waiters.items():
+                hits = results.get(key, [])
+                error = failures.get(key)
+                # rank: most matches first, index order breaks ties
+                # (stable) — identical to IndexQueryService
+                ranked = sorted(hits, key=lambda h: -h.n_matches)
+                for ticket in tickets_for_key:
+                    # a client may have cancel()ed while we scanned;
+                    # claiming the future first makes the set_* below
+                    # race-free (and a cancelled ticket must not kill the
+                    # scheduler)
+                    if not ticket.future.set_running_or_notify_cancel():
+                        if ticket.span is not None:
+                            ticket.span.set_attr("cancelled", True)
+                            ticket.span.finish(recorder=self._flight)
+                        continue
+                    if error is not None:
+                        ticket.future.set_exception(error)
+                        if ticket.span is not None:
+                            ticket.span.set_attr("error",
+                                                 type(error).__name__)
+                            ticket.span.finish(recorder=self._flight)
+                        continue
+                    if ticket.expired(now):  # scan outlived the deadline
+                        self._timeout(ticket)
+                        continue
+                    latency = now - ticket.t_submit
+                    ticket.future.set_result(QueryResponse(
+                        request=ticket.request,
+                        hits=ranked[:ticket.request.top_k],
+                        total_matches=len(hits), latency_s=latency))
+                    self.metrics.observe_latency(latency)
+                    self.metrics.inc("responses")
+                    if ticket.span is not None:
+                        ticket.span.finish(recorder=self._flight)
 
     def _plan(self, request: QueryRequest) -> QueryPlan:
         if request.regex:
@@ -344,14 +541,18 @@ class ArchiveGateway:
         """
         bufs: dict[int, bytes] = {}
         dead: set[int] = set()
-        for _, row in chunk:  # dedupe: shared rows fetched once
-            if row in bufs or row in dead:
-                continue
-            try:
-                bufs[row] = self._fetch(row)
-            except RecordReadError:
-                dead.add(row)
-                self.metrics.inc("read_errors")
+        with self._stage("gw.cache_fill",
+                         attrs={"rows": len(chunk)}) as sp:
+            for _, row in chunk:  # dedupe: shared rows fetched once
+                if row in bufs or row in dead:
+                    continue
+                try:
+                    bufs[row] = self._fetch(row)
+                except RecordReadError:
+                    dead.add(row)
+                    self.metrics.inc("read_errors")
+            if sp is not None:
+                sp.set_attr("fetched", len(bufs))
         if not dead:
             return bufs, chunk
         self.metrics.inc("quarantined_rows", len(dead))
@@ -426,13 +627,15 @@ class ArchiveGateway:
                 continue
             try:
                 bufs, chunk = self._fetch_chunk(chunk)
-                for key, row in chunk:
-                    plan = plans[key]
-                    buf = bufs[row]
-                    self._finish_row(plan, key, row, buf, plan.host_scan(buf),
-                                     results)
-                    n_scanned += 1
-                    bytes_scanned += len(buf)
+                with self._stage("gw.host_verify",
+                                 attrs={"rows": len(chunk)}):
+                    for key, row in chunk:
+                        plan = plans[key]
+                        buf = bufs[row]
+                        self._finish_row(plan, key, row, buf,
+                                         plan.host_scan(buf), results)
+                        n_scanned += 1
+                        bytes_scanned += len(buf)
             except Exception as exc:
                 self._fail_chunk(chunk, exc, failures)
 
@@ -477,14 +680,20 @@ class ArchiveGateway:
 
         chunk_bufs = [bufs[row] for _, row in chunk]
         chunk_pats = [plans[key].kernel_pattern for key, _ in chunk]
-        masks = find_pattern_masks_multi(chunk_bufs, chunk_pats,
-                                         block=self.engine.scan_block,
-                                         interpret=self.engine.interpret)
-        self.metrics.inc("kernel_dispatches", dispatch_count(
-            [len(b) for b in chunk_bufs], self.engine.scan_block))
-        for (key, row), mask, buf in zip(chunk, masks, chunk_bufs):
-            self._finish_row(plans[key], key, row, buf,
-                             np.flatnonzero(mask), results)
+        with self._stage("gw.kernel_dispatch",
+                         attrs={"rows": len(chunk)}) as sp:
+            masks = find_pattern_masks_multi(chunk_bufs, chunk_pats,
+                                             block=self.engine.scan_block,
+                                             interpret=self.engine.interpret)
+            dispatches = dispatch_count(
+                [len(b) for b in chunk_bufs], self.engine.scan_block)
+            if sp is not None:
+                sp.set_attr("dispatches", dispatches)
+        self.metrics.inc("kernel_dispatches", dispatches)
+        with self._stage("gw.host_verify", attrs={"rows": len(chunk)}):
+            for (key, row), mask, buf in zip(chunk, masks, chunk_bufs):
+                self._finish_row(plans[key], key, row, buf,
+                                 np.flatnonzero(mask), results)
 
     # -- lifecycle -------------------------------------------------------
     def _fail_queued(self) -> None:

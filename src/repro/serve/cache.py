@@ -123,6 +123,7 @@ class RecordCache:
         self.evictions = 0
         self.rejected_oversize = 0
         self.rejected_admission = 0
+        self.bytes_filled = 0  # bytes admitted over the cache's lifetime
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -192,6 +193,7 @@ class RecordCache:
                     return False
             self._entries[key] = data
             self._bytes += size
+            self.bytes_filled += size
             while self._bytes > self.budget_bytes:
                 _, evicted = self._entries.popitem(last=False)
                 self._bytes -= len(evicted)
@@ -216,5 +218,6 @@ class RecordCache:
                 "evictions": self.evictions,
                 "rejected_oversize": self.rejected_oversize,
                 "rejected_admission": self.rejected_admission,
+                "bytes_filled": self.bytes_filled,
                 "hit_rate": self.hit_rate,
             }

@@ -5,6 +5,10 @@ drained into fixed-size batches (static shapes for jit), each batch is
 prefilled token-by-token into the cache, then decoded greedily/with
 temperature until EOS or ``max_new_tokens``. The decode step is the same
 ``decode_step`` the dry-run lowers at 32k-cache scale.
+
+With tracing on (``repro.obs.trace.enable()``), each batch records
+``serve.prefill`` / ``serve.decode`` span durations — one enabled()
+check per batch, zero per-token cost.
 """
 from __future__ import annotations
 
@@ -17,6 +21,7 @@ import numpy as np
 
 from repro.data.tokenizer import EOS_ID, BOS_ID, decode as tok_decode, encode
 from repro.models import transformer as tf_mod
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -64,6 +69,7 @@ class ServeEngine:
         max_prompt = max(p.size for p in prompts)
         cache = tf_mod.init_cache(self.cfg, B, self.max_seq,
                                   dtype=self.cfg.jnp_dtype)
+        traced = obs_trace.enabled()  # one check per batch, not per token
         t0 = time.perf_counter()
         # prefill token-by-token (cache fills positionally; static shapes)
         tok = jnp.asarray([p[0] for p in prompts], jnp.int32)
@@ -74,6 +80,9 @@ class ServeEngine:
             tok = jnp.asarray(
                 [n if n is not None else int(sampled[j])
                  for j, n in enumerate(nxt_in)], jnp.int32)
+        t_prefill = time.perf_counter()
+        if traced:
+            obs_trace.add("serve.prefill", t_prefill - t0)
         # decode
         budget = max(r.max_new_tokens for r in requests)
         for _ in range(min(budget, self.max_seq - max_prompt - 1)):
@@ -86,7 +95,10 @@ class ServeEngine:
                 break
             logits, cache = self._step(self.params, cache, tok)
             tok = self._sample(logits)
-        dt = time.perf_counter() - t0
+        t_end = time.perf_counter()
+        if traced:
+            obs_trace.add("serve.decode", t_end - t_prefill)
+        dt = t_end - t0
         self.stats["requests"] += len(requests)
         self.stats["tokens_generated"] += sum(
             len(r.out_tokens) for r in requests)

@@ -24,11 +24,13 @@ Thread-safe: submit-side counters race with the scheduler thread.
 """
 from __future__ import annotations
 
+from repro.obs.export import breakdown_from_snapshot
 from repro.obs.registry import ObsSnapshot, Registry, percentile
 
 __all__ = ["GatewayMetrics", "percentile"]
 
 _LATENCY_HIST = "gateway.latency_s"
+_STAGE_PREFIX = "gateway.stage."
 
 
 class GatewayMetrics:
@@ -50,6 +52,7 @@ class GatewayMetrics:
         "timeouts",            # requests resolved with GatewayTimeout
         "read_errors",         # damaged-record fetches (RecordReadError)
         "quarantined_rows",    # candidate rows skipped as unreadable
+        "flight_dumps",        # anomaly-tripped flight-recorder dumps
     )
 
     def __init__(self, registry: Registry | None = None) -> None:
@@ -70,11 +73,29 @@ class GatewayMetrics:
     def observe_latency(self, seconds: float) -> None:
         self._reg.observe(_LATENCY_HIST, seconds)
 
+    def observe_stage(self, span_name: str, seconds: float) -> None:
+        """Record one request-scoped stage duration (PR 8 tracing):
+        span name ``gw.<stage>`` lands in the ``gateway.stage.<stage>_s``
+        histogram, the source `repro.obs.export.breakdown_from_snapshot`
+        attributes from."""
+        stage = span_name[3:] if span_name.startswith("gw.") else span_name
+        self._reg.observe(f"{_STAGE_PREFIX}{stage}_s", seconds)
+
+    def gauge_set(self, name: str, value: float) -> None:
+        """Set a gauge (prefixed ``gateway.`` for the merged snapshot)."""
+        self._reg.gauge_set(f"gateway.{name}", value)
+
     def count(self, name: str) -> int:
         return self._reg.counter(name)
 
     def latency_s(self, q: float) -> float:
         return self._reg.quantile(_LATENCY_HIST, q)
+
+    def latency_count(self) -> int:
+        return self._reg.hist_count(_LATENCY_HIST)
+
+    def stage_quantile(self, stage: str, q: float) -> float:
+        return self._reg.quantile(f"{_STAGE_PREFIX}{stage}_s", q)
 
     def snapshot(self, cache=None) -> dict:
         """One coherent view: raw counters + the derived headline rates.
@@ -90,6 +111,12 @@ class GatewayMetrics:
         out["coalesce_rate"] = out["coalesced"] / max(out["requests"], 1)
         out["dispatches_per_request"] = out["kernel_dispatches"] / responses
         out["records_scanned_per_request"] = out["records_scanned"] / responses
+        out["queue_depth"] = snap.gauge("gateway.queue_depth")
+        out["queue_depth_highwater"] = snap.gauge(
+            "gateway.queue_depth_highwater")
+        stages = breakdown_from_snapshot(snap)
+        if stages:  # request tracing on: per-stage attribution rides along
+            out["stages"] = stages
         if cache is not None:
             for key, value in cache.snapshot().items():
                 out[f"cache_{key}"] = value
@@ -102,7 +129,10 @@ class GatewayMetrics:
         raw = self._reg.snapshot()
         out = ObsSnapshot(sources=("gateway",))
         out.counters = {f"gateway.{k}": v for k, v in raw.counters.items()}
-        out.gauges = {f"gateway.{k}": v for k, v in raw.gauges.items()}
+        # gauge_set already stores gauges gateway.-prefixed (snapshot()
+        # reads them by that name); re-prefixing would yield gateway.gateway.*
+        out.gauges = {k if k.startswith("gateway.") else f"gateway.{k}": v
+                      for k, v in raw.gauges.items()}
         out.histograms = dict(raw.histograms)  # already gateway.-prefixed
         if cache is not None:
             for key, value in cache.snapshot().items():

@@ -1,0 +1,69 @@
+"""Child-process targets for the shm stats-slot tests.
+
+The ``forkserver`` start method pickles ``Process`` targets by
+qualified name, so these helpers must live in an importable module —
+a test-local closure would fail to spawn. They are deliberately
+import-light (stdlib + ``repro.obs`` only): the forkserver parent
+imports this module fresh per child.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.obs.registry import ObsSnapshot
+from repro.obs.shmstats import STATS_SLOT_BYTES, StatsSlotWriter
+from repro.obs.shmstats import _HDR  # noqa: F401 - frame layout, tests only
+
+__all__ = ["publish_counters", "stall_mid_write"]
+
+
+def _attach(shm_name: str):
+    """Attach the parent-owned segment without registering it with this
+    process's resource tracker (the repo-wide child-attach idiom: the
+    parent owns lifetime; a tracker entry here would double-unlink)."""
+    from multiprocessing import resource_tracker, shared_memory
+
+    orig_register = resource_tracker.register
+    resource_tracker.register = lambda *a, **k: None
+    try:
+        return shared_memory.SharedMemory(name=shm_name)
+    finally:
+        resource_tracker.register = orig_register
+
+
+def publish_counters(shm_name: str, offset: int, counters: dict,
+                     publishes: int = 1) -> None:
+    """Attach the parent's segment and publish ``counters`` as a
+    cumulative snapshot ``publishes`` times (seqlock exercises the
+    even→odd→even cycle once per publish)."""
+    shm = _attach(shm_name)
+    try:
+        writer = StatsSlotWriter(shm.buf[offset:offset + STATS_SLOT_BYTES])
+        for i in range(publishes):
+            snap = ObsSnapshot(
+                counters={k: v + i for k, v in counters.items()},
+                sources=(f"child-{os.getpid()}",))
+            writer.publish(snap)
+        writer.close()
+    finally:
+        shm.close()
+
+
+def stall_mid_write(shm_name: str, offset: int, started) -> None:
+    """Simulate a writer dying *mid-publish*: mark the slot's seq odd,
+    scribble garbage into the payload area, signal ``started``, and hang
+    until the parent SIGKILLs us. A correct reader must reject the torn
+    frame (``read() is None``); a successor writer must recover the slot
+    (stale odd seq bumps to even on construction)."""
+    shm = _attach(shm_name)
+    try:
+        buf = shm.buf[offset:offset + STATS_SLOT_BYTES]
+        garbage = b"\xde\xad" * 32
+        _HDR.pack_into(buf, 0, 7, len(garbage))  # odd seq: in progress
+        buf[_HDR.size:_HDR.size + len(garbage)] = garbage
+        del buf  # release the memoryview before the parent unlinks
+        started.set()
+        time.sleep(600)  # parent SIGKILLs here
+    finally:
+        shm.close()

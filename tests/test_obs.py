@@ -10,6 +10,8 @@ readahead decoder child and the gateway — each counted exactly once.
 import glob
 import json
 import os
+import re
+import signal
 import threading
 import time
 
@@ -191,6 +193,56 @@ def test_json_and_prometheus_render():
     assert "repro_span_ingest_fill_s_count 3" in text
 
 
+_PROM_TYPE_LINE = re.compile(
+    r"^# TYPE [a-zA-Z_:][a-zA-Z0-9_:]* "
+    r"(counter|gauge|summary|histogram|untyped)$")
+# exposition-format grammar: metric name, optional {label="value",...}
+# with only \\ \" \n escapes inside values, one float sample
+_PROM_LABEL = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\\\|\\"|\\n)*"'
+_PROM_METRIC_LINE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*"
+    rf"(?:\{{{_PROM_LABEL}(?:,{_PROM_LABEL})*\}})?"
+    r" (?:[+-]?(?:[0-9]*\.?[0-9]+(?:[eE][+-]?[0-9]+)?|Inf)|NaN)$")
+
+
+def _prom_unescape(value: str) -> str:
+    """Inverse of the exposition escaping, one left-to-right pass."""
+    out, i = [], 0
+    while i < len(value):
+        if value[i] == "\\" and i + 1 < len(value):
+            out.append({"n": "\n", '"': '"', "\\": "\\"}[value[i + 1]])
+            i += 2
+        else:
+            out.append(value[i])
+            i += 1
+    return "".join(out)
+
+
+def test_prometheus_escaping_and_summary_families():
+    nasty = 'we"ird\\src\nline'
+    reg = Registry(source=nasty)
+    reg.counter_add("gateway.requests", 3)
+    reg.gauge_set("gateway.queue_depth", 2.0)
+    for v in (0.001, 0.002, 0.003, 0.004):
+        reg.observe("gateway.stage.queue_wait_s", v)
+    text = render_prometheus(reg.snapshot())
+    # every line round-trips against the exposition-format grammar
+    for line in text.rstrip("\n").split("\n"):
+        pat = _PROM_TYPE_LINE if line.startswith("#") else _PROM_METRIC_LINE
+        assert pat.match(line), f"grammar violation: {line!r}"
+    # proper summary family: typed once, quantile children + _count/_sum
+    assert "# TYPE repro_gateway_stage_queue_wait_s summary" in text
+    for q in ("0.5", "0.9", "0.99"):
+        assert f'repro_gateway_stage_queue_wait_s{{quantile="{q}"}}' in text
+    assert "repro_gateway_stage_queue_wait_s_count 4" in text
+    assert "repro_gateway_stage_queue_wait_s_sum 0.01\n" in text
+    # the nasty source label value unescapes back to the original
+    m = re.search(r'repro_obs_source\{source="((?:[^"\\\n]|\\.)*)"\} 1',
+                  text)
+    assert m is not None
+    assert _prom_unescape(m.group(1)) == nasty
+
+
 def test_dump_cli_renders_snapshot_file(tmp_path):
     from repro.obs.dump import main
 
@@ -239,6 +291,101 @@ def test_stats_slot_oversize_drops():
     assert writer.oversize_drops == 1
     assert StatsSlotReader(buf).read() is None  # nothing half-written
     assert writer.publish(_snap({"ok": 1}))  # next smaller publish lands
+
+
+def _forkserver_ctx():
+    import multiprocessing as mp
+
+    try:
+        return mp.get_context("forkserver")
+    except ValueError:
+        pytest.skip("forkserver start method unavailable")
+
+
+def test_stats_slots_forkserver_publish_and_harvest():
+    """The seqlock slots under the forkserver start method: children are
+    spawned from a fresh interpreter (targets pickled by qualified name,
+    hence repro.testing.obs_children), attach the parent-owned segment,
+    and publish through the even→odd→even cycle; the parent harvests
+    the last stable frame of each slot."""
+    from multiprocessing import shared_memory
+
+    from repro.testing import obs_children
+
+    ctx = _forkserver_ctx()
+    shm = shared_memory.SharedMemory(create=True,
+                                     size=2 * STATS_SLOT_BYTES)
+    try:
+        procs = [ctx.Process(
+            target=obs_children.publish_counters,
+            args=(shm.name, w * STATS_SLOT_BYTES,
+                  {"ingest.records": 100 * (w + 1)}, 3))
+            for w in range(2)]
+        try:
+            for p in procs:
+                p.start()
+            for p in procs:
+                p.join(60)
+                assert p.exitcode == 0
+        finally:
+            # a wedged child must fail THIS test, never hang the suite
+            # (multiprocessing's atexit handler joins live children)
+            for p in procs:
+                if p.is_alive():
+                    p.kill()
+                    p.join(10)
+        snaps = []
+        for w in range(2):
+            reader = StatsSlotReader(
+                shm.buf[w * STATS_SLOT_BYTES:(w + 1) * STATS_SLOT_BYTES])
+            snap = reader.read()
+            reader.close()
+            assert snap is not None, f"slot {w} unreadable"
+            snaps.append(snap)
+        merged = ObsSnapshot.merge(snaps)
+        # each child published 3 cumulative frames; the harvest sees the
+        # last (base + 2) — stale frames were overwritten in place
+        assert merged.counters["ingest.records"] == (100 + 2) + (200 + 2)
+        assert len(merged.sources) == 2  # one child-<pid> source each
+    finally:
+        shm.close()
+        shm.unlink()
+
+
+def test_stats_slot_torn_frame_after_midwrite_sigkill():
+    """SIGKILL a forkserver child that died *mid-publish* (odd seq,
+    garbage payload): the reader must reject the torn frame, and a
+    successor writer must recover the slot."""
+    from multiprocessing import shared_memory
+
+    from repro.testing import obs_children
+
+    ctx = _forkserver_ctx()
+    shm = shared_memory.SharedMemory(create=True, size=STATS_SLOT_BYTES)
+    try:
+        started = ctx.Event()
+        p = ctx.Process(target=obs_children.stall_mid_write,
+                        args=(shm.name, 0, started))
+        p.start()
+        try:
+            assert started.wait(60), "child never reached mid-write"
+        finally:
+            os.kill(p.pid, signal.SIGKILL)
+            p.join(30)
+        assert p.exitcode == -signal.SIGKILL
+        reader = StatsSlotReader(shm.buf)
+        assert reader.read() is None  # odd seq: torn frame rejected
+        # successor recovers: stale odd marker bumps to even, and the
+        # next publish is readable
+        writer = StatsSlotWriter(shm.buf)
+        assert writer.publish(_snap({"recovered": 1}))
+        got = reader.read()
+        assert got is not None and got.counters == {"recovered": 1}
+        reader.close()
+        writer.close()
+    finally:
+        shm.close()
+        shm.unlink()
 
 
 # -- tracing --------------------------------------------------------------

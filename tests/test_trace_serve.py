@@ -1,0 +1,385 @@
+"""Request-scoped tracing suite (``pytest -m obs``): the PR 8 layer.
+
+Span trees and context propagation (same-thread contextvar nesting,
+explicit cross-thread parent hand-off), the bounded per-thread flight
+recorder and its rate-limited anomaly dumps, the Chrome-trace and
+stage-breakdown exporters, the ``repro.obs.top`` renderer, and the
+gateway integration — including the acceptance criterion: an induced
+``GatewayTimeout`` auto-dumps a flight file containing the offending
+request's *complete* span tree.
+"""
+import json
+import os
+import threading
+
+import pytest
+
+from repro import obs
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import QueryRequest, build_index
+from repro.obs import flight as obs_flight
+from repro.obs import top as obs_top
+from repro.obs import trace
+from repro.obs.export import (
+    breakdown_from_snapshot,
+    breakdown_from_spans,
+    chrome_trace,
+    dominant_stage,
+    render_stage_table,
+    write_chrome_trace,
+)
+from repro.obs.flight import FlightRecorder
+from repro.obs.registry import ObsSnapshot, Registry
+from repro.serve import ArchiveGateway, GatewayTimeout
+
+pytestmark = pytest.mark.obs
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs(tmp_path):
+    """Fresh process-default registry *and* flight recorder per test."""
+    prev_reg = obs.set_registry(Registry(source="parent"))
+    prev_rec = obs_flight.set_recorder(
+        FlightRecorder(dump_dir=str(tmp_path / "flight")))
+    yield
+    obs_flight.set_recorder(prev_rec)
+    obs.set_registry(prev_reg)
+
+
+@pytest.fixture(scope="module")
+def corpus_index(tmp_path_factory):
+    d = tmp_path_factory.mktemp("trace-serve-corpus")
+    paths = []
+    for i in range(2):
+        p = str(d / f"shard-{i}.warc.gz")
+        write_corpus(p, CorpusSpec(n_pages=10, seed=i), "gzip")
+        paths.append(p)
+    return build_index(paths)
+
+
+def _finished(name, trace_id=1, span_id=2, parent_id=0, t0=0.0, dur=0.01,
+              thread="t"):
+    s = trace.Span(name, trace_id, span_id, parent_id, t0, thread)
+    s.finish(t0 + dur, recorder=False)
+    return s
+
+
+# -- span trees ----------------------------------------------------------
+
+def test_span_tree_same_thread_nesting():
+    root = trace.start_span("gw.request", parent=trace.ROOT)
+    assert root.parent_id == 0
+    with trace.use_span(root):
+        assert trace.current_span() is root
+        child = trace.start_span("gw.admission")  # contextvar parent
+        assert child.trace_id == root.trace_id
+        assert child.parent_id == root.span_id
+        with trace.use_span(child):
+            grandchild = trace.start_span("gw.prefilter")
+            assert grandchild.trace_id == root.trace_id
+            assert grandchild.parent_id == child.span_id
+            # ROOT forces a fresh trace even under an active span
+            fresh = trace.start_span("gw.scan_batch", parent=trace.ROOT)
+            assert fresh.trace_id != root.trace_id
+            assert fresh.parent_id == 0
+    assert trace.current_span() is None
+
+
+def test_span_cross_thread_handoff():
+    root = trace.start_span("gw.request", parent=trace.ROOT)
+    seen = {}
+
+    def scheduler():
+        # a fresh thread has no inherited contextvar state ...
+        seen["current"] = trace.current_span()
+        # ... so the parent crosses explicitly: a Span or its context()
+        seen["by_span"] = trace.start_span("gw.queue_wait", root)
+        seen["by_ctx"] = trace.start_span("gw.timeout", root.context())
+
+    t = threading.Thread(target=scheduler, name="sched")
+    t.start()
+    t.join()
+    assert seen["current"] is None
+    for child in (seen["by_span"], seen["by_ctx"]):
+        assert child.trace_id == root.trace_id
+        assert child.parent_id == root.span_id
+    assert seen["by_span"].thread == "sched"
+
+
+def test_span_finish_idempotent_and_recorded():
+    rec = FlightRecorder()
+    s = trace.start_span("gw.request", parent=trace.ROOT)
+    d1 = s.finish(recorder=rec)
+    d2 = s.finish(recorder=rec)  # idempotent: no double-record
+    assert d1 == d2 >= 0.0
+    assert [x.span_id for x in rec.spans()] == [s.span_id]
+
+
+def test_span_backdated_t0_and_attrs():
+    s = trace.start_span("gw.queue_wait", parent=trace.ROOT, t0=1.0,
+                         attrs={"k": 1})
+    s.set_attr("error", "GatewayTimeout")
+    dur = s.finish(3.5, recorder=False)
+    assert dur == pytest.approx(2.5)
+    d = s.as_dict()
+    assert d["dur_us"] == pytest.approx(2.5e6)
+    assert d["attrs"] == {"k": 1, "error": "GatewayTimeout"}
+
+
+# -- flight recorder ------------------------------------------------------
+
+def test_flight_ring_bounded_per_thread():
+    rec = FlightRecorder(capacity_per_thread=64)
+    for i in range(200):
+        rec.record(_finished("a", span_id=i))
+    spans = rec.spans()
+    assert len(spans) == 64  # ring rotated: only the newest survive
+    assert spans[-1].span_id == 199
+
+    def writer():
+        for i in range(10):
+            rec.record(_finished("b", span_id=1000 + i, thread="w"))
+
+    t = threading.Thread(target=writer, name="w")
+    t.start()
+    t.join()
+    # the second thread got its own ring; neither evicted the other
+    names = {s.name for s in rec.spans()}
+    assert names == {"a", "b"}
+    assert sum(1 for s in rec.spans() if s.name == "b") == 10
+
+
+def test_flight_trip_rate_limited(tmp_path):
+    rec = FlightRecorder(min_dump_interval_s=3600.0,
+                         dump_dir=str(tmp_path))
+    rec.record(_finished("x"))
+    first = rec.trip("gateway_timeout", {"waited_s": 1.0})
+    second = rec.trip("gateway_timeout")
+    assert first is not None and os.path.exists(first)
+    assert second is None  # suppressed inside the interval
+    reg = obs.registry()
+    assert reg.counter("flight.trips.gateway_timeout") == 2
+    assert reg.counter("flight.trips_suppressed") == 1
+    assert reg.counter("flight.dumps") == 1
+    payload = json.load(open(first))
+    assert payload["reason"] == "gateway_timeout"
+    assert payload["attrs"] == {"waited_s": 1.0}
+    assert payload["n_spans"] == 1
+    assert payload["spans"][0]["name"] == "x"
+
+
+def test_flight_trace_tree_and_clear():
+    rec = FlightRecorder()
+    rec.record(_finished("gw.request", trace_id=7, span_id=1))
+    rec.record(_finished("gw.admission", trace_id=7, span_id=2,
+                         parent_id=1, t0=0.5))
+    rec.record(_finished("other", trace_id=9, span_id=3))
+    tree = rec.trace_tree(7)
+    assert [s.name for s in tree] == ["gw.request", "gw.admission"]
+    rec.clear()
+    assert rec.spans() == []
+
+
+# -- gateway integration --------------------------------------------------
+
+def test_gateway_timeout_auto_dumps_full_span_tree(corpus_index, tmp_path):
+    """THE acceptance criterion: inducing a GatewayTimeout dumps the
+    flight recorder, and the dump holds the offending request's full
+    span tree (root + every stage it went through)."""
+    rec = FlightRecorder(min_dump_interval_s=0.0, dump_dir=str(tmp_path))
+    with ArchiveGateway(corpus_index, cache_bytes=1 << 20,
+                        flight_recorder=rec) as gw:
+        gw.submit(QueryRequest(b"nginx", top_k=3)).result(600)
+        with pytest.raises(GatewayTimeout):
+            # deadline already expired at submit: sheds in the scheduler
+            gw.submit(QueryRequest(b"crawl", top_k=3),
+                      deadline_s=-1.0).result(600)
+        assert gw.metrics.count("timeouts") == 1
+    assert rec.dump_paths, "anomaly trip produced no dump"
+    payload = json.load(open(rec.dump_paths[-1]))
+    assert payload["reason"] == "gateway_timeout"
+    offender = payload["attrs"]["trace_id"]
+    tree = [s for s in payload["spans"] if s["trace_id"] == offender]
+    by_name = {s["name"]: s for s in tree}
+    # the complete tree: root plus every stage this request went through
+    assert set(by_name) == {"gw.request", "gw.admission", "gw.queue_wait",
+                            "gw.timeout"}
+    root = by_name["gw.request"]
+    assert root["parent_id"] == 0
+    assert root["attrs"]["error"] == "GatewayTimeout"
+    for name in ("gw.admission", "gw.queue_wait", "gw.timeout"):
+        assert by_name[name]["parent_id"] == root["span_id"]
+    # the root span covers its children (same clock, one request)
+    assert root["dur_us"] >= by_name["gw.queue_wait"]["dur_us"]
+
+
+def test_gateway_stage_histograms_and_breakdown(corpus_index, tmp_path):
+    rec = FlightRecorder(dump_dir=str(tmp_path))
+    with ArchiveGateway(corpus_index, cache_bytes=1 << 20,
+                        flight_recorder=rec) as gw:
+        for pattern in (b"nginx", b"crawl", b"nginx", b"absent!"):
+            gw.submit(QueryRequest(pattern, top_k=3)).result(600)
+        snap = gw.metrics.snapshot(gw.cache)
+        merged = gw.snapshot()
+    stages = snap["stages"]
+    # the root gw.request span is deliberately NOT a stage histogram
+    # (it IS gateway.latency_s; including it would double-count shares)
+    assert "request" not in stages
+    for stage in ("admission", "queue_wait", "scan_batch",
+                  "batch_form", "prefilter", "cache_fill", "respond"):
+        assert stage in stages, f"missing stage {stage}"
+        assert stages[stage]["count"] >= 1
+    assert abs(sum(v["share"] for v in stages.values()) - 1.0) < 1e-9
+    # the merged ObsSnapshot carries the same histograms gateway.-prefixed
+    assert breakdown_from_snapshot(merged).keys() == stages.keys()
+    assert dominant_stage(stages) in stages
+    table = render_stage_table(stages)
+    assert "queue_wait" in table and "share" in table
+    # every request span the recorder holds resolved without error
+    reqs = [s for s in rec.spans() if s.name == "gw.request"]
+    assert len(reqs) == 4
+    assert all("error" not in (s.attrs or {}) for s in reqs)
+
+
+def test_gateway_untraced_has_no_stage_cost(corpus_index, tmp_path):
+    rec = FlightRecorder(dump_dir=str(tmp_path))
+    with ArchiveGateway(corpus_index, cache_bytes=1 << 20,
+                        trace_requests=False, flight_recorder=rec) as gw:
+        resp = gw.submit(QueryRequest(b"nginx", top_k=3)).result(600)
+        assert resp.total_matches > 0
+        snap = gw.metrics.snapshot(gw.cache)
+    assert "stages" not in snap  # no histograms → no attribution block
+    assert rec.spans() == []     # and nothing hit the recorder
+
+
+def test_gateway_coalesce_attach_span(corpus_index, tmp_path):
+    """A request attaching to an in-flight identical scan records
+    gw.coalesce_attach instead of entering the queue."""
+    import time
+
+    rec = FlightRecorder(dump_dir=str(tmp_path))
+    with ArchiveGateway(corpus_index, cache_bytes=1 << 20,
+                        flight_recorder=rec) as gw:
+        release = threading.Event()
+        orig_plan = gw._plan
+
+        def slow_plan(request):
+            release.wait(30)
+            return orig_plan(request)
+
+        gw._plan = slow_plan
+        req = QueryRequest(b"nginx", top_k=3)
+        first = gw.submit(req)
+        # wait until the scheduler published the scan as in-flight
+        for _ in range(1000):
+            with gw._lock:
+                if req.scan_key() in gw._inflight:
+                    break
+            time.sleep(0.005)
+        second = gw.submit(req)  # coalesces onto the executing scan
+        release.set()
+        assert first.result(600).hits == second.result(600).hits
+        assert gw.metrics.count("coalesced") == 1
+    attach = [s for s in rec.spans() if s.name == "gw.coalesce_attach"]
+    assert len(attach) == 1
+    roots = {s.trace_id: s for s in rec.spans() if s.name == "gw.request"}
+    # the attach span belongs to the second request's trace
+    assert attach[0].trace_id in roots
+    assert attach[0].parent_id == roots[attach[0].trace_id].span_id
+
+
+# -- exporters ------------------------------------------------------------
+
+def test_chrome_trace_export(tmp_path):
+    spans = [
+        _finished("gw.request", trace_id=1, span_id=1, t0=0.0, dur=0.05,
+                  thread="client"),
+        _finished("gw.scan_batch", trace_id=2, span_id=2, t0=0.01,
+                  dur=0.02, thread="archive-gateway"),
+    ]
+    open_span = trace.Span("gw.open", 3, 9, 0, 0.0, "client")
+    doc = chrome_trace(spans + [open_span], process_name="test-proc")
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    complete = [e for e in events if e["ph"] == "X"]
+    assert {e["args"]["name"] for e in meta} == \
+        {"test-proc", "client", "archive-gateway"}
+    assert len(complete) == 2  # the unfinished span is skipped
+    by_name = {e["name"]: e for e in complete}
+    assert by_name["gw.request"]["dur"] == pytest.approx(5e4)
+    assert by_name["gw.request"]["args"]["trace_id"] == 1
+    assert by_name["gw.request"]["tid"] != by_name["gw.scan_batch"]["tid"]
+    path = write_chrome_trace(str(tmp_path / "trace.json"), spans)
+    assert json.load(open(path))["displayTimeUnit"] == "ms"
+
+
+def test_breakdown_from_spans_and_snapshot_dict_form():
+    spans = [_finished("gw.queue_wait", span_id=i, dur=0.010)
+             for i in range(4)]
+    spans += [_finished("gw.kernel_dispatch", span_id=10, dur=0.060)]
+    b = breakdown_from_spans(spans)
+    assert list(b) == ["gw.kernel_dispatch", "gw.queue_wait"]  # by total
+    assert b["gw.queue_wait"]["count"] == 4
+    assert b["gw.kernel_dispatch"]["share"] == pytest.approx(0.6)
+    # snapshot path, as_dict form (pre-computed quantiles, no samples)
+    reg = Registry(source="gateway")
+    for _ in range(3):
+        reg.observe("gateway.stage.queue_wait_s", 0.002)
+    snap_dict = reg.snapshot().as_dict()
+    b2 = breakdown_from_snapshot(snap_dict)
+    assert b2["queue_wait"]["count"] == 3
+    assert b2["queue_wait"]["p50_ms"] == pytest.approx(2.0)
+    assert b2["queue_wait"]["share"] == 1.0
+
+
+# -- repro.obs.top --------------------------------------------------------
+
+def test_top_render_pure(corpus_index):
+    with ArchiveGateway(corpus_index, cache_bytes=1 << 20) as gw:
+        gw.submit(QueryRequest(b"nginx", top_k=3)).result(600)
+        prev = gw.snapshot()
+        gw.submit(QueryRequest(b"crawl", top_k=3)).result(600)
+        snap = gw.snapshot()
+    frame = obs_top.render(snap, prev, dt=2.0, clock="12:00:00")
+    assert "req/s" in frame and "12:00:00" in frame
+    assert "queue_wait" in frame  # the stage table rendered
+    # rate = counter delta / dt = 1 request / 2 s
+    rate_line = next(l for l in frame.splitlines()
+                     if l.startswith("req/s"))
+    assert rate_line.split()[1] == "0.5"
+    untraced = obs_top.render(ObsSnapshot(counters={"gateway.requests": 1}))
+    assert "request tracing off" in untraced
+
+
+def test_top_file_mode(tmp_path, capsys):
+    reg = Registry(source="gateway")
+    reg.counter_add("gateway.requests", 5)
+    bench = {"bench": "serve",
+             "obs": reg.snapshot().as_dict()}  # BENCH-file shape
+    path = str(tmp_path / "BENCH_serve.json")
+    json.dump(bench, open(path, "w"))
+    assert obs_top.main(["--file", path]) == 0
+    assert "requests 5" in capsys.readouterr().out
+    bad = str(tmp_path / "bad.json")
+    json.dump({"rows": []}, open(bad, "w"))
+    assert obs_top.main(["--file", bad]) == 2
+    assert "no obs snapshot" in capsys.readouterr().err
+
+
+# -- repro.obs.dump degrade ----------------------------------------------
+
+def test_dump_degrades_without_obs_payload(tmp_path, capsys):
+    from repro.obs import dump as obs_dump
+
+    path = str(tmp_path / "BENCH_old.json")
+    json.dump({"bench": "serve", "rows": []}, open(path, "w"))
+    assert obs_dump.main([path]) == 2
+    err = capsys.readouterr().err
+    assert "no obs snapshot" in err and "benchmarks/run.py" in err
+    # and a file *with* a payload still renders
+    good = str(tmp_path / "BENCH_new.json")
+    reg = Registry()
+    reg.counter_add("x", 1)
+    json.dump({"obs": reg.snapshot().as_dict()}, open(good, "w"))
+    assert obs_dump.main([good]) == 0
+    assert '"x": 1' in capsys.readouterr().out
