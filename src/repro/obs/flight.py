@@ -137,11 +137,14 @@ class FlightRecorder:
             ring.idx = 0
 
     # -- dumping ---------------------------------------------------------
-    def trip(self, reason: str, attrs: Optional[dict] = None
-             ) -> Optional[str]:
+    def trip(self, reason: str, attrs: Optional[dict] = None, *,
+             tag: Optional[str] = None) -> Optional[str]:
         """Anomaly hook: dump unless one fired within
         ``min_dump_interval_s``. Returns the dump path, or ``None`` when
-        suppressed. Counts ``flight.trips.<reason>`` either way."""
+        suppressed. Counts ``flight.trips.<reason>`` either way.
+        ``tag`` (PR 9: the tripping gateway shard, e.g. ``"shard2"``)
+        lands in both the payload and the dump filename, so an operator
+        can see *which* shard misbehaved without opening the file."""
         from repro import obs
 
         obs.registry().counter_add(f"flight.trips.{reason}")
@@ -151,10 +154,11 @@ class FlightRecorder:
                 obs.registry().counter_add("flight.trips_suppressed")
                 return None
             self._last_dump = now
-        return self.dump(reason=reason, attrs=attrs)
+        return self.dump(reason=reason, attrs=attrs, tag=tag)
 
     def dump(self, path: Optional[str] = None, *, reason: str = "manual",
-             attrs: Optional[dict] = None) -> str:
+             attrs: Optional[dict] = None,
+             tag: Optional[str] = None) -> str:
         """Write the resident spans (newest ``max_dump_spans``) as JSON;
         returns the path written."""
         from repro import obs
@@ -165,12 +169,14 @@ class FlightRecorder:
             with self._dump_lock:
                 self._dump_seq += 1
                 seq = self._dump_seq
+            stem = reason if tag is None else f"{reason}-{tag}"
             safe = "".join(c if c.isalnum() or c in "-_" else "-"
-                           for c in reason)
+                           for c in stem)
             path = os.path.join(
                 self.dump_dir, f"flight-{os.getpid()}-{seq:04d}-{safe}.json")
         payload = {
             "reason": reason,
+            "tag": tag,
             "attrs": attrs or {},
             "wall_time_s": _wall(),
             "pid": os.getpid(),
@@ -206,17 +212,21 @@ def set_recorder(rec: FlightRecorder) -> FlightRecorder:
 # -- CLI: ``python -m repro.obs.flight --demo`` ---------------------------
 
 def _demo(out_dir: str) -> tuple:
-    """Synthetic traced serve run with one induced GatewayTimeout.
+    """Synthetic traced serve run with induced anomalies: one
+    GatewayTimeout, then a sharded-gateway overload soak that trips a
+    shard-tagged ``gateway_overloaded`` dump.
 
-    Returns ``(flight_dump_path, chrome_trace_path)`` — the two
-    artifacts CI uploads from the serve tier.
+    Returns ``(flight_dump_path, chrome_trace_path)`` — the artifacts
+    CI uploads from the serve tier (the dump path returned is the
+    shard-tagged overload one).
     """
     import tempfile as _tf
 
     from repro.data.synth import CorpusSpec, write_corpus
     from repro.index import QueryRequest, build_index
     from repro.obs.export import write_chrome_trace
-    from repro.serve import ArchiveGateway, GatewayTimeout
+    from repro.serve import (ArchiveGateway, GatewayOverloaded,
+                             GatewayTimeout)
 
     rec = FlightRecorder(min_dump_interval_s=0.0, dump_dir=out_dir)
     with _tf.TemporaryDirectory(prefix="repro-flight-demo-") as tmp:
@@ -235,6 +245,25 @@ def _demo(out_dir: str) -> tuple:
                           deadline_s=-1.0).result(600)
             except GatewayTimeout:
                 pass
+        # overload soak against a sharded pool: tiny per-shard budgets +
+        # a flood of distinct scan identities force at least one typed,
+        # shard-tagged GatewayOverloaded rejection (and its dump)
+        overloads = 0
+        futures = []
+        with ArchiveGateway(index, shards=2, max_pending=1,
+                            cache_bytes=1 << 20,
+                            flight_recorder=rec) as gw:
+            for i in range(64):
+                try:
+                    futures.append(gw.submit(
+                        QueryRequest(b"demo-%d" % i, top_k=3),
+                        block=False))
+                except GatewayOverloaded as exc:
+                    overloads += 1
+                    assert exc.shard is not None
+            for fut in futures:
+                fut.result(600)
+        assert overloads > 0, "overload soak produced no rejection"
     dump_path = rec.dump_paths[-1] if rec.dump_paths else \
         rec.dump(reason="demo")
     chrome_path = os.path.join(out_dir, "chrome-trace.json")

@@ -35,10 +35,10 @@ Span names in use across the repo:
 ``serve.prefill``          LM serve engine: prompt prefill of one batch
 ``serve.decode``           LM serve engine: decode loop of one batch
 ``gw.request``             gateway request root (submit → resolution)
-``gw.admission``           submit body: coalesce probe + queue put
-``gw.queue_wait``          queue put → drained by the scheduler
+``gw.admission``           submit body: route + coalesce probe + queue put
+``gw.queue_wait``          queue put → drained by the owning shard
 ``gw.coalesce_attach``     attach to an in-flight identical scan
-``gw.scan_batch``          scheduler batch root (one drained batch)
+``gw.scan_batch``          shard batch root (one drained batch)
 ``gw.batch_form``          shed expired + group by scan key + publish
 ``gw.prefilter``           plan: literal/signature prefilter → candidates
 ``gw.cache_fill``          chunk payload fetch (cache hits + decompress)
@@ -46,7 +46,13 @@ Span names in use across the repo:
 ``gw.host_verify``         host-side verify/regex gate over a chunk
 ``gw.respond``             ranking + resolving every waiter's future
 ``gw.timeout``             marker: request resolved with GatewayTimeout
+``gw.redrive``             marker: orphan re-routed after a shard death
 =========================  =================================================
+
+Since PR 9 the gateway is sharded: scheduler-side spans
+(``gw.scan_batch``, ``gw.kernel_dispatch``) and routed submit spans
+(``gw.admission``, ``gw.queue_wait``, ``gw.coalesce_attach``) carry a
+``shard`` attribute, and anomaly flight dumps are shard-tagged.
 """
 from __future__ import annotations
 

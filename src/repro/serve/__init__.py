@@ -12,16 +12,20 @@
 its users rather than here; the archive gateway imports light.
 """
 from .archive import (ArchiveGateway, GatewayClosed, GatewayOverloaded,
-                      GatewayTimeout)
-from .cache import RecordCache
+                      GatewayShardDown, GatewayTimeout)
+from .cache import RecordCache, ShardedRecordCache
 from .metrics import GatewayMetrics, percentile
+from .shard import ShardScheduler
 
 __all__ = [
     "ArchiveGateway",
     "GatewayClosed",
     "GatewayOverloaded",
+    "GatewayShardDown",
     "GatewayTimeout",
     "GatewayMetrics",
     "RecordCache",
+    "ShardedRecordCache",
+    "ShardScheduler",
     "percentile",
 ]

@@ -1,149 +1,88 @@
-"""``repro.serve.archive`` — async archive query gateway (DESIGN.md §8).
+"""``repro.serve.archive`` — sharded async archive query gateway
+(DESIGN.md §8 and §12).
 
 PR 2's :class:`~repro.index.service.IndexQueryService` is synchronous:
-every request pays for its own scan, so concurrent clients asking
-overlapping questions redundantly decompress the same records and issue
-near-identical kernel dispatches. This module is the multi-tenant layer
-that aggregates that work *before* touching the archive:
+every request pays for its own scan. PR 3 added this multi-tenant layer
+— admission queue, request coalescing, cross-request kernel batching, a
+byte-budgeted record cache — but with **one** scheduler thread, and
+BENCH_serve.json recorded the consequence: throughput collapsed ~5×
+from 8 to 64 clients while PR 8's stage attribution showed 90% of
+request time was ``queue_wait`` behind that single drain loop.
 
-* **admission queue with backpressure** — a bounded queue; ``submit``
-  blocks (or raises :class:`GatewayOverloaded`) when serving cannot keep
-  up, so memory stays bounded under heavy traffic;
-* **request coalescing** — identical in-flight scans (same pattern +
-  predicates + prefilter, see ``QueryRequest.scan_key``) are executed
-  **once**; every waiter gets the same hit list, shaped per-request
-  (``top_k``). Late arrivals attach to an executing scan without ever
-  entering the queue;
-* **cross-request kernel batching** — candidate records from
-  *different* concurrent queries are packed into shared
-  :func:`~repro.kernels.pattern_scan.find_pattern_masks_multi`
-  dispatches (the per-row-pattern kernel): one Pallas call serves many
-  requests, with padding bounded by the usual power-of-two width
-  buckets;
-* **record cache** — a byte-budgeted LRU of decompressed payloads
-  (:mod:`repro.serve.cache`) keyed by ``(shard, offset)``, so repeat
-  candidates across requests skip the decompress entirely;
-* **metrics** — :mod:`repro.serve.metrics` records p50/p99 latency,
-  coalesce rate, dispatches-per-request and cache hit rate, making the
-  aggregation wins checkable (``BENCH_serve.json``);
-* **request-scoped tracing** (PR 8, on by default, ≤1.05× gated
-  in-bench) — every request gets a trace id at submit; its time
-  decomposes into true parent/child spans across the thread boundary
-  (admission → queue wait → coalesce/attach → batch formation →
-  prefilter → cache fill → kernel dispatch → host verify → respond,
-  names in :mod:`repro.obs.trace`). Stage durations land in the
-  gateway registry as ``gateway.stage.<name>_s`` histograms (the
-  attribution surface of ``benchmarks/serve_bench.py`` and
-  ``python -m repro.obs.top``); finished spans land in the always-on
-  bounded flight recorder (:mod:`repro.obs.flight`), which auto-dumps
-  the recent span history to a file whenever an anomaly trips —
-  :class:`GatewayTimeout`, :class:`GatewayOverloaded`, queue-depth
-  high-water, or p99 above the ``slo_p99_s`` gauge.
+PR 9 makes the gateway a **supervised shard pool**:
+
+* **router front end** (this class) — :meth:`submit` hashes the
+  request's *scan identity* (``QueryRequest.scan_key``) onto one of N
+  :class:`~repro.serve.shard.ShardScheduler` shards. Affinity hashing
+  is what keeps coalescing intact: identical scans always route to the
+  same shard, so its in-flight registry sees every duplicate, exactly
+  as the single scheduler did;
+* **per-shard admission budgets** — each shard bounds its own queue
+  depth (``max_pending`` is per shard) and optionally its pending
+  estimated scan bytes; rejections are typed, shard-tagged
+  :class:`GatewayOverloaded` (``.shard``/``.reason``) instead of one
+  global cliff. Overload never spills to a sibling shard — that would
+  split a scan identity across two in-flight registries and silently
+  un-coalesce it;
+* **sharded record cache** — :class:`~repro.serve.cache.
+  ShardedRecordCache` consistent-hashes payload keys over per-slice
+  TinyLFU caches: shards never duplicate hot bytes, and a shard death
+  evicts only its slice;
+* **supervision + re-drive** — a supervisor thread watches shard
+  heartbeats/liveness, reaps a dead shard's tickets (queued, serving,
+  and coalesce-attached alike), respawns it with capped backoff, and
+  re-drives every orphan through the router **exactly once**; a ticket
+  whose re-drive also dies fails with a typed
+  :class:`GatewayShardDown`. Nothing is silently dropped and no future
+  resolves twice (futures are claimed with
+  ``set_running_or_notify_cancel`` before every resolution, everywhere).
+
+``shards=1`` (the default) preserves the PR 3–8 topology and behaviour
+exactly; the serving machinery itself lives in
+:mod:`repro.serve.shard`. Request-scoped tracing (PR 8) is unchanged
+but spans now carry a ``shard`` attribute and anomaly flight dumps are
+shard-tagged.
 
 Correctness bar: responses are **byte-identical** to what an independent
 synchronous :class:`~repro.index.query.QueryEngine` run would produce —
-coalescing, caching and shared dispatch change *when* work happens,
-never *what* is computed (the soak + property tests assert exactly
-this).
-
-One scheduler thread owns the engine, the cache fills, and the device;
-submission is thread-safe from any number of client threads.
+routing, coalescing, caching, shared dispatch and re-drive change *when*
+and *where* work happens, never *what* is computed (the soak + chaos
+tests assert exactly this).
 """
 from __future__ import annotations
 
-import queue
+import hashlib
 import threading
 import time
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 
-import numpy as np
-
-from repro.core.warc.errors import RecordReadError
 from repro.index.cdx import CdxIndex
-from repro.index.query import PatternHit, QueryEngine, QueryPlan
+from repro.index.query import QueryEngine
 from repro.index.service import QueryRequest, QueryResponse
 from repro.obs import flight as obs_flight
 from repro.obs import trace as obs_trace
-from .cache import RecordCache
+from .cache import ShardedRecordCache
 from .metrics import GatewayMetrics
+from .shard import (_NULL_CM, GatewayClosed, GatewayOverloaded,
+                    GatewayShardDown, GatewayTimeout, ShardScheduler,
+                    _StageCM, _Ticket)
 
 __all__ = ["ArchiveGateway", "GatewayClosed", "GatewayOverloaded",
-           "GatewayTimeout"]
+           "GatewayShardDown", "GatewayTimeout"]
 
 
-class GatewayOverloaded(RuntimeError):
-    """Admission queue full: backpressure instead of unbounded growth."""
-
-
-class GatewayClosed(RuntimeError):
-    """Request submitted to (or still pending in) a closed gateway."""
-
-
-class GatewayTimeout(RuntimeError):
-    """Per-request deadline expired before the scan could resolve it.
-
-    Distinct from :class:`GatewayOverloaded` (rejected at admission) —
-    a timed-out request was *accepted* but couldn't be served in time;
-    the caller can tell load shedding apart from slow serving.
-    """
-
-
-@dataclass
-class _Ticket:
-    """One submitted request and its completion future."""
-
-    request: QueryRequest
-    future: Future = field(default_factory=Future)
-    t_submit: float = field(default_factory=time.perf_counter)
-    deadline: float | None = None  # absolute perf_counter time, or None
-    # request-scoped tracing (None when trace_requests=False): the root
-    # span carries the trace across the submit-thread → scheduler-thread
-    # boundary; wait_span times queue residency (opened by the submitter,
-    # closed by the scheduler)
-    span: obs_trace.Span | None = None
-    wait_span: obs_trace.Span | None = None
-
-    def expired(self, now: float) -> bool:
-        return self.deadline is not None and now > self.deadline
-
-
-class _StageCM:
-    """``with gw._stage("gw.cache_fill") as sp:`` — span + stage
-    histogram, or a no-op when the gateway isn't tracing."""
-
-    __slots__ = ("_gw", "span")
-
-    def __init__(self, gw: "ArchiveGateway", name: str,
-                 parent=None, attrs=None):
-        self._gw = gw
-        self.span = obs_trace.start_span(name, parent, attrs=attrs)
-
-    def __enter__(self) -> obs_trace.Span:
-        return self.span
-
-    def __exit__(self, *exc) -> None:
-        self._gw._end_span(self.span)
-
-
-class _NullCM:
-    __slots__ = ()
-    span = None
-
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *exc) -> None:
-        pass
-
-
-_NULL_CM = _NullCM()
+def _key_hash(key: tuple) -> int:
+    """Stable 64-bit hash of a scan identity (process-independent —
+    ``repr`` of the key tuple, not Python's seeded ``hash``)."""
+    digest = hashlib.blake2b(repr(key).encode("utf-8", "backslashreplace"),
+                             digest_size=8).digest()
+    return int.from_bytes(digest, "big")
 
 
 class ArchiveGateway:
-    """Asynchronous, coalescing, cross-request-batching query front end.
+    """Sharded, coalescing, cross-request-batching query front end.
 
-    >>> with ArchiveGateway(index) as gw:
+    >>> with ArchiveGateway(index, shards=4) as gw:
     ...     fut = gw.submit(QueryRequest(b"nginx"))
     ...     response = fut.result()
     ...     gw.metrics.snapshot(gw.cache)["dispatches_per_request"]
@@ -152,42 +91,59 @@ class ArchiveGateway:
     ----------
     index:
         the corpus CDX index the gateway serves.
+    shards:
+        scheduler shard count (default 1 — the pre-PR 9 topology).
+        Each shard owns an engine, a drain thread and its own admission
+        budget; requests route by scan-identity affinity hashing.
     engine:
-        optional pre-built :class:`QueryEngine`; owned (and closed) by
-        the gateway either way. Only the scheduler thread touches it.
+        optional pre-built :class:`QueryEngine` for shard 0; owned (and
+        closed) by its shard either way. Additional shards build their
+        own via ``engine_factory`` / the default constructor args.
+    engine_factory:
+        ``callable(shard_id) -> QueryEngine`` for building per-shard
+        engines (tests inject instrumented engines this way).
     max_pending:
-        admission-queue bound — the backpressure knob.
+        **per-shard** admission-queue bound — the backpressure knob.
+    shard_byte_budget:
+        optional per-shard bound on *pending estimated scan bytes*:
+        each unique queued scan identity charges ``est_scan_bytes``
+        (coalesced duplicates are free); over budget, new identities
+        are rejected with ``GatewayOverloaded(reason="bytes")``.
+    est_scan_bytes:
+        the per-unique-scan byte charge above (default 1 MiB).
     max_batch_requests:
-        how many queued requests one scheduler drain may aggregate.
+        how many queued requests one shard drain may aggregate.
     cache_bytes:
-        byte budget of the decompressed-payload LRU.
+        byte budget of the decompressed-payload cache, split evenly
+        across per-shard consistent-hash slices.
     cache_admission:
-        ``"tinylfu"`` (default) guards the record cache with a
-        scan-resistant frequency-sketch admission duel — one-shot query
-        sweeps can no longer flush the hot working set; ``"lru"`` is
-        the PR 3 admit-always cache.
+        ``"tinylfu"`` (default) or ``"lru"`` — per slice, as before.
     default_deadline_s:
         deadline applied to every request that doesn't carry its own
-        ``deadline_s`` at :meth:`submit`; ``None`` (default) means no
-        deadline. Expired requests resolve with :class:`GatewayTimeout`
-        instead of occupying scan capacity.
+        ``deadline_s`` at :meth:`submit`; expired requests resolve with
+        :class:`GatewayTimeout` instead of occupying scan capacity.
     trace_requests:
         request-scoped span tracing (default on; the serve bench gates
-        the traced path at ≤1.05× the untraced one). Off, the only cost
-        left is one branch per stage.
+        the traced path at ≤1.05× the untraced one).
     flight_recorder:
         where finished spans and anomaly dumps go; ``None`` uses the
-        process-default :func:`repro.obs.flight.recorder`.
-    slo_p99_s:
-        latency objective: after a batch resolves, a measured p99 above
-        this trips an anomaly dump (needs ≥32 latency samples so one
-        cold scan can't cry wolf). ``None`` disables the check.
-    queue_highwater:
-        admission-queue depth that trips an anomaly dump when first
-        crossed (default: ¾ of ``max_pending``).
+        process-default :func:`repro.obs.flight.recorder`. Dumps
+        tripped by a shard carry a ``shard<i>`` tag.
+    slo_p99_s / queue_highwater:
+        anomaly-dump trips, unchanged from PR 8 (highwater is per
+        shard, default ¾ of ``max_pending``).
+    max_respawns:
+        how many times a dying shard is respawned before it is retired
+        (marked permanently down; traffic routes around it and its
+        cache slice is removed from the ring).
+    respawn_backoff_s:
+        base of the capped exponential respawn backoff
+        (``min(1s, base·2^respawns)``).
     """
 
     def __init__(self, index: CdxIndex, *, engine: QueryEngine | None = None,
+                 shards: int = 1,
+                 engine_factory=None,
                  max_pending: int = 256, max_batch_requests: int = 16,
                  cache_bytes: int = 64 << 20, cache_admission: str = "tinylfu",
                  use_kernel: bool = True,
@@ -197,88 +153,136 @@ class ArchiveGateway:
                  flight_recorder: obs_flight.FlightRecorder | None = None,
                  slo_p99_s: float | None = None,
                  queue_highwater: int | None = None,
+                 shard_byte_budget: int | None = None,
+                 est_scan_bytes: int = 1 << 20,
+                 max_respawns: int = 3,
+                 respawn_backoff_s: float = 0.05,
                  ) -> None:
-        self.engine = engine if engine is not None else QueryEngine(
-            index, use_kernel=use_kernel, interpret=interpret)
-        self.index = self.engine.index
-        self.cache = RecordCache(cache_bytes, admission=cache_admission)
+        n = max(1, int(shards))
+        self.index = index
+        self.cache = ShardedRecordCache(cache_bytes, n,
+                                        admission=cache_admission)
         self.metrics = GatewayMetrics()
-        self.max_batch_requests = max(1, max_batch_requests)
         self.default_deadline_s = default_deadline_s
-        self._poll = poll_interval_s
         self._trace = bool(trace_requests)
         self._flight = flight_recorder if flight_recorder is not None \
             else obs_flight.recorder()
-        self._slo_p99_s = slo_p99_s
-        self._highwater = queue_highwater if queue_highwater is not None \
-            else max(4, (max_pending * 3) // 4)
-        self._above_highwater = False
-        self._queue_hw_seen = 0
-        self._queue: "queue.Queue[_Ticket]" = queue.Queue(max(1, max_pending))
-        self._inflight: dict[tuple, list[_Ticket]] = {}
-        self._lock = threading.Lock()
-        self._stop = threading.Event()
+        self._max_respawns = max(0, int(max_respawns))
+        self._backoff = max(0.0, respawn_backoff_s)
         self._closed = False
-        self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="archive-gateway")
-        self._thread.start()
+        self._reap_lock = threading.Lock()
+
+        def _default_engine(_i: int) -> QueryEngine:
+            return QueryEngine(index, use_kernel=use_kernel,
+                               interpret=interpret)
+
+        factory = engine_factory if engine_factory is not None \
+            else _default_engine
+        self._shards: list[ShardScheduler] = []
+        for i in range(n):
+            eng = engine if (i == 0 and engine is not None) else factory(i)
+            self._shards.append(ShardScheduler(
+                i, engine=eng, cache=self.cache, metrics=self.metrics,
+                max_pending=max_pending, byte_budget=shard_byte_budget,
+                est_scan_bytes=est_scan_bytes,
+                max_batch_requests=max_batch_requests,
+                poll_interval_s=poll_interval_s,
+                trace_requests=trace_requests,
+                flight_recorder=self._flight,
+                slo_p99_s=slo_p99_s, queue_highwater=queue_highwater))
+        self.metrics.gauge_set("shards", n)
+        for shard in self._shards:
+            shard.start()
+        self._sup_stop = threading.Event()
+        self._sup_thread = threading.Thread(
+            target=self._supervise, daemon=True, name="gw-supervisor")
+        self._sup_thread.start()
+
+    # -- public surface ---------------------------------------------------
+    @property
+    def shards(self) -> list[ShardScheduler]:
+        return self._shards
+
+    @property
+    def engine(self) -> QueryEngine:
+        """Shard 0's engine (single-shard compatibility surface)."""
+        return self._shards[0].engine
+
+    def pending(self) -> int:
+        return sum(shard.pending() for shard in self._shards)
 
     # -- tracing plumbing -------------------------------------------------
     def _end_span(self, span: obs_trace.Span | None) -> None:
-        """Finish a span into the flight recorder and fold its duration
-        into the ``gateway.stage.*`` histogram of the same name."""
         if span is not None:
             self.metrics.observe_stage(span.name,
                                        span.finish(recorder=self._flight))
 
     def _stage(self, name: str, parent=None, attrs=None):
-        """Context manager for one scheduler-side stage (no-op untraced)."""
         if not self._trace:
             return _NULL_CM
         return _StageCM(self, name, parent, attrs)
 
-    def _trip(self, reason: str, attrs: dict | None = None) -> None:
-        """Anomaly: auto-dump the flight recorder (rate-limited inside)."""
-        if self._flight.trip(reason, attrs) is not None:
+    def _trip(self, reason: str, attrs: dict | None = None,
+              tag: str | None = None) -> None:
+        if self._flight.trip(reason, attrs, tag=tag) is not None:
             self.metrics.inc("flight_dumps")
 
-    def _note_queue_depth(self, depth: int) -> None:
-        self.metrics.gauge_set("queue_depth", depth)
-        if depth > self._queue_hw_seen:
-            self._queue_hw_seen = depth
-            self.metrics.gauge_set("queue_depth_highwater", depth)
-        if depth >= self._highwater:
-            if not self._above_highwater:  # trip on the crossing, not
-                self._above_highwater = True  # on every submit above it
-                self._trip("queue_highwater",
-                           {"depth": depth, "highwater": self._highwater})
-        else:
-            self._above_highwater = False
+    # -- routing ----------------------------------------------------------
+    def _shard_index(self, key: tuple) -> int:
+        """Affinity home of a scan identity (ignoring down shards)."""
+        return _key_hash(key) % len(self._shards)
+
+    def _candidates(self, key: tuple):
+        """The affinity ring walk: owner shard first, then successors,
+        skipping permanently-down shards. Affinity is what preserves
+        coalescing — every candidate order for a given key is stable
+        while the down-set is stable."""
+        shards = self._shards
+        start = _key_hash(key) % len(shards)
+        for j in range(len(shards)):
+            shard = shards[(start + j) % len(shards)]
+            if not shard.down:
+                yield shard
+
+    def _admit(self, key: tuple, ticket: _Ticket, *, block: bool,
+               timeout: float | None, force: bool = False
+               ) -> tuple[str, int, ShardScheduler]:
+        last: GatewayShardDown | None = None
+        for shard in self._candidates(key):
+            try:
+                status, detail = shard.admit(ticket, block=block,
+                                             timeout=timeout, force=force)
+                return status, detail, shard
+            except GatewayShardDown as exc:
+                last = exc  # raced a retirement: next ring candidate
+                continue
+        raise last if last is not None else GatewayShardDown(
+            "all gateway shards are down")
 
     # -- client side -----------------------------------------------------
     def submit(self, request: QueryRequest, *, block: bool = True,
                timeout: float | None = None,
                deadline_s: float | None = None) -> "Future[QueryResponse]":
-        """Queue one request; returns the future of its response.
+        """Route one request to its affinity shard; returns the future.
 
-        An identical scan already **executing** is joined directly (the
-        in-flight coalescing fast path, no queue slot); identical
-        requests sitting in the queue merge when the scheduler drains
-        them into the same batch. With ``block=False`` (or on
-        ``timeout``) a full queue raises :class:`GatewayOverloaded` —
-        backpressure the caller can see.
+        An identical scan already **executing** on the shard is joined
+        directly (the in-flight coalescing fast path, no queue slot);
+        identical requests sitting in the shard queue merge when it
+        drains them into the same batch. With ``block=False`` (or on
+        ``timeout``) an over-budget shard raises
+        :class:`GatewayOverloaded` — typed, shard-tagged backpressure.
 
         ``deadline_s`` (default: the gateway's ``default_deadline_s``)
         bounds how long the request may wait end-to-end: a ticket whose
         deadline expires before its batch resolves gets
         :class:`GatewayTimeout` instead of a response — under overload
-        the scheduler sheds expired queue entries without scanning for
-        them.
+        the shards shed expired queue entries without scanning for them.
         """
         if self._closed:
             raise GatewayClosed("gateway is closed")
         ticket = _Ticket(request)
-        budget = deadline_s if deadline_s is not None else self.default_deadline_s
+        budget = deadline_s if deadline_s is not None \
+            else self.default_deadline_s
         if budget is not None:
             ticket.deadline = ticket.t_submit + budget
         adm = None
@@ -291,52 +295,42 @@ class ArchiveGateway:
                        "regex": request.regex, "top_k": request.top_k})
             adm = obs_trace.start_span("gw.admission", ticket.span,
                                        t0=ticket.t_submit)
-        with self._lock:
-            waiters = self._inflight.get(request.scan_key())
-            if waiters is not None:
-                waiters.append(ticket)
-                self.metrics.inc("requests")
-                self.metrics.inc("coalesced")
-                if adm is not None:
-                    self._end_span(adm)
-                    with self._stage("gw.coalesce_attach", ticket.span,
-                                     attrs={"inflight_waiters":
-                                            len(waiters)}):
-                        pass
-                return ticket.future
+        key = request.scan_key()
         try:
-            self._queue.put(ticket, block=block, timeout=timeout)
-        except queue.Full:
-            self.metrics.inc("rejected")
+            status, detail, shard = self._admit(key, ticket, block=block,
+                                                timeout=timeout)
+        except (GatewayOverloaded, GatewayShardDown) as exc:
             if adm is not None:
                 adm.set_attr("rejected", True)
+                if getattr(exc, "shard", None) is not None:
+                    adm.set_attr("shard", exc.shard)
                 self._end_span(adm)
-                ticket.span.set_attr("error", "GatewayOverloaded")
+                ticket.span.set_attr("error", type(exc).__name__)
                 ticket.span.finish(recorder=self._flight)
-            self._trip("gateway_overloaded",
-                       {"max_pending": self._queue.maxsize})
-            raise GatewayOverloaded(
-                f"admission queue full ({self._queue.maxsize} pending)")
+            raise
         if adm is not None:
+            adm.set_attr("shard", shard.shard_id)
             self._end_span(adm)
-            ticket.wait_span = obs_trace.start_span("gw.queue_wait",
-                                                    ticket.span)
-        self._note_queue_depth(self._queue.qsize())
-        if self._closed and not self._thread.is_alive():
+            if status == "attached":
+                with self._stage("gw.coalesce_attach", ticket.span,
+                                 attrs={"inflight_waiters": detail,
+                                        "shard": shard.shard_id}):
+                    pass
+            else:
+                ticket.wait_span = obs_trace.start_span(
+                    "gw.queue_wait", ticket.span,
+                    attrs={"shard": shard.shard_id})
+        if status == "queued" and self._closed and not shard.alive():
             # raced close(): we passed the closed check before close()
-            # flipped it, but enqueued after the scheduler exited — no
-            # one will drain the queue again, so fail it now
-            self._fail_queued()
-        self.metrics.inc("requests")
+            # flipped it, but enqueued after the drain thread exited —
+            # no one will serve the queue again, so fail it now
+            shard.fail_queued()
         return ticket.future
 
     def query(self, request: QueryRequest,
               timeout: float | None = None) -> QueryResponse:
         """Synchronous convenience: submit and wait."""
         return self.submit(request).result(timeout)
-
-    def pending(self) -> int:
-        return self._queue.qsize()
 
     def snapshot(self):
         """Observability hook: one merged :class:`~repro.obs.ObsSnapshot`
@@ -350,389 +344,119 @@ class ArchiveGateway:
         return obs.snapshot().merged_with(
             self.metrics.obs_snapshot(self.cache))
 
-    # -- scheduler -------------------------------------------------------
-    def _loop(self) -> None:
-        while True:
-            try:
-                first = self._queue.get(timeout=self._poll)
-            except queue.Empty:
-                if self._stop.is_set():
-                    return  # drained: every accepted request was served
-                continue
-            batch = [first]
-            while len(batch) < self.max_batch_requests:
-                try:
-                    batch.append(self._queue.get_nowait())
-                except queue.Empty:
-                    break
-            self._note_queue_depth(self._queue.qsize())
-            try:
-                self._serve_batch(batch)
-            except BaseException:  # the scheduler must outlive any batch
-                self.metrics.inc("errors")
+    # -- supervision + re-drive -------------------------------------------
+    def _supervise(self) -> None:
+        while not self._sup_stop.wait(0.02):
+            for shard in self._shards:
+                if shard.dead and not shard.alive() and not shard.closed:
+                    self._reap(shard)
 
-    def _timeout(self, ticket: _Ticket) -> None:
-        """Resolve one expired ticket (caller already claimed the future)."""
-        waited = time.perf_counter() - ticket.t_submit
-        ticket.future.set_exception(GatewayTimeout(
-            f"deadline expired after {waited:.3f}s"))
-        self.metrics.inc("timeouts")
+    def _reap(self, shard: ShardScheduler, closing: bool = False) -> None:
+        """Handle one shard death: collect its tickets exactly once,
+        respawn (capped backoff) or retire it, re-drive the orphans."""
+        with self._reap_lock:
+            if shard._reaped or not shard.dead:
+                return  # lost the race: someone else already reaped it
+            sid = shard.shard_id
+            self.metrics.inc("shard_deaths")
+            self._trip("shard_down",
+                       {"shard": sid, "respawns": shard.respawns},
+                       tag=f"shard{sid}")
+            retire = closing or shard.respawns >= self._max_respawns
+            if retire:
+                # retirement: route around it and drop its cache slice
+                # from the ring (only *its* keys are invalidated)
+                shard.mark_down()
+                self.metrics.inc("shards_down")
+                self.cache.remove_slice(sid)
+            orphans = shard.take_orphans()
+            if not retire:
+                delay = min(1.0, self._backoff * (2 ** shard.respawns))
+                if delay > 0:
+                    time.sleep(delay)
+                # a dirty death may have left mid-fill entries behind:
+                # evict this shard's slice only, siblings keep their heat
+                self.cache.clear_slice(sid)
+                shard.respawn()
+                self.metrics.inc("shard_respawns")
+        for ticket in orphans:
+            self._redrive(ticket, sid)
+
+    def _redrive(self, ticket: _Ticket, from_shard: int) -> None:
+        """Recover one orphaned ticket: exactly one re-route through the
+        affinity ring (budgets bypassed — it was already admitted once);
+        a second death fails it with :class:`GatewayShardDown`."""
+        if ticket.future.done():
+            return
+        if ticket.redriven:
+            self._fail_shard_down(ticket, from_shard)
+            return
+        ticket.redriven = True
+        self.metrics.inc("redriven")
         if ticket.span is not None:
-            # marker child + closed root *before* the trip, so the dump
-            # holds the offending request's complete span tree
-            with self._stage("gw.timeout", ticket.span,
-                             attrs={"waited_s": waited}):
+            with self._stage("gw.redrive", ticket.span,
+                             attrs={"from_shard": from_shard}):
                 pass
-            ticket.span.set_attr("error", "GatewayTimeout")
+        try:
+            self._admit(ticket.request.scan_key(), ticket,
+                        block=False, timeout=None, force=True)
+        except GatewayShardDown:
+            self._fail_shard_down(ticket, from_shard)
+
+    def _fail_shard_down(self, ticket: _Ticket, shard_id: int) -> None:
+        """Typed terminal failure for an unrecoverable orphan (claimed
+        first, so a raced resolution can never double-resolve)."""
+        if not ticket.future.set_running_or_notify_cancel():
+            return
+        ticket.future.set_exception(GatewayShardDown(
+            f"shard {shard_id} died before serving this request",
+            shard=shard_id))
+        self.metrics.inc("shard_down_errors")
+        if ticket.span is not None:
+            ticket.span.set_attr("error", "GatewayShardDown")
             ticket.span.finish(recorder=self._flight)
-        self._trip("gateway_timeout",
-                   {"waited_s": waited,
-                    "trace_id": ticket.span.trace_id if ticket.span else None})
-
-    def _serve_batch(self, tickets: list[_Ticket]) -> None:
-        if not self._trace:
-            self._serve_batch_body(tickets)
-            return
-        # the batch roots its own trace (a scan serves many requests —
-        # span trees are strict, so waiter roots *link* to it via attrs
-        # rather than parent it); installing it as the context's current
-        # span lets every stage below default-parent to it
-        for ticket in tickets:
-            if ticket.wait_span is not None:  # queue residency ends here
-                self._end_span(ticket.wait_span)
-                ticket.wait_span = None
-        batch_span = obs_trace.start_span(
-            "gw.scan_batch", obs_trace.ROOT,
-            attrs={"n_tickets": len(tickets),
-                   "waiter_traces": [t.span.trace_id for t in tickets
-                                     if t.span is not None]})
-        try:
-            with obs_trace.use_span(batch_span):
-                self._serve_batch_body(tickets)
-        finally:
-            self._end_span(batch_span)
-        if self._slo_p99_s is not None and self.metrics.latency_count() >= 32:
-            p99 = self.metrics.latency_s(99)
-            self.metrics.gauge_set("latency_p99_s", p99)
-            if p99 > self._slo_p99_s:
-                self._trip("slo_p99", {"p99_s": p99,
-                                       "slo_s": self._slo_p99_s})
-
-    def _serve_batch_body(self, tickets: list[_Ticket]) -> None:
-        form = self._stage("gw.batch_form").__enter__()
-        # shed already-expired tickets before planning anything: under
-        # overload the queue ages, and scanning for a waiter that stopped
-        # caring only makes every later deadline worse
-        now = time.perf_counter()
-        live: list[_Ticket] = []
-        for ticket in tickets:
-            if ticket.expired(now):
-                if ticket.future.set_running_or_notify_cancel():
-                    self._timeout(ticket)
-            else:
-                live.append(ticket)
-        if not live:
-            self._end_span(form)
-            return
-        tickets = live
-        # group by scan identity; first occurrence keeps submission order
-        groups: dict[tuple, list[_Ticket]] = {}
-        for ticket in tickets:
-            key = ticket.request.scan_key()
-            if key in groups:
-                groups[key].append(ticket)
-                self.metrics.inc("coalesced")
-            else:
-                groups[key] = [ticket]
-        with self._lock:
-            # publish the in-flight registry: identical requests submitted
-            # while we scan attach to these lists and never enter the queue
-            self._inflight.update(groups)
-        self._end_span(form)
-        self.metrics.inc("scan_batches")
-        self.metrics.inc("unique_scans", len(groups))
-        results: dict[tuple, list[PatternHit]] = {}
-        failures: dict[tuple, BaseException] = {}
-        try:
-            plans = {}
-            for key, group_waiters in groups.items():
-                try:
-                    with self._stage("gw.prefilter",
-                                     attrs={"pattern":
-                                            repr(key[0][:64])}):
-                        plans[key] = self._plan(group_waiters[0].request)
-                except Exception as exc:  # malformed query: fail only its
-                    failures[key] = exc   # own waiters, not the batch
-                    self.metrics.inc("errors")
-            results, scan_failures = self._execute_plans(plans)
-            for key, exc in scan_failures.items():
-                failures.setdefault(key, exc)
-        except BaseException as exc:  # scan failure: resolve all, keep serving
-            self.metrics.inc("errors")
-            failures = {key: failures.get(key, exc) for key in groups}
-        finally:
-            with self._lock:
-                waiters = {key: self._inflight.pop(key) for key in groups}
-        with self._stage("gw.respond"):
-            now = time.perf_counter()
-            for key, tickets_for_key in waiters.items():
-                hits = results.get(key, [])
-                error = failures.get(key)
-                # rank: most matches first, index order breaks ties
-                # (stable) — identical to IndexQueryService
-                ranked = sorted(hits, key=lambda h: -h.n_matches)
-                for ticket in tickets_for_key:
-                    # a client may have cancel()ed while we scanned;
-                    # claiming the future first makes the set_* below
-                    # race-free (and a cancelled ticket must not kill the
-                    # scheduler)
-                    if not ticket.future.set_running_or_notify_cancel():
-                        if ticket.span is not None:
-                            ticket.span.set_attr("cancelled", True)
-                            ticket.span.finish(recorder=self._flight)
-                        continue
-                    if error is not None:
-                        ticket.future.set_exception(error)
-                        if ticket.span is not None:
-                            ticket.span.set_attr("error",
-                                                 type(error).__name__)
-                            ticket.span.finish(recorder=self._flight)
-                        continue
-                    if ticket.expired(now):  # scan outlived the deadline
-                        self._timeout(ticket)
-                        continue
-                    latency = now - ticket.t_submit
-                    ticket.future.set_result(QueryResponse(
-                        request=ticket.request,
-                        hits=ranked[:ticket.request.top_k],
-                        total_matches=len(hits), latency_s=latency))
-                    self.metrics.observe_latency(latency)
-                    self.metrics.inc("responses")
-                    if ticket.span is not None:
-                        ticket.span.finish(recorder=self._flight)
-
-    def _plan(self, request: QueryRequest) -> QueryPlan:
-        if request.regex:
-            return self.engine.plan_regex(request.pattern, request.filters,
-                                          prefilter=request.prefilter)
-        return self.engine.plan(request.pattern, request.filters,
-                                prefilter=request.prefilter)
-
-    # -- cache-aware fetch ----------------------------------------------
-    def _fetch(self, row: int) -> bytes:
-        key = (int(self.index.shard_id[row]), int(self.index.offset[row]))
-        data = self.cache.get(key)
-        if data is None:
-            data = self.engine._fetch(row)
-            self.cache.put(key, data)
-            self.metrics.inc("records_fetched")
-        return data
-
-    def _fetch_chunk(self, chunk: list[tuple[tuple, int]]
-                     ) -> tuple[dict[int, bytes], list[tuple[tuple, int]]]:
-        """Fetch one chunk's payloads, quarantining unreadable rows.
-
-        A row whose record can't be parsed (:class:`RecordReadError` —
-        damaged member, bad framing) is dropped from the chunk instead
-        of failing any query: a damaged record simply can't match, and
-        every plan sharing the row keeps its other candidates. Counted
-        under ``read_errors`` (fetch attempts that failed) and
-        ``quarantined_rows`` (distinct rows skipped).
-        """
-        bufs: dict[int, bytes] = {}
-        dead: set[int] = set()
-        with self._stage("gw.cache_fill",
-                         attrs={"rows": len(chunk)}) as sp:
-            for _, row in chunk:  # dedupe: shared rows fetched once
-                if row in bufs or row in dead:
-                    continue
-                try:
-                    bufs[row] = self._fetch(row)
-                except RecordReadError:
-                    dead.add(row)
-                    self.metrics.inc("read_errors")
-            if sp is not None:
-                sp.set_attr("fetched", len(bufs))
-        if not dead:
-            return bufs, chunk
-        self.metrics.inc("quarantined_rows", len(dead))
-        return bufs, [(key, row) for key, row in chunk if row not in dead]
-
-    def _fail_chunk(self, chunk: list[tuple[tuple, int]],
-                    exc: BaseException,
-                    failures: dict[tuple, BaseException]) -> None:
-        self.metrics.inc("errors")
-        for key in {key for key, _ in chunk}:
-            failures.setdefault(key, exc)
-
-    # -- cross-request scan ----------------------------------------------
-    def _execute_plans(self, plans: dict[tuple, QueryPlan]
-                       ) -> tuple[dict[tuple, list[PatternHit]],
-                                  dict[tuple, BaseException]]:
-        """Scan all plans' candidates through *shared* kernel dispatches.
-
-        Every (plan, candidate row) pair becomes one scan item; items
-        from different plans are chunked together under the engine's
-        batch_records / batch_bytes limits (sized from the index's
-        ``uncomp_len`` column, so chunking decides before any payload is
-        decompressed) and each chunk goes through one multi-pattern
-        dispatch per width bucket — the request count no longer shows up
-        in the dispatch count. Payloads are fetched per chunk in
-        shard/offset order (deduped inside the chunk, the cache absorbs
-        repeats across chunks), scanned and verified, then released —
-        resident memory stays bounded by chunk size + cache budget, like
-        the sync engine's streaming execute.
-
-        Failure isolation: unreadable rows are skipped per-row (see
-        :meth:`_fetch_chunk`); a chunk whose scan/verify raises fails
-        only the plans with items in that chunk (returned in the second
-        element), never the whole batch — one poisoned query can't take
-        down its co-batched neighbours.
-        """
-        results: dict[tuple, list[PatternHit]] = {key: [] for key in plans}
-        failures: dict[tuple, BaseException] = {}
-        kernel_items: list[tuple[tuple, int]] = []  # (plan key, row)
-        host_items: list[tuple[tuple, int]] = []
-        for key, plan in plans.items():
-            target = (host_items if plan.needs_host_scan
-                      or not self.engine.use_kernel else kernel_items)
-            target.extend((key, int(r)) for r in plan.rows)
-
-        def fetch_order(item: tuple[tuple, int]) -> tuple[int, int]:
-            return (int(self.index.shard_id[item[1]]),
-                    int(self.index.offset[item[1]]))
-
-        kernel_items.sort(key=fetch_order)
-        host_items.sort(key=fetch_order)
-
-        n_scanned = bytes_scanned = 0
-        for chunk in self._chunks(kernel_items):
-            chunk = [item for item in chunk if item[0] not in failures]
-            if not chunk:
-                continue
-            try:
-                bufs, chunk = self._fetch_chunk(chunk)
-                if chunk:
-                    self._scan_chunk(chunk, plans, bufs, results)
-                n_scanned += len(chunk)
-                bytes_scanned += sum(len(bufs[row]) for _, row in chunk)
-            except Exception as exc:
-                self._fail_chunk(chunk, exc, failures)
-
-        # host path (literal sweep / regex gate, no device work): same
-        # chunked fetch-dedup-release structure as the kernel path
-        for chunk in self._chunks(host_items):
-            chunk = [item for item in chunk if item[0] not in failures]
-            if not chunk:
-                continue
-            try:
-                bufs, chunk = self._fetch_chunk(chunk)
-                with self._stage("gw.host_verify",
-                                 attrs={"rows": len(chunk)}):
-                    for key, row in chunk:
-                        plan = plans[key]
-                        buf = bufs[row]
-                        self._finish_row(plan, key, row, buf,
-                                         plan.host_scan(buf), results)
-                        n_scanned += 1
-                        bytes_scanned += len(buf)
-            except Exception as exc:
-                self._fail_chunk(chunk, exc, failures)
-
-        self.metrics.inc("host_scans", len(host_items))
-        self.metrics.inc("records_scanned", n_scanned)
-        self.metrics.inc("bytes_scanned", bytes_scanned)
-        for hits in results.values():
-            hits.sort(key=lambda h: h.index_row)
-        return results, failures
-
-    def _chunks(self, items: list[tuple[tuple, int]]
-                ) -> "list[list[tuple[tuple, int]]]":
-        """Split scan items under the engine's batch record/byte limits,
-        sized from the index (``uncomp_len`` == payload length)."""
-        chunks: list[list[tuple[tuple, int]]] = []
-        current: list[tuple[tuple, int]] = []
-        pending = 0
-        for item in items:
-            current.append(item)
-            pending += int(self.index.uncomp_len[item[1]])
-            if (len(current) >= self.engine.batch_records
-                    or pending >= self.engine.batch_bytes):
-                chunks.append(current)
-                current, pending = [], 0
-        if current:
-            chunks.append(current)
-        return chunks
-
-    def _finish_row(self, plan: QueryPlan, key: tuple, row: int, buf: bytes,
-                    lit_positions: np.ndarray,
-                    results: dict[tuple, list[PatternHit]]) -> None:
-        final, first_len = plan.verify(buf, lit_positions)
-        if final.size:
-            results[key].append(self.engine.make_hit(row, buf, final,
-                                                     first_len))
-
-    def _scan_chunk(self, chunk: list[tuple[tuple, int]],
-                    plans: dict[tuple, QueryPlan], bufs: dict[int, bytes],
-                    results: dict[tuple, list[PatternHit]]) -> None:
-        from repro.kernels.bucketing import dispatch_count
-        from repro.kernels.pattern_scan import find_pattern_masks_multi
-
-        chunk_bufs = [bufs[row] for _, row in chunk]
-        chunk_pats = [plans[key].kernel_pattern for key, _ in chunk]
-        with self._stage("gw.kernel_dispatch",
-                         attrs={"rows": len(chunk)}) as sp:
-            masks = find_pattern_masks_multi(chunk_bufs, chunk_pats,
-                                             block=self.engine.scan_block,
-                                             interpret=self.engine.interpret)
-            dispatches = dispatch_count(
-                [len(b) for b in chunk_bufs], self.engine.scan_block)
-            if sp is not None:
-                sp.set_attr("dispatches", dispatches)
-        self.metrics.inc("kernel_dispatches", dispatches)
-        with self._stage("gw.host_verify", attrs={"rows": len(chunk)}):
-            for (key, row), mask, buf in zip(chunk, masks, chunk_bufs):
-                self._finish_row(plans[key], key, row, buf,
-                                 np.flatnonzero(mask), results)
 
     # -- lifecycle -------------------------------------------------------
-    def _fail_queued(self) -> None:
-        """Fail every currently queued ticket with :class:`GatewayClosed`
-        (queue gets hand tickets to exactly one caller each, so this can
-        race a live scheduler without double-resolving any future)."""
-        while True:
-            try:
-                ticket = self._queue.get_nowait()
-            except queue.Empty:
-                return
-            if ticket.future.set_running_or_notify_cancel():
-                ticket.future.set_exception(GatewayClosed("gateway closed"))
-
     def close(self, *, drain: bool = True, timeout: float = 30.0) -> None:
-        """Stop the scheduler; by default serve everything already queued.
+        """Stop the pool; by default serve everything already queued.
+
+        Order matters for the close audit: (1) reject new submissions,
+        (2) stop the supervisor (no respawns during teardown), (3) reap
+        any already-dead shard — its orphans re-drive into siblings that
+        are *still open* and will drain them, (4) close shards one by
+        one (each serves its queue), (5) fail anything a shard that died
+        *during* its own drain left behind, with :class:`GatewayShardDown`.
+        A waiter attached to an in-flight batch on shard A is resolved by
+        step (4) regardless of what order siblings closed in — shards
+        never wait on each other, so there is no deadlock to have.
 
         ``drain=False`` fails queued-but-unserved requests with
         :class:`GatewayClosed` instead of serving them. Raises
-        ``TimeoutError`` if the scheduler is still mid-scan after
-        ``timeout`` — the engine is left open for it; call ``close``
-        again to retry teardown.
+        ``TimeoutError`` if any shard is still mid-scan after
+        ``timeout`` — its engine is left open; call ``close`` again to
+        retry teardown.
         """
-        if self._closed and not self._thread.is_alive():
-            return
         self._closed = True  # reject new submissions immediately
-        if not drain:
-            self._fail_queued()
-        self._stop.set()
-        self._thread.join(timeout)
-        if self._thread.is_alive():
-            raise TimeoutError(
-                f"gateway scheduler still serving after {timeout}s; "
-                f"engine left open — retry close() to finish teardown")
-        # a submit that passed the closed check concurrently with close()
-        # may have enqueued after the scheduler exited — fail it rather
-        # than leave its future forever pending
-        self._fail_queued()
-        self.engine.close()
+        self._sup_stop.set()
+        if self._sup_thread.is_alive():
+            self._sup_thread.join(5.0)
+        for shard in self._shards:
+            if shard.dead and not shard.alive():
+                self._reap(shard, closing=True)
+        timeout_exc: TimeoutError | None = None
+        for shard in self._shards:
+            try:
+                shard.close(drain=drain, timeout=timeout)
+            except TimeoutError as exc:
+                timeout_exc = timeout_exc or exc
+        for shard in self._shards:
+            # a death mid-close-drain cannot re-drive (siblings are
+            # closing/closed): typed failure, never a silent drop
+            if shard.dead:
+                for ticket in shard.take_orphans():
+                    self._fail_shard_down(ticket, shard.shard_id)
+        if timeout_exc is not None:
+            raise timeout_exc
 
     def __enter__(self) -> "ArchiveGateway":
         return self

@@ -53,11 +53,19 @@ class GatewayMetrics:
         "read_errors",         # damaged-record fetches (RecordReadError)
         "quarantined_rows",    # candidate rows skipped as unreadable
         "flight_dumps",        # anomaly-tripped flight-recorder dumps
+        # PR 9 — sharded-gateway robustness surface
+        "rejected_bytes",      # of "rejected": pending-byte-budget refusals
+        "shard_deaths",        # drain threads that exited abnormally
+        "shard_respawns",      # deaths recovered by a respawn
+        "shards_down",         # shards retired permanently (respawns spent)
+        "redriven",            # orphaned tickets re-routed exactly once
+        "shard_down_errors",   # tickets failed typed with GatewayShardDown
     )
 
     def __init__(self, registry: Registry | None = None) -> None:
         self._reg = registry if registry is not None \
             else Registry(source="gateway")
+        self._hw_seen = 0  # global queue-depth high-water across shards
         # declare every counter up front: count()/snapshot() report 0 for
         # untouched counters instead of KeyError/absence
         for name in self._COUNTERS:
@@ -84,6 +92,17 @@ class GatewayMetrics:
     def gauge_set(self, name: str, value: float) -> None:
         """Set a gauge (prefixed ``gateway.`` for the merged snapshot)."""
         self._reg.gauge_set(f"gateway.{name}", value)
+
+    def note_global_depth(self, depth: int) -> None:
+        """Fold one shard's observed queue depth into the gateway-wide
+        ``queue_depth`` gauge and its monotone high-water mark (each
+        shard also publishes ``shard<i>.queue_depth`` for attribution —
+        the global gauge is the most recent observation from any shard,
+        kept for surface compatibility with the single-scheduler era)."""
+        self.gauge_set("queue_depth", depth)
+        if depth > self._hw_seen:
+            self._hw_seen = depth
+            self.gauge_set("queue_depth_highwater", depth)
 
     def count(self, name: str) -> int:
         return self._reg.counter(name)

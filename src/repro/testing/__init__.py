@@ -7,6 +7,7 @@ plus environment plumbing for the in-tree fault hooks.
 from .faults import (
     DamagedSpan,
     arm_decoder_stall,
+    arm_scheduler_shard_kill,
     arm_worker_kill,
     corrupt_warc,
     member_spans,
@@ -15,6 +16,7 @@ from .faults import (
 __all__ = [
     "DamagedSpan",
     "arm_decoder_stall",
+    "arm_scheduler_shard_kill",
     "arm_worker_kill",
     "corrupt_warc",
     "member_spans",

@@ -30,6 +30,7 @@ from repro.core.warc.streams import detect_compression
 __all__ = [
     "DamagedSpan",
     "arm_decoder_stall",
+    "arm_scheduler_shard_kill",
     "arm_worker_kill",
     "corrupt_warc",
     "member_spans",
@@ -174,6 +175,20 @@ def arm_worker_kill(latch_dir: str, nth: int = 1):
     means the fault actually fired.
     """
     return _armed("REPRO_FAULT_WORKER_KILL", latch_dir, str(int(nth)))
+
+
+def arm_scheduler_shard_kill(latch_dir: str, nth_batch: int = 1):
+    """Arm ``REPRO_FAULT_SHARD_KILL``: the first gateway scheduler shard
+    (the spec is captured at shard-*spawn* time, so arm before building
+    the gateway) to begin serving its ``nth_batch``-th drained batch
+    wins the one-shot latch and dies **mid-batch** — after publishing
+    its in-flight scan registry (so coalesce-attached waiters are
+    orphaned too) and before resolving any waiter. Losers of the latch
+    race keep serving. Yields the latch path; the latch file existing
+    afterwards means the fault actually fired.
+    """
+    return _armed("REPRO_FAULT_SHARD_KILL", latch_dir,
+                  str(int(nth_batch)))
 
 
 def arm_decoder_stall(latch_dir: str, member: int = 1,

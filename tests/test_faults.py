@@ -326,3 +326,94 @@ def test_gateway_degrades_on_damaged_records(gw_index):
     assert snap["read_errors"] > 0
     assert snap["quarantined_rows"] > 0
     assert snap["errors"] == 0  # skipped rows, not failed queries
+
+
+# --------------------------------------------------------------------------
+# sharded gateway: shard-kill chaos soak (PR 9)
+# --------------------------------------------------------------------------
+
+def test_shard_kill_chaos_soak(tmp_path):
+    """Kill one scheduler shard mid-batch under concurrent duplicate-heavy
+    load: every submitted request resolves **exactly once** — either
+    byte-identical to an independent synchronous engine run or with a
+    typed error — no coalesced waiter wedges, the shard respawns, and no
+    shm segments are orphaned."""
+    import threading
+
+    from repro.index.cdx import build_index
+    from repro.index.query import QueryEngine
+    from repro.index.service import QueryRequest
+    from repro.serve import (ArchiveGateway, GatewayShardDown,
+                             GatewayTimeout)
+    from repro.testing.faults import arm_scheduler_shard_kill
+
+    paths = _shards(tmp_path, n=2, n_pages=16)
+    idx = build_index(paths, workers=0)
+    reqs = [QueryRequest(b"the", top_k=5), QueryRequest(b"nginx", top_k=4),
+            QueryRequest(b"crawl", top_k=3), QueryRequest(b"href", top_k=5),
+            QueryRequest(b"absent-needle!", top_k=2),
+            QueryRequest(rb"[Cc]rawl", regex=True, top_k=4)]
+
+    def _oracle(request):
+        with QueryEngine(idx, use_kernel=False) as engine:
+            if request.regex:
+                hits = engine.search_regex(request.pattern)
+            else:
+                hits = engine.search(request.pattern)
+        ranked = sorted(hits, key=lambda h: -h.n_matches)
+        return ([(h.index_row, h.offset, h.n_matches, tuple(h.positions),
+                  h.excerpt) for h in ranked[:request.top_k]], len(hits))
+
+    want = {r.scan_key(): _oracle(r) for r in reqs}
+    outcomes = []
+    out_lock = threading.Lock()
+    shm_before = set(glob.glob("/dev/shm/repro-shm-*"))
+    with arm_scheduler_shard_kill(str(tmp_path), nth_batch=1) as latch:
+        with ArchiveGateway(idx, shards=3, use_kernel=False,
+                            max_pending=1024,
+                            respawn_backoff_s=0.01) as gw:
+            def client(tid):
+                futs = []
+                for i in range(12):  # duplicate-heavy: coalescing live
+                    req = reqs[(tid + i) % len(reqs)]
+                    futs.append((req, gw.submit(req)))
+                for req, fut in futs:
+                    try:
+                        res = ("ok", req, fut.result(120))
+                    except (GatewayShardDown, GatewayTimeout) as exc:
+                        res = ("typed", req, exc)
+                    with out_lock:
+                        outcomes.append(res)
+
+            threads = [threading.Thread(target=client, args=(t,))
+                       for t in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(300)
+            assert not any(t.is_alive() for t in threads), \
+                "a client wedged waiting on a coalesced future"
+            assert os.path.exists(latch), "injected shard death never fired"
+            snap = gw.metrics.snapshot()
+            # the killed shard respawned and the pool still serves
+            post = gw.query(QueryRequest(b"the", top_k=5), timeout=60)
+            assert post.total_matches == want[
+                QueryRequest(b"the", top_k=5).scan_key()][1]
+    assert len(outcomes) == 6 * 12          # exactly once each, none lost
+    served = [o for o in outcomes if o[0] == "ok"]
+    for _, req, resp in served:
+        want_hits, want_total = want[req.scan_key()]
+        got = [(h.index_row, h.offset, h.n_matches, tuple(h.positions),
+                h.excerpt) for h in resp.hits]
+        assert got == want_hits             # byte-identical to the oracle
+        assert resp.total_matches == want_total
+    # the overwhelming path is recovery, not typed failure: the single
+    # allowed re-drive serves orphans unless a second death hits them
+    assert len(served) >= len(outcomes) - snap["shard_down_errors"]
+    assert snap["shard_deaths"] == 1
+    assert snap["shard_respawns"] == 1
+    assert snap["redriven"] >= 1
+    assert snap["errors"] == 0              # no double-resolution blowups
+    # no orphaned shm segments from this run (delta: other suites may
+    # legitimately have segments live in parallel)
+    assert set(glob.glob("/dev/shm/repro-shm-*")) - shm_before == set()

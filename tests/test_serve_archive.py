@@ -426,7 +426,7 @@ def test_shared_dispatch_across_distinct_queries(corpus):
     with ArchiveGateway(idx, engine=engine) as gw:
         plans = {req1.scan_key(): engine.plan(req1.pattern),
                  req2.scan_key(): engine.plan(req2.pattern)}
-        results, failures = gw._execute_plans(plans)  # scheduler idle
+        results, failures = gw.shards[0]._execute_plans(plans)  # shard idle
         assert not failures
         shared = gw.metrics.count("kernel_dispatches")
     assert 0 < shared < solo

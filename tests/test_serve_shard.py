@@ -1,0 +1,410 @@
+"""Sharded gateway tests (PR 9, repro.serve.shard + the router in
+repro.serve.archive): affinity routing keeps coalescing, per-shard
+admission budgets reject typed, shard death → reap → respawn →
+re-drive resolves every ticket exactly once, close() audit for the
+sharded world, and the consistent-hash sharded record cache property
+tests (single-residency, zipfian hit-rate parity, slice-local
+invalidation).
+
+Tier-2 selection: ``pytest -m serve_archive``; the whole module also
+runs under the tier-1 suite. (The shard-kill chaos soak lives in
+``test_faults.py`` under ``-m faults``.)
+"""
+import threading
+import time
+
+import pytest
+
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import QueryEngine, QueryRequest, build_index
+from repro.serve import (
+    ArchiveGateway,
+    GatewayOverloaded,
+    GatewayShardDown,
+    RecordCache,
+    ShardedRecordCache,
+)
+from repro.serve.archive import _key_hash
+from repro.serve.shard import _Ticket
+from repro.testing import arm_scheduler_shard_kill
+
+pytestmark = pytest.mark.serve_archive
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    d = tmp_path_factory.mktemp("shard_corpus")
+    paths = []
+    for i, comp in enumerate(["gzip", "none"]):
+        p = str(d / f"s{i}.warc.{comp}")
+        write_corpus(p, CorpusSpec(n_pages=8, seed=90 + i), comp)
+        paths.append(p)
+    return paths, build_index(paths)
+
+
+def _response_key(hits):
+    return [(h.index_row, h.offset, h.n_matches, tuple(h.positions),
+             h.excerpt) for h in hits]
+
+
+def _sync_answer(index, request):
+    with QueryEngine(index) as engine:
+        if request.regex:
+            hits = engine.search_regex(request.pattern, request.filters,
+                                       prefilter=request.prefilter)
+        else:
+            hits = engine.search(request.pattern, request.filters,
+                                 prefilter=request.prefilter)
+    ranked = sorted(hits, key=lambda h: -h.n_matches)
+    return _response_key(ranked[:request.top_k]), len(hits)
+
+
+def _patterns_by_home(n_shards, want_home, count, taken=()):
+    """Deterministic synthetic patterns whose scan identity hashes to
+    ``want_home`` under an ``n_shards`` ring."""
+    out = []
+    i = 0
+    while len(out) < count:
+        pat = b"needle-%d" % i
+        i += 1
+        if pat in taken:
+            continue
+        if _key_hash(QueryRequest(pat).scan_key()) % n_shards == want_home:
+            out.append(pat)
+    return out
+
+
+class _BlockableEngine(QueryEngine):
+    """Engine whose plan() parks until released — pins a scan in-flight."""
+
+    def __init__(self, index, **kw):
+        super().__init__(index, **kw)
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def plan(self, *a, **kw):
+        self.entered.set()
+        assert self.release.wait(60), "test never released the engine"
+        return super().plan(*a, **kw)
+
+
+# --------------------------------------------------------------------------
+# Routing: affinity hashing preserves coalescing
+# --------------------------------------------------------------------------
+
+def test_affinity_routing_is_stable_and_spreads(corpus):
+    _, idx = corpus
+    with ArchiveGateway(idx, shards=4, use_kernel=False) as gw:
+        req = QueryRequest(b"nginx", top_k=3)
+        homes = {gw._shard_index(req.scan_key()) for _ in range(100)}
+        assert len(homes) == 1  # same identity → same shard, always
+        # distinct identities spread across the pool (blake2b, not a
+        # constant): over 32 keys every shard of 4 should see work
+        spread = {gw._shard_index(QueryRequest(b"key-%d" % i).scan_key())
+                  for i in range(32)}
+        assert spread == {0, 1, 2, 3}
+
+
+def test_sharded_matches_sync_and_coalesces(corpus):
+    """Concurrent duplicate-heavy traffic across 4 shards: responses
+    byte-identical to the sync oracle, and coalescing still happens
+    (same identity always routes to the same shard's registry)."""
+    _, idx = corpus
+    reqs = [QueryRequest(b"nginx", top_k=5), QueryRequest(b"crawl", top_k=4),
+            QueryRequest(b"absent-from-corpus"),
+            QueryRequest(rb"[Cc]rawl", regex=True)]
+    want = {r.scan_key(): _sync_answer(idx, r) for r in reqs}
+    results, errors = [], []
+    lock = threading.Lock()
+    with ArchiveGateway(idx, shards=4, use_kernel=False,
+                        max_pending=1024) as gw:
+        def client(tid):
+            try:
+                futs = [(r, gw.submit(r)) for r in reqs]
+                for r, f in futs:
+                    with lock:
+                        results.append((r, f.result(300)))
+            except BaseException as exc:  # pragma: no cover
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(600)
+        snap = gw.metrics.snapshot(gw.cache)
+    assert not errors
+    assert len(results) == 8 * len(reqs)
+    for r, resp in results:
+        want_hits, want_total = want[r.scan_key()]
+        assert _response_key(resp.hits) == want_hits
+        assert resp.total_matches == want_total
+    assert snap["responses"] == len(results)
+    assert snap["errors"] == 0
+    assert snap["coalesced"] > 0          # affinity kept coalescing alive
+    assert snap["cache_slices"] == 4
+
+
+# --------------------------------------------------------------------------
+# Per-shard admission budgets
+# --------------------------------------------------------------------------
+
+def test_depth_budget_is_per_shard_and_typed(corpus):
+    """One saturated shard rejects with a shard-tagged GatewayOverloaded
+    while its siblings keep admitting — no global cliff."""
+    _, idx = corpus
+    engines = {}
+
+    def factory(i):
+        engines[i] = _BlockableEngine(idx)
+        return engines[i]
+
+    with ArchiveGateway(idx, shards=2, max_pending=1,
+                        engine_factory=factory) as gw:
+        a0, a1, a2 = (QueryRequest(p) for p in _patterns_by_home(2, 0, 3))
+        (b0,) = (QueryRequest(p) for p in _patterns_by_home(2, 1, 1))
+        f_a0 = gw.submit(a0)
+        assert engines[0].entered.wait(60)   # shard 0 parked mid-plan
+        f_a1 = gw.submit(a1)                 # fills shard 0's only slot
+        with pytest.raises(GatewayOverloaded) as ei:
+            gw.submit(a2, block=False)       # shard 0 over depth budget
+        assert ei.value.shard == 0
+        assert ei.value.reason == "depth"
+        f_b0 = gw.submit(b0, block=False)    # shard 1 unaffected
+        assert engines[1].entered.wait(60)
+        for eng in engines.values():
+            eng.release.set()
+        for f in (f_a0, f_a1, f_b0):
+            f.result(120)
+        snap = gw.metrics.snapshot()
+    assert snap["rejected"] == 1
+    assert snap["rejected_bytes"] == 0
+    assert snap["responses"] == 3
+
+
+def test_byte_budget_charges_unique_scans_only(corpus):
+    """The pending-byte budget charges per unique queued scan identity:
+    a duplicate of a queued scan is free (coalescing-friendly traffic is
+    never the traffic that gets shed); a new identity over budget gets
+    GatewayOverloaded(reason="bytes")."""
+    _, idx = corpus
+    engine = _BlockableEngine(idx)
+    with ArchiveGateway(idx, engine=engine, shard_byte_budget=1500,
+                        est_scan_bytes=1000) as gw:
+        r0 = QueryRequest(b"pin-the-scheduler")
+        f0 = gw.submit(r0)
+        assert engine.entered.wait(60)       # shard busy; queue accumulates
+        r1 = QueryRequest(b"queued-one")
+        f1 = gw.submit(r1)                   # charges 1000 of 1500
+        with pytest.raises(GatewayOverloaded) as ei:
+            gw.submit(QueryRequest(b"queued-two"), block=False)  # +1000 > 1500
+        assert ei.value.reason == "bytes"
+        assert ei.value.shard == 0
+        f1_dup = gw.submit(r1, block=False)  # same identity: zero charge
+        engine.release.set()
+        for f in (f0, f1, f1_dup):
+            f.result(120)
+        snap = gw.metrics.snapshot()
+    assert snap["rejected"] == 1
+    assert snap["rejected_bytes"] == 1
+    assert snap["responses"] == 3
+
+
+# --------------------------------------------------------------------------
+# Shard death: reap, respawn, re-drive exactly once
+# --------------------------------------------------------------------------
+
+def test_shard_death_redrives_and_respawns(corpus, tmp_path):
+    _, idx = corpus
+    req = QueryRequest(b"nginx", top_k=5)
+    want_hits, want_total = _sync_answer(idx, req)
+    with arm_scheduler_shard_kill(str(tmp_path), nth_batch=1) as latch:
+        with ArchiveGateway(idx, shards=2, use_kernel=False,
+                            respawn_backoff_s=0.01) as gw:
+            resp = gw.submit(req).result(60)
+            import os
+            assert os.path.exists(latch), "injected death never fired"
+            # the orphan was re-driven and served byte-identically
+            assert _response_key(resp.hits) == want_hits
+            assert resp.total_matches == want_total
+            snap = gw.metrics.snapshot()
+            assert snap["shard_deaths"] == 1
+            assert snap["shard_respawns"] == 1
+            assert snap["redriven"] >= 1
+            assert snap["shard_down_errors"] == 0
+            # the respawned pool keeps serving (including the same key)
+            again = gw.submit(req).result(60)
+            assert _response_key(again.hits) == want_hits
+
+
+def test_second_death_fails_typed_never_silent(corpus):
+    """A ticket that already consumed its re-drive fails with
+    GatewayShardDown — claimed first, so it can never double-resolve."""
+    _, idx = corpus
+    with ArchiveGateway(idx, shards=2, use_kernel=False) as gw:
+        ticket = _Ticket(QueryRequest(b"nginx"))
+        ticket.redriven = True
+        gw._redrive(ticket, from_shard=1)
+        with pytest.raises(GatewayShardDown) as ei:
+            ticket.future.result(0)
+        assert ei.value.shard == 1
+        assert gw.metrics.count("shard_down_errors") == 1
+        # already-resolved orphans are left alone (exactly-once)
+        done = _Ticket(QueryRequest(b"nginx"))
+        done.future.set_running_or_notify_cancel()
+        done.future.set_result("sentinel")
+        gw._redrive(done, from_shard=0)
+        assert done.future.result(0) == "sentinel"
+
+
+def test_respawn_budget_exhausted_retires_and_routes_around(corpus,
+                                                            tmp_path):
+    """max_respawns=0: the first death retires the shard permanently —
+    traffic routes around it via the affinity ring and its cache slice
+    leaves the ring, while every orphan still resolves."""
+    _, idx = corpus
+    pats = [QueryRequest(p) for p in
+            _patterns_by_home(2, 0, 2) + _patterns_by_home(2, 1, 2)]
+    want = {r.scan_key(): _sync_answer(idx, r) for r in pats}
+    with arm_scheduler_shard_kill(str(tmp_path), nth_batch=1):
+        with ArchiveGateway(idx, shards=2, use_kernel=False,
+                            max_respawns=0) as gw:
+            first = gw.submit(pats[0]).result(60)   # death + re-drive
+            assert _response_key(first.hits) == want[pats[0].scan_key()][0]
+            victim = next(s for s in gw.shards if s.down)
+            snap = gw.metrics.snapshot()
+            assert snap["shards_down"] == 1
+            assert snap["shard_respawns"] == 0
+            # every home (including the dead shard's) still serves
+            for req in pats:
+                resp = gw.submit(req).result(60)
+                assert _response_key(resp.hits) == want[req.scan_key()][0]
+            assert not victim.alive()
+            # the survivor owns the whole cache ring now
+            assert gw.cache.slice_for(("probe", 1)) != victim.shard_id
+
+
+# --------------------------------------------------------------------------
+# close(drain=True) audit for the sharded world
+# --------------------------------------------------------------------------
+
+def test_close_drain_with_waiter_on_shard_a_while_b_closed(corpus):
+    """The pinned regression from ISSUE 9: a waiter attached to an
+    in-flight batch on shard A, while shard B is already closed, must
+    resolve exactly once — no deadlock, no double-resolution."""
+    _, idx = corpus
+    engines = {}
+
+    def factory(i):
+        engines[i] = _BlockableEngine(idx)
+        return engines[i]
+
+    with ArchiveGateway(idx, shards=2, engine_factory=factory) as gw:
+        (pat_a,) = _patterns_by_home(2, 0, 1)
+        req = QueryRequest(pat_a, top_k=4)
+        first = gw.submit(req)
+        assert engines[0].entered.wait(60)  # shard 0 mid-batch (parked);
+        attached = gw.submit(req)           # in-flight registry published
+        assert gw.metrics.count("coalesced") == 1
+        gw.shards[1].close(drain=True)      # shard B already closed
+        closer = threading.Thread(target=gw.close,
+                                  kwargs={"drain": True})
+        closer.start()
+        time.sleep(0.05)                    # close() now joining shard 0
+        engines[0].release.set()
+        closer.join(120)
+        assert not closer.is_alive(), "close(drain=True) deadlocked"
+        a, b = first.result(5), attached.result(5)
+        assert _response_key(a.hits) == _response_key(b.hits)
+        assert gw.metrics.count("responses") == 2
+        assert gw.metrics.count("shard_down_errors") == 0
+
+
+def test_close_is_idempotent_after_shard_closed_directly(corpus):
+    _, idx = corpus
+    gw = ArchiveGateway(idx, shards=2, use_kernel=False)
+    gw.shards[0].close(drain=True)
+    gw.close(drain=True)
+    gw.close(drain=True)  # second close: no-op, no raise
+
+
+# --------------------------------------------------------------------------
+# Sharded record cache: consistent-hash properties
+# --------------------------------------------------------------------------
+
+def _fill(cache, n, payload=b"x" * 64):
+    keys = [(k, k * 7) for k in range(n)]
+    for key in keys:
+        cache.put(key, payload)
+    return keys
+
+
+def test_sharded_cache_single_residency():
+    """No key is ever resident in two slices, and the owner agrees with
+    slice_for (the consistent-hash map, not insertion accident)."""
+    cache = ShardedRecordCache(1 << 20, 4, admission="lru")
+    keys = _fill(cache, 256)
+    for key in keys:
+        resident = [i for i, sl in enumerate(cache.slices)
+                    if key in sl._entries]
+        assert resident == [cache.slice_for(key)]
+    assert len(cache) == 256
+    assert cache.snapshot()["slices"] == 4
+
+
+def test_sharded_cache_zipf_hit_rate_matches_single_cache():
+    """Hot-key hit rate under a zipfian workload within 5% of a single
+    cache of the same total budget (LRU on both sides: deterministic)."""
+    import numpy as np
+
+    payload = b"p" * 100
+    budget = 100 * 400  # ~400 resident keys of ~2000 touched
+    single = RecordCache(budget, admission="lru")
+    sharded = ShardedRecordCache(budget, 4, admission="lru")
+    rng = np.random.default_rng(42)
+    accesses = rng.zipf(1.4, size=20000)
+    for raw in accesses:
+        key = (int(raw) % 2000, 0)
+        for cache in (single, sharded):
+            if cache.get(key) is None:
+                cache.put(key, payload)
+    assert single.hit_rate > 0.4  # the workload actually has a hot head
+    assert abs(single.hit_rate - sharded.hit_rate) <= 0.05
+
+
+def test_sharded_cache_remove_slice_invalidates_only_its_arc():
+    cache = ShardedRecordCache(1 << 20, 4, admission="lru")
+    keys = _fill(cache, 256)
+    owner_before = {key: cache.slice_for(key) for key in keys}
+    victim = 2
+    cache.remove_slice(victim)
+    for key in keys:
+        if owner_before[key] == victim:
+            assert cache.get(key) is None          # its arc: invalidated
+            assert cache.slice_for(key) != victim  # remapped to a survivor
+        else:
+            assert cache.get(key) == b"x" * 64     # survivors keep heat
+            assert cache.slice_for(key) == owner_before[key]
+    assert cache.snapshot()["slices_removed"] == 1
+
+
+def test_sharded_cache_clear_slice_is_local():
+    cache = ShardedRecordCache(1 << 20, 4, admission="lru")
+    keys = _fill(cache, 256)
+    victim = 1
+    victims = [k for k in keys if cache.slice_for(k) == victim]
+    survivors = [k for k in keys if cache.slice_for(k) != victim]
+    assert victims and survivors
+    cache.clear_slice(victim)
+    assert all(cache.get(k) is None for k in victims)
+    assert all(cache.get(k) is not None for k in survivors)
+
+
+def test_sharded_cache_single_slice_is_plain_cache():
+    cache = ShardedRecordCache(1 << 10, 1, admission="tinylfu")
+    cache.put((1, 2), b"abc")
+    assert cache.get((1, 2)) == b"abc"
+    assert cache.slice_for((1, 2)) == 0
+    assert cache.hits == 1 and cache.misses == 0
+    assert cache.snapshot()["admission"] == "tinylfu"

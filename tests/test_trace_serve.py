@@ -261,19 +261,20 @@ def test_gateway_coalesce_attach_span(corpus_index, tmp_path):
     with ArchiveGateway(corpus_index, cache_bytes=1 << 20,
                         flight_recorder=rec) as gw:
         release = threading.Event()
-        orig_plan = gw._plan
+        shard = gw.shards[0]
+        orig_plan = shard._plan
 
         def slow_plan(request):
             release.wait(30)
             return orig_plan(request)
 
-        gw._plan = slow_plan
+        shard._plan = slow_plan
         req = QueryRequest(b"nginx", top_k=3)
         first = gw.submit(req)
-        # wait until the scheduler published the scan as in-flight
+        # wait until the shard published the scan as in-flight
         for _ in range(1000):
-            with gw._lock:
-                if req.scan_key() in gw._inflight:
+            with shard._lock:
+                if req.scan_key() in shard._inflight:
                     break
             time.sleep(0.005)
         second = gw.submit(req)  # coalesces onto the executing scan
