@@ -1,0 +1,151 @@
+"""Columnar derived-store benchmarks: the ISSUE 10 parse-once claims.
+
+Measured — and where the issue names a number, **asserted** — in-bench:
+
+* **derive** — derivation throughput (records/s, payload MB/s) of the
+  parse-once pipeline over a sharded gzip corpus, the store's size
+  relative to the source corpus, and the derive-time row-group
+  **pad-waste ratio**, gated ``< 0.5`` (the ragged power-of-two
+  bucketing it replaces wasted 0.90 of every padded byte).
+* **column scan vs CDX+seek** — a full-corpus pattern query where the
+  signature pre-filter cannot help (the pattern occurs in essentially
+  every response/request record), so the CDX engine must seek,
+  inflate, and re-pack every candidate while the columnar engine runs
+  row-group kernels straight over the mmapped payload matrices. Gated:
+  hits **byte-identical** (row, positions, excerpt — checked before any
+  rate is reported) and columnar ``>= 5x`` the CDX+seek path. A
+  selective pattern and a regex ride along un-gated, plus per-path
+  records-scanned / kernel-dispatch counts so "fewer, bigger
+  dispatches" is checkable in the JSON.
+
+Scale with REPRO_BENCH_PAGES (default 400, split across 8 shards).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.columnar import derive
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import QueryEngine, build_index
+
+_PAGES = int(os.environ.get("REPRO_BENCH_PAGES", "400"))
+_N_SHARDS = 8
+_BROAD_PATTERN = b"HTTP/1.1"       # every request/response content block
+_SELECTIVE_PATTERN = b"nginx/1.17"  # ~1/16 of response records
+_REGEX = rb"Serv[a-z]+: [a-z]+"
+_SPEEDUP_GATE = 5.0
+
+
+def _best_s(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _assert_identical(a, b, label: str) -> None:
+    assert len(a) == len(b), f"{label}: {len(a)} vs {len(b)} hits"
+    for x, y in zip(a, b):
+        assert (x.index_row == y.index_row and x.offset == y.offset
+                and x.n_matches == y.n_matches
+                and np.array_equal(x.positions, y.positions)
+                and x.excerpt == y.excerpt), \
+            f"{label}: hit mismatch at row {x.index_row}"
+
+
+def run(quiet: bool = False) -> list[str]:
+    rows = [f"columnar,env,host,cpu_count,{os.cpu_count()}"]
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = []
+        src_bytes = 0
+        for i in range(_N_SHARDS):
+            p = os.path.join(d, f"s{i}.warc.gz")
+            write_corpus(p, CorpusSpec(n_pages=_PAGES // _N_SHARDS, seed=i),
+                         "gzip")
+            src_bytes += os.path.getsize(p)
+            paths.append(p)
+        index = build_index(paths)
+
+        # -- derive throughput + format economics -------------------------
+        out = os.path.join(d, "corpus.repcol")
+        t0 = time.perf_counter()
+        store = derive(paths, out)
+        t_derive = time.perf_counter() - t0
+        n = len(store)
+        payload_mb = int(np.asarray(store.length).sum()) / 1e6
+        rows.append(f"columnar,derive,serial,records_per_s,"
+                    f"{n / t_derive:.1f}")
+        rows.append(f"columnar,derive,serial,payload_mb_per_s,"
+                    f"{payload_mb / t_derive:.2f}")
+        rows.append(f"columnar,derive,store,bytes_per_record,"
+                    f"{os.path.getsize(out) / max(n, 1):.1f}")
+        rows.append(f"columnar,derive,store,size_vs_source,"
+                    f"{os.path.getsize(out) / max(src_bytes, 1):.2f}")
+        waste = store.pad_waste_ratio()
+        # derive-time packing must beat the issue's 0.5 gate (ragged
+        # power-of-two bucketing sat at 0.90)
+        assert waste < 0.5, f"derive pad-waste {waste:.3f} >= 0.5"
+        rows.append(f"columnar,derive,rowgroups,pad_waste_ratio,{waste:.3f}")
+        rows.append(f"columnar,derive,rowgroups,count,{store.n_rowgroups}")
+
+        # -- column scan vs CDX+seek: identical hits, gated speedup -------
+        cdx = QueryEngine(index)
+        col = QueryEngine(index, store=store)
+        # warmth: compile both paths' kernel shapes, open shard readers
+        base_hits = cdx.search(_BROAD_PATTERN)
+        col_hits = col.search(_BROAD_PATTERN)
+        _assert_identical(base_hits, col_hits, "broad pattern")
+        rows.append(f"columnar,query,broad,verified_identical,1")
+        rows.append(f"columnar,query,broad,hits,{len(col_hits)}")
+
+        t_cdx = _best_s(lambda: cdx.search(_BROAD_PATTERN))
+        t_col = _best_s(lambda: col.search(_BROAD_PATTERN))
+        speedup = t_cdx / t_col
+        rows.append(f"columnar,query,broad_cdx_seek,ms,{t_cdx * 1e3:.1f}")
+        rows.append(f"columnar,query,broad_columnar,ms,{t_col * 1e3:.1f}")
+        rows.append(f"columnar,query,broad_columnar,speedup,{speedup:.2f}")
+        # the issue's acceptance gate: the derived store must beat the
+        # fetch-and-batch engine >=5x on the full-corpus scan
+        assert speedup >= _SPEEDUP_GATE, \
+            f"columnar speedup {speedup:.2f} < {_SPEEDUP_GATE}"
+
+        # un-gated companions: selective literal + literal-driven regex
+        _assert_identical(cdx.search(_SELECTIVE_PATTERN),
+                          col.search(_SELECTIVE_PATTERN), "selective")
+        t_cdx_sel = _best_s(lambda: cdx.search(_SELECTIVE_PATTERN))
+        t_col_sel = _best_s(lambda: col.search(_SELECTIVE_PATTERN))
+        rows.append(f"columnar,query,selective_columnar,speedup,"
+                    f"{t_cdx_sel / t_col_sel:.2f}")
+        _assert_identical(cdx.search_regex(_REGEX),
+                          col.search_regex(_REGEX), "regex")
+        t_cdx_re = _best_s(lambda: cdx.search_regex(_REGEX))
+        t_col_re = _best_s(lambda: col.search_regex(_REGEX))
+        rows.append(f"columnar,query,regex_columnar,speedup,"
+                    f"{t_cdx_re / t_col_re:.2f}")
+
+        # dispatch economics: same candidates, far fewer kernel calls
+        for label, eng in (("cdx_seek", cdx), ("columnar", col)):
+            q = max(eng.stats["queries"], 1)
+            rows.append(f"columnar,query,{label},records_scanned_per_query,"
+                        f"{eng.stats['records_scanned'] / q:.1f}")
+            rows.append(f"columnar,query,{label},dispatches_per_query,"
+                        f"{eng.stats['kernel_dispatches'] / q:.2f}")
+        rows.append(f"columnar,query,corpus,records,{n}")
+        cdx.close()
+        store.close()
+
+    if not quiet:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

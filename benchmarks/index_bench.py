@@ -80,6 +80,32 @@ def run(quiet: bool = False) -> list[str]:
         rows.append(f"index,build,size,bytes_per_record,"
                     f"{nbytes / max(len(index), 1):.1f}")
 
+        # -- per-stage attribution: where serial vs workers=2 time goes --
+        # _index_shard publishes stage wall time to the obs registry and
+        # map_shards merges the per-worker registries, so the same four
+        # counters attribute both modes; summed worker stage-time above
+        # the serial figure is the fan-out's overhead (pickle/startup/
+        # contention), visible per stage instead of as a lump
+        from repro import obs as _obs
+
+        _STAGES = ("parse_us", "digest_sig_us", "frame_walk_us",
+                   "assemble_us")
+
+        def _stage_rows(label: str, fn) -> None:
+            before = {s: _obs.snapshot().counter(f"index.stage.{s}")
+                      for s in _STAGES}
+            t0 = time.perf_counter()
+            fn()
+            wall = time.perf_counter() - t0
+            snap = _obs.snapshot()
+            rows.append(f"index,build,{label},wall_us,{wall * 1e6:.0f}")
+            for s in _STAGES:
+                v = snap.counter(f"index.stage.{s}") - before[s]
+                rows.append(f"index,build,{label},stage_{s},{v}")
+
+        _stage_rows("serial", lambda: build_index(paths))
+        _stage_rows("workers2", lambda: build_index(paths, workers=2))
+
         # -- random access vs sequential scan-to-offset ------------------
         shard_rows = np.flatnonzero(index.shard_id == 0)
         rng = np.random.default_rng(0)

@@ -436,6 +436,18 @@ def run(quiet: bool = False) -> list[str]:
         rows.append(f"ingest,index_build,fused,speedup,"
                     f"{t_host / t_fused:.2f}")
 
+        # pad-waste gate (ISSUE 10): half-step width/row quantization +
+        # sub-block buckets must keep the fused sweep's padding under
+        # 50% (the power-of-two ladder wasted 90%); asserted, not just
+        # reported, so a bucketing regression fails the bench
+        from repro import obs
+        from repro.obs.kernels import pad_waste_report
+
+        waste = pad_waste_report(obs.snapshot()).get(
+            "digest_signature_batch", {}).get("pad_waste_ratio", 0.0)
+        assert waste < 0.5, f"ingest kernel pad-waste {waste:.3f} >= 0.5"
+        rows.append(f"ingest,index_build,fused,pad_waste_ratio,{waste:.3f}")
+
     if not quiet:  # pragma: no cover - CLI convenience
         for row in rows:
             print(row)

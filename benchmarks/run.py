@@ -21,11 +21,17 @@ Sections (CSV on stdout, ``section,...`` prefixed rows):
                record), fused vs two-pass index build, shared-memory vs
                pickle pool transport, and the observability tax (paired
                tracing-off/on race, gated ≤1.02 in-bench)
-               (benchmarks/ingest_bench.py).
+               (benchmarks/ingest_bench.py);
+  * columnar — derived-store derivation throughput, row-group pad
+               waste (gated <0.5 in-bench), and column-scan vs
+               CDX+seek query speedup (byte-identical hits asserted,
+               broad scan gated ≥5x in-bench)
+               (benchmarks/columnar_bench.py).
 
 ``--json`` additionally writes ``BENCH_pipeline.json`` (all non-index
 rows as records plus a throughput summary) and — per section that ran —
-``BENCH_index.json`` / ``BENCH_serve.json`` / ``BENCH_ingest.json``, so
+``BENCH_index.json`` / ``BENCH_serve.json`` / ``BENCH_ingest.json`` /
+``BENCH_columnar.json``, so
 each perf trajectory is tracked machine-readably across PRs. Every
 payload embeds the bench process's merged ``repro.obs`` counter snapshot
 under ``"obs"`` (cumulative across the sections that ran — kernel
@@ -46,6 +52,7 @@ _JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_pipeline.json")
 _INDEX_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_index.json")
 _SERVE_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_serve.json")
 _INGEST_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_ingest.json")
+_COLUMNAR_JSON_PATH = os.path.join(_REPO_ROOT, "BENCH_columnar.json")
 
 
 def _parse_row(line: str) -> dict:
@@ -83,12 +90,12 @@ def main(argv: list[str] | None = None) -> None:
     # safer and fairer on small hosts
     ap.add_argument("--sections",
                     default="table1,pipeline,parallel,ingest,index,serve,"
-                            "kernels",
+                            "columnar,kernels",
                     help="comma-separated subset of sections to run")
     args = ap.parse_args(argv)
     sections = [s.strip() for s in args.sections.split(",") if s.strip()]
     known = {"table1", "pipeline", "kernels", "parallel", "index", "serve",
-             "ingest"}
+             "ingest", "columnar"}
     unknown = [s for s in sections if s not in known]
     if unknown:
         ap.error(f"unknown sections {unknown}; choose from {sorted(known)}")
@@ -117,10 +124,12 @@ def main(argv: list[str] | None = None) -> None:
 
     section_mods = {"pipeline": "pipeline", "kernels": "kernel",
                     "parallel": "parallel", "index": "index",
-                    "serve": "serve", "ingest": "ingest"}
+                    "serve": "serve", "ingest": "ingest",
+                    "columnar": "columnar"}
     index_lines: list[str] = []
     serve_lines: list[str] = []
     ingest_lines: list[str] = []
+    columnar_lines: list[str] = []
     for name in sections:
         if name not in section_mods:
             continue
@@ -128,16 +137,18 @@ def main(argv: list[str] | None = None) -> None:
         for line in rows:
             print(line)
         print()
-        # index/serve/ingest rows track their own trajectory files
-        # (BENCH_index.json / BENCH_serve.json / BENCH_ingest.json);
-        # mixing them into BENCH_pipeline.json would let a section-only
-        # run clobber the pipeline history
+        # index/serve/ingest/columnar rows track their own trajectory
+        # files (BENCH_index.json / BENCH_serve.json / BENCH_ingest.json
+        # / BENCH_columnar.json); mixing them into BENCH_pipeline.json
+        # would let a section-only run clobber the pipeline history
         if name == "index":
             index_lines.extend(rows)
         elif name == "serve":
             serve_lines.extend(rows)
         elif name == "ingest":
             ingest_lines.extend(rows)
+        elif name == "columnar":
+            columnar_lines.extend(rows)
         else:
             lines.extend(rows)
 
@@ -159,7 +170,7 @@ def main(argv: list[str] | None = None) -> None:
             print(f"wrote {path}")
 
         non_index = [s for s in sections
-                     if s not in ("index", "serve", "ingest")]
+                     if s not in ("index", "serve", "ingest", "columnar")]
         if non_index:
             _write(_JSON_PATH, "pipeline", lines, non_index)
         if index_lines:
@@ -168,6 +179,9 @@ def main(argv: list[str] | None = None) -> None:
             _write(_SERVE_JSON_PATH, "serve", serve_lines, ["serve"])
         if ingest_lines:
             _write(_INGEST_JSON_PATH, "ingest", ingest_lines, ["ingest"])
+        if columnar_lines:
+            _write(_COLUMNAR_JSON_PATH, "columnar", columnar_lines,
+                   ["columnar"])
 
 
 if __name__ == "__main__":

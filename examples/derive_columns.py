@@ -1,0 +1,142 @@
+"""Derive a columnar store from WARC shards, then race both query paths.
+
+The parse-once workflow (DESIGN.md §13): one derivation sweep runs the
+zero-copy parser over every shard and emits a `.repcol` store whose
+payloads already sit in the kernels' packed row-group layout. After
+that, full-corpus pattern scans never touch the WARC files again — the
+query engine dispatches row-group kernels straight over the mmapped
+matrices, while the classic CDX path must seek, inflate, and re-pack
+every candidate per query.
+
+Usage:
+
+    # derive from a synthetic 4-shard corpus and race a broad scan
+    PYTHONPATH=src python examples/derive_columns.py
+
+    # your own shards, persisted store, your own query
+    PYTHONPATH=src python examples/derive_columns.py \\
+        --shards crawl-*.warc.gz --store corpus.repcol \\
+        --pattern "HTTP/1.1" --workers 2
+
+The store is saved to ``--store`` (default: alongside the first shard)
+and reloaded on later runs, so repeat searches skip the derivation.
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.columnar import ColumnStore, derive
+from repro.data.synth import CorpusSpec, write_corpus
+from repro.index import QueryEngine, build_index
+
+
+def _synthetic_shards(directory: str, n_shards: int = 4) -> list[str]:
+    paths = []
+    for i in range(n_shards):
+        p = os.path.join(directory, f"crawl-{i:02d}.warc.gz")
+        write_corpus(p, CorpusSpec(n_pages=40, seed=31 + i), "gzip")
+        paths.append(p)
+    return paths
+
+
+def _best_s(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Derive a columnar store and race column-scan vs "
+                    "CDX+seek queries")
+    ap.add_argument("--shards", nargs="*", default=None,
+                    help="WARC files (default: generate a synthetic corpus)")
+    ap.add_argument("--store", default=None,
+                    help="columnar store path (derived and saved if missing)")
+    ap.add_argument("--pattern", default="HTTP/1.1",
+                    help="byte pattern for the race (default: a broad one "
+                         "the signature pre-filter cannot narrow)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="derivation worker processes (0 = serial)")
+    args = ap.parse_args()
+
+    tmp = None
+    shards = args.shards
+    if not shards:
+        tmp = tempfile.TemporaryDirectory()
+        shards = _synthetic_shards(tmp.name)
+        print(f"generated {len(shards)} synthetic shards in {tmp.name}")
+
+    store_path = args.store or os.path.join(
+        os.path.dirname(shards[0]) or ".", "corpus.repcol")
+    store = None
+    if os.path.exists(store_path):
+        store = ColumnStore(store_path)
+        if list(store.shard_paths) != shards:  # covers a different corpus
+            print(f"store {store_path} covers different shards; re-deriving")
+            store.close()
+            store = None
+        else:
+            print(f"loaded store: {len(store)} records from {store_path}")
+    if store is None:
+        t0 = time.perf_counter()
+        store = derive(shards, store_path, workers=args.workers)
+        dt = time.perf_counter() - t0
+        print(f"derived {len(store)} records across {len(shards)} shards "
+              f"in {dt:.2f}s -> {store_path} "
+              f"({os.path.getsize(store_path) / 1024:.1f} KiB, "
+              f"{store.n_rowgroups} row-groups, "
+              f"pad waste {store.pad_waste_ratio():.2f})")
+
+    # the store carries the full CDX index: no separate build needed for
+    # the columnar engine; the baseline engine rebuilds it from the WARCs
+    index = build_index(shards)
+    pattern = args.pattern.encode()
+
+    cdx = QueryEngine(index)
+    col = QueryEngine.from_store(store)
+    base_hits = cdx.search(pattern)  # warm both: kernel shapes, readers
+    col_hits = col.search(pattern)
+    assert len(base_hits) == len(col_hits) and all(
+        x.index_row == y.index_row and x.excerpt == y.excerpt
+        and np.array_equal(x.positions, y.positions)
+        for x, y in zip(base_hits, col_hits)), "paths disagree"
+    print(f"\npattern {args.pattern!r}: {len(col_hits)} matching records, "
+          f"both paths byte-identical")
+
+    t_cdx = _best_s(lambda: cdx.search(pattern))
+    t_col = _best_s(lambda: col.search(pattern))
+    print(f"  CDX+seek : {t_cdx * 1e3:7.1f} ms/query")
+    print(f"  columnar : {t_col * 1e3:7.1f} ms/query  "
+          f"({t_cdx / t_col:.1f}x)")
+
+    # copy ledger: the columnar path's scan stage reads the mmap in
+    # place — payloads are materialized only for store fetches (hit
+    # verification/excerpts on long-literal or regex plans)
+    for name, eng in (("CDX+seek", cdx), ("columnar", col)):
+        s = eng.stats
+        q = max(s["queries"], 1)
+        print(f"  {name:9s} ledger: "
+              f"{s['records_scanned'] / q:.0f} records scanned/query, "
+              f"{s['kernel_dispatches'] / q:.1f} dispatches/query, "
+              f"{s['store_fetches'] / q:.1f} payload copies/query")
+
+    cdx.close()
+    col.close()
+    # the from_store engine's index *is* a view of the store's mapping;
+    # drop every reference (eng still aliases it from the ledger loop)
+    # before close() or the borrow rule (rightly) refuses
+    del col, eng
+    store.close()
+    if tmp is not None:
+        tmp.cleanup()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""``repro.columnar`` — derived columnar store: parse once, scan native.
+
+The subsystem behind the ROADMAP "columnar derived store" item
+(DESIGN.md §13): :mod:`.codec` is the generic column codec (shared with
+the CDX v2 index), :mod:`.store` the versioned mmap-backed shard
+format + reader, :mod:`.derive` the parse-once derivation pipeline.
+
+Exports resolve lazily: :mod:`repro.index.cdx` imports :mod:`.codec`
+while :mod:`.store` imports :mod:`repro.index` — eager re-exports here
+would close that loop.
+"""
+from __future__ import annotations
+
+__all__ = ["ArrayCursor", "ColumnFile", "ColumnStore", "ColumnWriter",
+           "RowGroupSpec", "derive", "pack_arrays", "pack_plan",
+           "parse_warc_date"]
+
+_HOMES = {
+    "ArrayCursor": "codec", "ColumnFile": "codec", "ColumnWriter": "codec",
+    "pack_arrays": "codec",
+    "ColumnStore": "store", "RowGroupSpec": "store", "pack_plan": "store",
+    "derive": "derive", "parse_warc_date": "derive",
+}
+
+
+def __getattr__(name: str):
+    home = _HOMES.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    obj = getattr(importlib.import_module(f".{home}", __name__), name)
+    # cache — and win over the submodule binding the import just made
+    # (``derive`` names both the submodule and its entry point; the
+    # exported callable must shadow the module object)
+    globals()[name] = obj
+    return obj
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -195,7 +195,14 @@ class CdxIndex:
 
     # -- persistence -----------------------------------------------------
     def save(self, path: str) -> int:
-        """Write the binary columnar layout; returns bytes written."""
+        """Write the binary columnar layout; returns bytes written.
+
+        The column region is packed through the shared column codec
+        (:mod:`repro.columnar.codec` — the same layer the derived
+        columnar shards use); the v2 byte format is unchanged.
+        """
+        from repro.columnar.codec import pack_arrays
+
         n = len(self)
         out = io.BytesIO()
         out.write(_MAGIC)
@@ -206,11 +213,10 @@ class CdxIndex:
             raw = p.encode("utf-8")
             out.write(struct.pack("<IB", len(raw), _KIND_CODES[kind]))
             out.write(raw)
-        for col in (self.shard_id, self.offset, self.comp_len,
-                    self.uncomp_len, self.rtype, self.status, self.digest,
-                    self.signatures, self.frame_off, self.frame_base,
-                    self.uri_off, self.mime_off):
-            out.write(np.ascontiguousarray(col).tobytes())
+        pack_arrays(out, (self.shard_id, self.offset, self.comp_len,
+                          self.uncomp_len, self.rtype, self.status,
+                          self.digest, self.signatures, self.frame_off,
+                          self.frame_base, self.uri_off, self.mime_off))
         out.write(struct.pack("<Q", len(self.uri_heap)))
         out.write(self.uri_heap)
         out.write(struct.pack("<Q", len(self.mime_heap)))
@@ -240,6 +246,8 @@ class CdxIndex:
             raise ValueError(
                 f"{path}: invalid signature parameters "
                 f"(ngram={ngram}, hashes={hashes})")
+        from repro.columnar.codec import ArrayCursor
+
         pos = 8 + struct.calcsize("<IIIIIQ")
         shard_paths, shard_kinds = [], []
         for _ in range(n_shards):
@@ -249,29 +257,27 @@ class CdxIndex:
             shard_kinds.append(_KIND_NAMES[kcode])
             pos += plen
 
-        def col(dtype, count, shape=None):
-            nonlocal pos
-            arr = np.frombuffer(blob, dtype, count, pos)
-            pos += arr.nbytes
-            return arr.reshape(shape) if shape else arr
-
+        # the column region decodes through the shared column codec —
+        # zero-copy views advancing one cursor, schema fixed by version
+        cur = ArrayCursor(blob, pos)
         words = bits // 64
         columns = {
-            "shard_id": col(np.uint32, n),
-            "offset": col(np.uint64, n),
-            "comp_len": col(np.uint64, n),
-            "uncomp_len": col(np.uint64, n),
-            "rtype": col(np.uint16, n),
-            "status": col(np.int16, n),
-            "digest": col(np.uint32, n),
-            "signatures": col(np.uint64, n * words, (n, words)),
+            "shard_id": cur.take(np.uint32, n),
+            "offset": cur.take(np.uint64, n),
+            "comp_len": cur.take(np.uint64, n),
+            "uncomp_len": cur.take(np.uint64, n),
+            "rtype": cur.take(np.uint16, n),
+            "status": cur.take(np.int16, n),
+            "digest": cur.take(np.uint32, n),
+            "signatures": cur.take(np.uint64, n * words, (n, words)),
         }
         if version >= 2:
-            columns["frame_off"] = col(np.uint64, n)
-            columns["frame_base"] = col(np.uint64, n)
+            columns["frame_off"] = cur.take(np.uint64, n)
+            columns["frame_base"] = cur.take(np.uint64, n)
         # v1: constructor synthesizes identity/NO_FRAME frame columns
-        columns["uri_off"] = col(np.uint64, n + 1)
-        columns["mime_off"] = col(np.uint64, n + 1)
+        columns["uri_off"] = cur.take(np.uint64, n + 1)
+        columns["mime_off"] = cur.take(np.uint64, n + 1)
+        pos = cur.pos
         (uri_len,) = struct.unpack_from("<Q", blob, pos)
         pos += 8
         uri_heap = blob[pos:pos + uri_len]
@@ -375,7 +381,20 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
     kernel pass instead of the two host passes (adler, then n-gram).
     Falls back to the host path when the geometry is outside the
     kernel's support (non-power-of-two ``sig_bits``).
+
+    Publishes per-stage wall time to the process obs registry
+    (``index.stage.parse_us`` / ``digest_sig_us`` / ``frame_walk_us`` /
+    ``assemble_us``) — under ``map_shards`` fan-out the per-worker
+    registries merge into the build's snapshot, so serial vs parallel
+    builds can be attributed stage-by-stage (EXPERIMENTS.md §Columnar:
+    where the negative workers=2 scaling goes).
     """
+    import time as _time
+
+    from repro import obs as _obs
+
+    t_sweep0 = _time.perf_counter()
+    t_sig = 0.0
     with open(path, "rb") as f:
         kind = detect_compression(f.read(8))
     use_fused = fused and _fused_supported(sig_bits, sig_ngram)
@@ -394,11 +413,13 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
     last_span = 0
 
     def flush() -> None:
-        nonlocal pending_bytes
+        nonlocal pending_bytes, t_sig
         from repro.kernels.digest_sig import digest_signature_batch
 
+        t0 = _time.perf_counter()
         d, s = digest_signature_batch(pending, bits=sig_bits, n=sig_ngram,
                                       k=sig_hashes)
+        t_sig += _time.perf_counter() - t0
         digests.append(d)
         sigs.append(s)
         pending.clear()  # releases the arena pins
@@ -431,9 +452,11 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
                         pending_bytes >= _FUSED_BATCH_BYTES:
                     flush()
             else:
+                t0 = _time.perf_counter()
                 digests.append(zlib.adler32(content) & 0xFFFFFFFF)
                 sigs.append(signature_of(content, bits=sig_bits,
                                          n=sig_ngram, k=sig_hashes))
+                t_sig += _time.perf_counter() - t0
             uri = record.header_bytes(b"WARC-Target-URI:") or b""
             mime = (http.get_bytes(b"Content-Type", b"") if http is not None
                     else record.header_bytes(b"Content-Type:") or b"")
@@ -446,6 +469,8 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
             flush()
     finally:
         it.close()  # a failed sweep must still join the decoder thread
+    t_parse = _time.perf_counter() - t_sweep0 - t_sig
+    t_frame0 = _time.perf_counter()
     n = len(offsets)
     off = np.asarray(offsets, np.uint64)
     # comp_len = distance to the next record in the addressable stream;
@@ -482,6 +507,7 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
             # the decompress-whole-shard path
             frame_off = np.full(n, NO_FRAME, np.uint64)
             frame_base = np.full(n, NO_FRAME, np.uint64)
+    t_assemble0 = _time.perf_counter()
     if use_fused:
         digest_col = (np.concatenate(digests) if digests
                       else np.empty(0, np.uint32))
@@ -508,6 +534,15 @@ def _index_shard(path: str, *, sig_bits: int = SIG_BITS,
     out = CdxIndex([path], [kind], columns, b"".join(uri_parts),
                    b"".join(mime_parts), sig_bits=sig_bits,
                    sig_ngram=sig_ngram, sig_hashes=sig_hashes)
+    reg = _obs.registry()
+    reg.counter_add("index.shards", 1)
+    reg.counter_add("index.records", n)
+    reg.counter_add("index.stage.parse_us", int(t_parse * 1e6))
+    reg.counter_add("index.stage.digest_sig_us", int(t_sig * 1e6))
+    reg.counter_add("index.stage.frame_walk_us",
+                    int((t_assemble0 - t_frame0) * 1e6))
+    reg.counter_add("index.stage.assemble_us",
+                    int((_time.perf_counter() - t_assemble0) * 1e6))
     if tolerant:
         # the damage ledger rides the (picklable) partial back to the
         # build_index parent, crossing the worker process boundary

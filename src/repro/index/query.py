@@ -33,6 +33,17 @@ are host-verified with ``re`` — closing the pattern-literal-only gap
 (the WarcSearcher workload). A regex with no usable literal degrades to
 host ``re`` over the header-filtered candidates, still correct.
 
+**Columnar path** (DESIGN.md §13): with a derived
+:class:`repro.columnar.ColumnStore` attached (``attach_store`` /
+``from_store``), stage 3 becomes ``execute_columnar`` — candidates are
+grouped by the row-group that already holds their payload in the
+kernels' packed layout, and each group is **one**
+:func:`repro.kernels.find_pattern_mask_rowgroup` dispatch straight over
+the mmapped matrix. No per-record seek, decompression, HTTP parse, or
+ragged re-bucketing on the query path; payload bytes are materialized
+only for candidates whose scan stage actually hit. Hits are
+byte-identical to the CDX+seek path (the columnar bench gates on it).
+
 ``engine.stats`` records how much work each stage avoided (candidate
 counts, records scanned, kernel dispatches) so the benchmarks can report
 indexed-query vs full-scan speedups honestly.
@@ -41,12 +52,16 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.warc.record import WarcRecordType
 from .cdx import CdxIndex, RandomAccessReader
 from .signature import candidate_mask
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (no import cycle)
+    from repro.columnar.store import ColumnStore
 
 try:  # renamed in 3.11+; both expose the same parse tree
     from re import _parser as _sre_parse  # type: ignore[attr-defined]
@@ -60,21 +75,33 @@ _DEFAULT_BATCH_RECORDS = 64
 _DEFAULT_BATCH_BYTES = 4 << 20
 _DEFAULT_SCAN_BLOCK = 8192  # kernel tile: few-KiB records pad ≤2×, not to
                             # the 64 KiB DEFAULT_BLOCK sized for whole shards
+_COLUMNAR_DENSITY = 0.25  # candidate share above which scanning the whole
+                          # row-group beats gathering candidates into a
+                          # compact matrix (gather copies; whole-group reads
+                          # the mapping in place)
 
 
 @dataclass
 class HeaderFilter:
-    """Columnar header predicates (all optional, AND-combined)."""
+    """Columnar header predicates (all optional, AND-combined).
+
+    ``time_range`` — ``(lo, hi)`` epoch seconds, half-open — evaluates
+    against the derived store's WARC-Date timestamp column and therefore
+    needs a store-attached engine (the CDX index does not carry
+    timestamps).
+    """
 
     record_type: WarcRecordType | None = None
     status: int | None = None
     mime_prefix: bytes | None = None
     url_prefix: bytes | None = None
+    time_range: tuple[int, int] | None = None
 
     def key(self) -> tuple:
         """Hashable identity (dataclass __hash__ is suppressed by eq)."""
         return (None if self.record_type is None else int(self.record_type),
-                self.status, self.mime_prefix, self.url_prefix)
+                self.status, self.mime_prefix, self.url_prefix,
+                self.time_range)
 
 
 @dataclass
@@ -222,6 +249,7 @@ class QueryEngine:
     """Run header + pattern queries against an indexed corpus."""
 
     def __init__(self, index: CdxIndex, *,
+                 store: "ColumnStore | None" = None,
                  batch_records: int = _DEFAULT_BATCH_RECORDS,
                  batch_bytes: int = _DEFAULT_BATCH_BYTES,
                  use_kernel: bool = True, interpret: bool = True,
@@ -235,10 +263,52 @@ class QueryEngine:
         self.interpret = interpret
         self.excerpt_bytes = excerpt_bytes
         self._readers: dict[int, RandomAccessReader] = {}
+        self._store: "ColumnStore | None" = None
         self.stats = {"queries": 0, "header_candidates": 0,
                       "sig_candidates": 0, "records_scanned": 0,
                       "bytes_scanned": 0, "kernel_dispatches": 0,
-                      "batches": 0}
+                      "batches": 0, "store_fetches": 0}
+        if store is not None:
+            self.attach_store(store)
+
+    @classmethod
+    def from_store(cls, store: "ColumnStore", **kwargs) -> "QueryEngine":
+        """An engine running standalone on a derived store — planner
+        stages over :meth:`~repro.columnar.ColumnStore.as_index`'s
+        columns, scan stage over the store's row-groups. No CDX file
+        and no archive readers involved."""
+        engine = cls(store.as_index(), **kwargs)
+        engine.attach_store(store, validate=False)
+        return engine
+
+    def attach_store(self, store: "ColumnStore",
+                     validate: bool = True) -> None:
+        """Attach a derived columnar store covering this engine's corpus.
+
+        Attached, the engine routes ``execute`` through
+        :meth:`execute_columnar` and serves ``_fetch`` from the store's
+        row-groups (no seek/decompress) — the serve gateway inherits
+        both for free. ``validate`` checks the store rows are 1:1 with
+        the index rows (derive and CDX build share row order by
+        construction; a store derived from a *different* corpus is
+        rejected here rather than silently mis-scanned).
+        """
+        if validate:
+            if len(store) != len(self.index):
+                raise ValueError(
+                    f"store has {len(store)} rows, index has "
+                    f"{len(self.index)} — not the same corpus")
+            if list(store.shard_paths) != list(self.index.shard_paths):
+                raise ValueError("store and index cover different shards")
+            if not np.array_equal(np.asarray(store.offset),
+                                  np.asarray(self.index.offset)):
+                raise ValueError("store row order does not match the "
+                                 "index (offset columns differ)")
+        self._store = store
+
+    @property
+    def store(self) -> "ColumnStore | None":
+        return self._store
 
     # -- stage 1: header predicates (pure columnar) ----------------------
     def header_mask(self, flt: HeaderFilter | None) -> np.ndarray:
@@ -258,6 +328,15 @@ class QueryEngine:
             mask &= np.char.startswith(idx.mimes(), bytes(flt.mime_prefix))
         if flt.url_prefix is not None:
             mask &= np.char.startswith(idx.uris(), bytes(flt.url_prefix))
+        if flt.time_range is not None:
+            if self._store is None:
+                raise ValueError(
+                    "time_range filters read the derived store's "
+                    "timestamp column — attach_store() first (the CDX "
+                    "index carries no WARC-Date)")
+            lo, hi = flt.time_range
+            ts = self._store.timestamp.astype(np.int64)
+            mask &= (ts >= int(lo)) & (ts < int(hi))
         return mask
 
     def select(self, flt: HeaderFilter | None = None) -> np.ndarray:
@@ -344,8 +423,19 @@ class QueryEngine:
         """
         return self.execute(self.plan_regex(regex, flt, prefilter=prefilter))
 
-    def execute(self, plan: QueryPlan) -> list[PatternHit]:
-        """Run a plan's scan stage: fetch, batch, dispatch, verify."""
+    def execute(self, plan: QueryPlan, *,
+                columnar: bool | None = None) -> list[PatternHit]:
+        """Run a plan's scan stage: fetch, batch, dispatch, verify.
+
+        With a store attached the scan routes through
+        :meth:`execute_columnar` (byte-identical hits); pass
+        ``columnar=False`` to force the fetch-and-batch path, or
+        ``columnar=True`` to require the store (raises if absent).
+        """
+        if columnar is None:
+            columnar = self._store is not None
+        if columnar:
+            return self.execute_columnar(plan)
         hits: list[PatternHit] = []
         batch_rows: list[int] = []
         batch_bufs: list[bytes] = []
@@ -364,8 +454,113 @@ class QueryEngine:
         hits.sort(key=lambda h: h.index_row)
         return hits
 
+    # -- stage 3, columnar: kernels over mmapped row-groups ---------------
+    def execute_columnar(self, plan: QueryPlan) -> list[PatternHit]:
+        """Run a plan's scan stage against the attached derived store.
+
+        Candidates are grouped by row-group; each group is one
+        row-group kernel dispatch over its packed matrix — **dense**
+        groups (candidate share ≥ ``_COLUMNAR_DENSITY`` of the group's
+        live rows) scan the mmapped matrix in place, **sparse** groups
+        gather just the candidate rows into a compact matrix first.
+        Payload bytes are copied out only for candidates whose scan
+        stage hit (verification / excerpting); everything else never
+        leaves the mapping. Hits are byte-identical to :meth:`execute`.
+        """
+        store = self._store
+        if store is None:
+            raise ValueError("no columnar store attached — attach_store() "
+                             "or QueryEngine.from_store()")
+        hits: list[PatternHit] = []
+        if plan.rows.size == 0:
+            return hits
+        from repro.kernels.bucketing import quantize_count
+        from repro.kernels.pattern_scan import find_pattern_mask_rowgroup
+
+        gids = store.rg_id[plan.rows].astype(np.int64)
+        order = np.argsort(gids, kind="stable")
+        ordered = plan.rows[order]
+        bounds = np.flatnonzero(np.diff(gids[order])) + 1
+        use_kernel = self.use_kernel and not plan.needs_host_scan
+        # short-literal plans need no per-candidate verification: the
+        # kernel positions are final and the excerpt window slices
+        # straight out of the row-group matrix — no payload copy at all
+        lit = plan.literal if plan.literal is not None else plan.pattern
+        fast_literal = (plan.regex is None and plan.kernel_pattern is not None
+                        and len(lit) <= len(plan.kernel_pattern))
+        for chunk in np.split(ordered, bounds):
+            g = int(store.rg_id[chunk[0]])
+            lengths = store.length[chunk].astype(np.int64)
+            self.stats["batches"] += 1
+            self.stats["records_scanned"] += int(chunk.size)
+            self.stats["bytes_scanned"] += int(lengths.sum())
+            if not use_kernel:  # host scan: materialize each candidate
+                for r in chunk:
+                    buf = store.payload(int(r))
+                    positions, first_len = plan.verify(buf,
+                                                       plan.host_scan(buf))
+                    if positions.size:
+                        hits.append(self.make_hit(int(r), buf, positions,
+                                                  first_len))
+                continue
+            live = int(store.rg_rows[g])
+            if chunk.size >= _COLUMNAR_DENSITY * live:
+                # dense: one dispatch over the whole mmapped matrix
+                source, _, all_lens = store.rowgroup(g)
+                masks = find_pattern_mask_rowgroup(
+                    source, all_lens, plan.kernel_pattern,
+                    interpret=self.interpret, trim=False)
+                mask_rows = store.rg_row[chunk].astype(np.int64)
+                mask_lens = all_lens
+            else:
+                # sparse: gather candidates into a compact matrix
+                matrix, _, _ = store.rowgroup(g)
+                sel = store.rg_row[chunk].astype(np.int64)
+                source = np.zeros(
+                    (quantize_count(chunk.size), matrix.shape[1]), np.uint8)
+                source[:chunk.size] = matrix[sel]
+                masks = find_pattern_mask_rowgroup(
+                    source, lengths, plan.kernel_pattern,
+                    interpret=self.interpret, trim=False)
+                mask_rows = np.arange(chunk.size)
+                mask_lens = lengths
+            self.stats["kernel_dispatches"] += 1
+            # one pass over the whole group mask instead of a
+            # flatnonzero per candidate; the flat bool scan is ~10x
+            # cheaper than a 2-D nonzero, and row-major order means each
+            # candidate's positions stay one contiguous hit_cols run
+            flat = np.flatnonzero(masks.view(bool))
+            hit_rows, hit_cols = np.divmod(flat, masks.shape[1])
+            # trim=False left windows past each row's true end in the
+            # mask; drop them here on the compact hit list instead of
+            # paying a full-matrix where-copy up front
+            plen_k = len(plan.kernel_pattern)
+            valid = hit_cols < np.maximum(
+                mask_lens - plen_k + 1, 0)[hit_rows]
+            hit_rows = hit_rows[valid]
+            hit_cols = hit_cols[valid]
+            starts = np.searchsorted(hit_rows, mask_rows, side="left")
+            ends = np.searchsorted(hit_rows, mask_rows, side="right")
+            for i in np.flatnonzero(ends > starts):
+                r = int(chunk[i])
+                lpos = hit_cols[starts[i]:ends[i]].astype(np.int64)
+                if fast_literal:  # positions final; excerpt off the row
+                    row = source[int(mask_rows[i])][:int(lengths[i])]
+                    hits.append(self.make_hit(r, row, lpos, len(lit)))
+                    continue
+                buf = store.payload(r)
+                positions, first_len = plan.verify(buf, lpos)
+                if positions.size:
+                    hits.append(self.make_hit(r, buf, positions,
+                                              first_len))
+        hits.sort(key=lambda h: h.index_row)
+        return hits
+
     # -- internals -------------------------------------------------------
     def _fetch(self, row: int) -> bytes:
+        if self._store is not None:  # row-group copy-out: no seek/inflate
+            self.stats["store_fetches"] += 1
+            return self._store.payload(row)
         sid = int(self.index.shard_id[row])
         reader = self._readers.get(sid)
         if reader is None:

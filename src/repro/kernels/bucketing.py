@@ -1,18 +1,43 @@
 """Shared ragged-batch helpers for the byte kernels' public wrappers.
 
-Both byte kernels (`adler32`, `pattern_scan`) batch ragged payload lists
-into padded ``(B, W)`` matrices; ``bucket_width`` is the common
-power-of-two width-bucketing rule (one gridded dispatch per bucket, so
-padding waste is ≤ 2× per row and repeated ragged batches reuse a
-bounded set of compiled shapes). Kept in one place so the wrappers —
-and consumers that account dispatches, like the index query engine —
-cannot drift apart.
+The byte kernels (`adler32`, `pattern_scan`, `digest_sig`) batch ragged
+payload lists into padded ``(B, W)`` matrices; ``bucket_width`` is the
+common width-bucketing rule (one gridded dispatch per bucket, repeated
+ragged batches reuse a bounded set of compiled shapes). Kept in one
+place so the wrappers — and consumers that account dispatches, like the
+index query engine — cannot drift apart.
+
+Bucket boundaries are **half-step** quantized: sizes round up to
+``m · 2^j`` blocks with mantissa ``m ∈ {2, 3}`` (plus the single-block
+floor), i.e. the bucket ladder runs 1, 2, 3, 4, 6, 8, 12, 16, … blocks
+instead of pure powers of two. The PR 7 dispatch profiler measured the
+pure-pow2 rule shipping 90.2 % padding on ``digest_signature_batch``
+(BENCH_ingest.json): a row just past a boundary padded up to 2×, and
+row-count padding multiplied on top. Half-steps bound per-row width
+waste at 1.5× (worst case, mean ≈1.2×) while only doubling the shape
+ladder, so compiled-shape reuse stays high. The same quantizer pads
+*row counts* (``quantize_count``), replacing the old pow2-multiple-of-
+group rule that inflated a 6-row flush to 128 kernel rows.
 """
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["as_u8", "bucket_width", "dispatch_count"]
+__all__ = ["ROWGROUP_PAD", "SMALL_BLOCK", "as_u8", "bucket_width",
+           "dispatch_count", "payload_width", "quantize_count"]
+
+# Width-bucket granularity for payloads below one full kernel block
+# (digest path: the 2048 Adler block is an overflow *bound*, not a width
+# floor). Lane-aligned; yields the sub-block half-step ladder 256, 512,
+# 768, 1024, 1536 under the 2048 boundary.
+SMALL_BLOCK = 256
+
+# Zero right-padding of packed row-group matrices: (B, width + ROWGROUP_PAD)
+# uint8, payload left-justified, zeros after. Lane-aligned (128); bounds both
+# the digest kernel's n-gram reach (n − 1) and the pattern kernel's window
+# reach (MAX_PATTERN − 1), so one packed layout — in RAM or mmapped from a
+# columnar shard — feeds both kernels with no halo input and no re-copy.
+ROWGROUP_PAD = 128
 
 
 def as_u8(data) -> np.ndarray:
@@ -22,10 +47,39 @@ def as_u8(data) -> np.ndarray:
     return np.asarray(data, np.uint8)
 
 
+def quantize_count(n: int) -> int:
+    """Smallest half-step-pow2 value ≥ ``n``: 1, 2, 3, 4, 6, 8, 12, ….
+
+    The shared shape quantizer for both bucket widths (in blocks) and
+    padded row counts: worst-case padding 1.5× (3→4 gap is 1.33×,
+    2→3 gap is 1.5×), shape ladder only 2× denser than pure pow2.
+    """
+    if n <= 1:
+        return 1
+    pow2 = 1 << (max(n, 1) - 1).bit_length()   # next power of two ≥ n
+    half = (pow2 // 4) * 3                     # the 3·2^j step just below it
+    return half if half >= n else pow2
+
+
 def bucket_width(size: int, block: int) -> int:
-    """Block-multiple width bucket: next power-of-two block count."""
+    """Block-multiple width bucket: half-step quantized block count."""
     nblocks = max((size + block - 1) // block, 1)
-    return block * (1 << (nblocks - 1).bit_length())
+    return block * quantize_count(nblocks)
+
+
+def payload_width(size: int, block: int, small: int | None = SMALL_BLOCK
+                  ) -> int:
+    """Width bucket with sub-block granularity below one block.
+
+    The digest/derive bucketing rule: payloads that fit in a single
+    kernel block take finer ``small``-granular buckets (the whole row is
+    one block, so nothing forces the full-block floor — a shard's tiny
+    request/metadata records were the dominant term of the measured
+    90.2% pad waste). Larger payloads use the block-multiple ladder.
+    """
+    if small and size <= block:
+        return min(bucket_width(size, small), block)
+    return bucket_width(size, block)
 
 
 def dispatch_count(sizes, block: int) -> int:

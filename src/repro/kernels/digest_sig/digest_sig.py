@@ -37,17 +37,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.bucketing import ROWGROUP_PAD
+
 BLOCK = 2048          # Adler overflow bound: T_j < 2048·2047/2·255 < 2³¹
-HPAD = 128            # zero right-padding (lane-aligned); bounds n − 1
+HPAD = ROWGROUP_PAD   # zero right-padding (lane-aligned); bounds n − 1
 FNV_PRIME = 0x01000193  # matches repro.index.signature._FNV_PRIME
 GROUP_BYTES = 1 << 21   # target payload bytes per grid step (VMEM budget:
                         # ~2 MiB u8 tile + int32 hash/temp arrays ≈ 12 MiB)
 MAX_GROUP = 128
 
 
-def group_rows(width: int) -> int:
-    """Rows per grid step for a bucket of this padded width."""
-    return max(1, min(MAX_GROUP, GROUP_BYTES // max(width, 1)))
+def group_rows(width: int, nrows: int | None = None) -> int:
+    """Rows per grid step for a bucket of this padded width.
+
+    With ``nrows`` given, shrinks to the largest value that divides the
+    row count — batches are row-padded by the half-step quantizer
+    (:func:`repro.kernels.bucketing.quantize_count`, values ``m·2^k``
+    with m ∈ {1, 3}), so a large divisor always exists and the grid
+    never forces extra all-pad rows just to hit a group multiple.
+    """
+    g = max(1, min(MAX_GROUP, GROUP_BYTES // max(width, 1)))
+    if nrows is not None:
+        g = min(g, nrows)
+        while nrows % g:
+            g -= 1
+    return g
 
 
 def _digest_sig_kernel(buf_ref, s_ref, t_ref, h_ref, *,
@@ -73,19 +87,19 @@ def digest_sig_partials_batch(padded_bufs: jax.Array, *, n: int,
     """Fused per-(row, block) partials over a padded byte matrix.
 
     ``padded_bufs`` is ``(B, W + HPAD)`` uint8 — payload bytes in the
-    first ``W`` columns (``W % block == 0``), zeros after — with ``B`` a
-    multiple of :func:`group_rows`\\ ``(W)``. Returns ``(S, T, H)``: two
-    ``(B, W // block)`` int32 Adler partial arrays plus the ``(B, W)``
-    int32 n-gram hash matrix (uint32 bit patterns). One call sweeps the
-    whole batch once.
+    first ``W`` columns (``W % block == 0``), zeros after. The row group
+    adapts to ``B`` (largest divisor within the VMEM budget), so any row
+    count works; wrappers still quantize ``B`` so divisors are large.
+    Returns ``(S, T, H)``: two ``(B, W // block)`` int32 Adler partial
+    arrays plus the ``(B, W)`` int32 n-gram hash matrix (uint32 bit
+    patterns). One call sweeps the whole batch once.
     """
     nrows, padded_width = padded_bufs.shape
     width = padded_width - HPAD
     assert width > 0 and width % block == 0, \
         "wrapper must pad to HPAD plus a block multiple"
     assert 1 < n <= HPAD + 1
-    group = group_rows(width)
-    assert nrows % group == 0, "wrapper must pad rows to the group size"
+    group = group_rows(width, nrows)
     nblocks = width // block
     kernel = functools.partial(_digest_sig_kernel, width=width, block=block,
                                n=n)

@@ -14,17 +14,25 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.bucketing import as_u8 as _as_u8, bucket_width
+from repro.kernels.bucketing import (
+    ROWGROUP_PAD,
+    as_u8 as _as_u8,
+    bucket_width,
+    quantize_count,
+)
 from repro.obs.kernels import record_dispatch
 from .pattern_scan import (
     DEFAULT_BLOCK,
     MAX_PATTERN,
     pattern_scan_batch,
     pattern_scan_batch_multi,
+    pattern_scan_rowgroup,
+    pattern_scan_rowgroup_multi,
 )
 
 __all__ = ["find_pattern_mask", "find_pattern_mask_batch",
-           "find_pattern_masks_multi", "find_pattern_positions",
+           "find_pattern_mask_rowgroup", "find_pattern_masks_multi",
+           "find_pattern_masks_multi_rowgroup", "find_pattern_positions",
            "count_matches"]
 
 
@@ -57,10 +65,11 @@ def _pack(bufs: list[np.ndarray], block: int, width: int
 
 
 def _pad_rows(n: int) -> int:
-    """Row-count bucket: next power of two, so repeated ragged batches
-    reuse a bounded set of compiled ``(B, W)`` shapes along B as well as
-    W (pad rows are all-zero buffers; their masks are discarded)."""
-    return 1 << max(n - 1, 0).bit_length()
+    """Row-count bucket: half-step quantized (1, 2, 3, 4, 6, 8, 12, …),
+    so repeated ragged batches reuse a bounded set of compiled ``(B, W)``
+    shapes along B as well as W while row padding stays ≤ 1.5× (pad rows
+    are all-zero buffers; their masks are discarded)."""
+    return quantize_count(n)
 
 
 def _trim(mask_row: np.ndarray, n: int, plen: int) -> np.ndarray:
@@ -157,6 +166,88 @@ def find_pattern_masks_multi(bufs, patterns, *, block: int = DEFAULT_BLOCK,
         for row, i in enumerate(idxs):
             out[i] = _trim(masks[row], arrs[i].size, plens[i])
     return out
+
+
+def _trim_rows(masks: np.ndarray, lengths: np.ndarray, plens) -> np.ndarray:
+    """Vectorized :func:`_trim` over row-group masks: zero every position
+    whose match window would read past its row's true length."""
+    width = masks.shape[1]
+    last = np.maximum(lengths[:, None] - np.asarray(plens).reshape(-1, 1) + 1,
+                      0)
+    return np.where(np.arange(width)[None, :] < last, masks, 0)
+
+
+def find_pattern_mask_rowgroup(matrix, lengths, pattern, *,
+                               interpret: bool = True,
+                               trim: bool = True) -> np.ndarray:
+    """Match masks over an **already-packed row-group** — one dispatch.
+
+    The columnar scan entry point: ``matrix`` is ``(B, width +
+    ROWGROUP_PAD)`` uint8 in the shared row-group layout (typically a
+    zero-copy mmap view of a columnar shard), ``lengths`` the true
+    payload lengths of the first ``len(lengths)`` rows (trailing rows
+    are padding). No per-payload copy, re-bucketing, or halo build —
+    the packing cost was paid once at derive time. Returns a
+    ``(live, width)`` uint8 mask, trimmed per row exactly like
+    :func:`find_pattern_mask_batch` trims its outputs.
+
+    ``trim=False`` skips the per-row trim and hands back the raw
+    kernel output (a read-only view of the device buffer): positions
+    past ``length - len(pattern) + 1`` may carry padding artifacts the
+    caller must filter out. The column-scan hot path does exactly that
+    on the compacted hit list, saving the full-matrix where-copy.
+    """
+    pat_vec, plen = _check_pattern(pattern)
+    mat = np.ascontiguousarray(matrix, np.uint8)
+    nrows, padded_width = mat.shape
+    width = padded_width - ROWGROUP_PAD
+    if width <= 0:
+        raise ValueError("matrix must carry the ROWGROUP_PAD zero tail")
+    lengths = np.asarray(lengths, np.int64)
+    live = lengths.size
+    if not 0 < live <= nrows:
+        raise ValueError(f"need 1 <= live rows <= {nrows}, got {live}")
+    record_dispatch("find_pattern_mask_rowgroup", width=width, rows=live,
+                    padded_rows=nrows, useful_bytes=int(lengths.sum()))
+    masks = pattern_scan_rowgroup(jnp.asarray(mat), jnp.asarray(pat_vec),
+                                  pat_len=plen, interpret=interpret)
+    if not trim:
+        return np.asarray(masks)[:live]
+    return _trim_rows(np.asarray(masks)[:live], lengths, plen)
+
+
+def find_pattern_masks_multi_rowgroup(matrix, lengths, patterns, *,
+                                      interpret: bool = True) -> np.ndarray:
+    """Per-row-pattern masks over a packed row-group — one dispatch.
+
+    ``patterns[i]`` scans row ``i``; rows from different queries share
+    the single grouped dispatch (unroll bound = longest true pattern).
+    Same layout/trim semantics as :func:`find_pattern_mask_rowgroup`.
+    """
+    lengths = np.asarray(lengths, np.int64)
+    live = lengths.size
+    if live != len(patterns):
+        raise ValueError("lengths and patterns must pair up")
+    mat = np.ascontiguousarray(matrix, np.uint8)
+    nrows, padded_width = mat.shape
+    width = padded_width - ROWGROUP_PAD
+    if width <= 0:
+        raise ValueError("matrix must carry the ROWGROUP_PAD zero tail")
+    if not 0 < live <= nrows:
+        raise ValueError(f"need 1 <= live rows <= {nrows}, got {live}")
+    pats, plens = zip(*(_check_pattern(p) for p in patterns))
+    pad_pat = np.zeros(MAX_PATTERN, np.uint8)
+    pad_pat[0] = 1  # inert: never matches an all-zero pad row
+    pat_mat = np.stack(list(pats) + [pad_pat] * (nrows - live))
+    lens = np.asarray([[n] for n in plens] + [[1]] * (nrows - live),
+                      np.int32)
+    record_dispatch("find_pattern_masks_multi_rowgroup", width=width,
+                    rows=live, padded_rows=nrows,
+                    useful_bytes=int(lengths.sum()))
+    masks = pattern_scan_rowgroup_multi(
+        jnp.asarray(mat), jnp.asarray(pat_mat), jnp.asarray(lens),
+        max_len=max(plens), interpret=interpret)
+    return _trim_rows(np.asarray(masks)[:live], lengths, np.asarray(plens))
 
 
 def find_pattern_mask(buf, pattern, *, block: int = DEFAULT_BLOCK,

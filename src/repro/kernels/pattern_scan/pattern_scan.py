@@ -31,9 +31,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.bucketing import ROWGROUP_PAD
+
 LANES = 128
 DEFAULT_BLOCK = 64 * 1024  # 64 KiB tile + halo + mask comfortably < VMEM
 MAX_PATTERN = 16
+GROUP_BYTES = 1 << 21  # payload bytes per row-group grid step (VMEM budget)
+MAX_GROUP = 256
+
+
+def scan_group_rows(width: int, nrows: int) -> int:
+    """Rows per grid step for the row-group scan kernels: the largest
+    divisor of ``nrows`` within the VMEM budget. Row counts are half-step
+    quantized (m·2^k, m ∈ {1, 3}) by packers, so divisors are dense."""
+    g = max(1, min(MAX_GROUP, GROUP_BYTES // max(width, 1)))
+    g = min(g, nrows)
+    while nrows % g:
+        g -= 1
+    return g
 
 
 def _scan_kernel(buf_ref, halo_ref, pat_ref, mask_ref, *,
@@ -133,3 +148,100 @@ def pattern_scan_batch(padded_bufs: jax.Array, halos: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nrows, width), jnp.uint8),
         interpret=interpret,
     )(padded_bufs, halos, pattern_vec)
+
+
+def _scan_kernel_group(buf_ref, pat_ref, mask_ref, *, width: int,
+                       pat_len: int):
+    """One grid step: compare a (G, width + ROWGROUP_PAD) row group.
+
+    The zero right-pad (≥ MAX_PATTERN) replaces the halo input of the
+    blocked kernel: every window starting inside a row is in-bounds in
+    the tile, spilled windows compare against zeros and lose (packers
+    reject all-zero patterns). P shifted compares over the whole group —
+    one grid step per G rows instead of per (row, block), which is what
+    makes full-corpus columnar scans cheap: per-step dispatch overhead
+    is amortized over megabytes, not one 64 KiB tile.
+    """
+    ext = buf_ref[:, :]
+    acc = ext[:, 0:width] == pat_ref[0]
+    for j in range(1, pat_len):  # unrolled: P is static
+        acc = jnp.logical_and(acc, ext[:, j:j + width] == pat_ref[j])
+    mask_ref[:, :] = acc.astype(jnp.uint8)
+
+
+def _scan_kernel_group_multi(buf_ref, pat_ref, len_ref, mask_ref, *,
+                             width: int, max_len: int):
+    """Row-group step with a per-row pattern (mixed-query batching)."""
+    ext = buf_ref[:, :]
+    plen = len_ref[:, :]                       # (G, 1) broadcasts over width
+    acc = ext[:, 0:width] == pat_ref[:, 0:1]
+    for j in range(1, max_len):  # unrolled: max_len is static per dispatch
+        hit = ext[:, j:j + width] == pat_ref[:, j:j + 1]
+        acc = jnp.logical_and(acc, jnp.logical_or(hit, j >= plen))
+    mask_ref[:, :] = acc.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("pat_len", "interpret"))
+def pattern_scan_rowgroup(matrix: jax.Array, pattern_vec: jax.Array, *,
+                          pat_len: int, interpret: bool = True) -> jax.Array:
+    """Match mask over a packed row-group matrix — grouped-rows grid.
+
+    ``matrix`` is ``(B, width + ROWGROUP_PAD)`` uint8 in the shared
+    row-group layout (:mod:`repro.kernels.bucketing`): payload bytes
+    left-justified, zero tail. No halo input — the zero tail bounds
+    every window. Returns a ``(B, width)`` uint8 mask (positions past
+    each row's true length must be trimmed by the caller).
+    """
+    nrows, padded_width = matrix.shape
+    width = padded_width - ROWGROUP_PAD
+    assert width > 0, "matrix must carry the ROWGROUP_PAD zero tail"
+    assert 0 < pat_len <= MAX_PATTERN
+    group = scan_group_rows(width, nrows)
+    kernel = functools.partial(_scan_kernel_group, width=width,
+                               pat_len=pat_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrows // group,),
+        in_specs=[
+            pl.BlockSpec((group, padded_width), lambda g: (g, 0)),
+            pl.BlockSpec(pattern_vec.shape, lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((group, width), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrows, width), jnp.uint8),
+        interpret=interpret,
+    )(matrix, pattern_vec)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "interpret"))
+def pattern_scan_rowgroup_multi(matrix: jax.Array, pattern_mat: jax.Array,
+                                pat_lens: jax.Array, *, max_len: int,
+                                interpret: bool = True) -> jax.Array:
+    """Per-row-pattern match masks over a packed row-group matrix.
+
+    The columnar twin of :func:`pattern_scan_batch_multi`: rows carrying
+    different patterns (different queries) share one grouped dispatch.
+    ``pattern_mat`` is ``(B, MAX_PATTERN)`` uint8 zero-padded,
+    ``pat_lens`` ``(B, 1)`` int32; compare positions past a row's true
+    pattern length are forced to match.
+    """
+    nrows, padded_width = matrix.shape
+    width = padded_width - ROWGROUP_PAD
+    assert width > 0, "matrix must carry the ROWGROUP_PAD zero tail"
+    assert pattern_mat.shape == (nrows, MAX_PATTERN)
+    assert pat_lens.shape == (nrows, 1)
+    assert 0 < max_len <= MAX_PATTERN
+    group = scan_group_rows(width, nrows)
+    kernel = functools.partial(_scan_kernel_group_multi, width=width,
+                               max_len=max_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrows // group,),
+        in_specs=[
+            pl.BlockSpec((group, padded_width), lambda g: (g, 0)),
+            pl.BlockSpec((group, MAX_PATTERN), lambda g: (g, 0)),
+            pl.BlockSpec((group, 1), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, width), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrows, width), jnp.uint8),
+        interpret=interpret,
+    )(matrix, pattern_mat, pat_lens)

@@ -48,6 +48,8 @@ class GatewayMetrics:
         "records_scanned",     # candidate records through the scan stage
         "bytes_scanned",
         "records_fetched",     # payload fetches that missed the cache
+        "store_fetches",       # of "records_fetched": served from an
+                               # attached columnar store (no seek/inflate)
         "errors",              # scans resolved with an exception
         "timeouts",            # requests resolved with GatewayTimeout
         "read_errors",         # damaged-record fetches (RecordReadError)

@@ -613,6 +613,8 @@ class ShardScheduler:
             data = self.engine._fetch(row)
             self.cache.put(key, data)
             self.metrics.inc("records_fetched")
+            if self.engine.store is not None:  # served from row-groups
+                self.metrics.inc("store_fetches")
         return data
 
     def _fetch_chunk(self, chunk: list[tuple[tuple, int]]

@@ -203,16 +203,23 @@ def test_pattern_scan_batch_matches_single_and_ref():
 
 
 def test_pattern_scan_batch_width_bucketing():
-    # power-of-two width buckets (parity with adler32_batch): outliers
+    # half-step width buckets (parity with adler32_batch): outliers
     # don't inflate every row, and bucketed results equal unbucketed
-    from repro.kernels.bucketing import bucket_width
+    from repro.kernels.bucketing import bucket_width, quantize_count
     from repro.kernels.pattern_scan import find_pattern_mask_batch
 
     block = 512
     assert bucket_width(0, block) == block
     assert bucket_width(block, block) == block
     assert bucket_width(block + 1, block) == 2 * block
-    assert bucket_width(3 * block, block) == 4 * block
+    # half-step ladder: 3 blocks is its own bucket now (was 4 under pow2)
+    assert bucket_width(3 * block, block) == 3 * block
+    assert bucket_width(3 * block + 1, block) == 4 * block
+    assert bucket_width(5 * block, block) == 6 * block
+    assert [quantize_count(n) for n in range(1, 14)] == \
+        [1, 2, 3, 4, 6, 6, 8, 8, 12, 12, 12, 12, 16]
+    # worst-case pad per dimension is bounded by 1.5x
+    assert all(quantize_count(n) <= 1.5 * n for n in range(1, 10000))
     sizes = [1, 100, 511, 512, 513, 2000, 5000, 9000]
     bufs = _ragged_payloads(13, sizes)
     assert len({bucket_width(len(b), block) for b in bufs}) > 1
